@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, result records, CSV emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import asdict, dataclass, field
+
+import jax
+
+RESULTS_DIR = "experiments/bench"
+
+
+@dataclass
+class Record:
+    name: str
+    us_per_call: float = float("nan")
+    derived: dict = field(default_factory=dict)
+
+    def csv(self) -> str:
+        extra = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.1f},{extra}"
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median-ish wall time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load_json(name: str):
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)

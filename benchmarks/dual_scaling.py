@@ -1,0 +1,66 @@
+"""Dual-solver scaling: wall time per user vs (m1, K), batched.
+
+The offline stage of Algorithm 1. The paper's CBC solver scales
+super-linearly in m1 and K and is serial per user; the batched
+subgradient solver is O(iters * (m1 K + m1 log m1)) per user and
+data-parallel across the batch — this benchmark quantifies the per-user
+amortized cost on CPU (on a pod slice, divide by the batch sharding).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Record, save_json, timed
+from repro.core.constraints import dcg_discount
+from repro.core.dual_solver import solve_dual_batch
+
+
+def run(*, batch=64, iters=300, sweeps=((100, 5), (1000, 5), (1000, 8),
+                                        (10000, 5)), verbose=True):
+    rows = []
+    for m1, K in sweeps:
+        m2 = min(m1, 50)
+        key = jax.random.key(m1 + K)
+        u = jax.random.uniform(key, (batch, m1), minval=1.0, maxval=5.0)
+        a = (jax.random.uniform(jax.random.fold_in(key, 1), (batch, K, m1))
+             < 0.1).astype(jnp.float32)
+        gamma = dcg_discount(m2)
+        b = 0.05 * jnp.sum(gamma) * jnp.ones((K,))
+
+        def call():
+            return solve_dual_batch(u, a, b, gamma, m2=m2, num_iters=iters)
+
+        us = timed(lambda: call().lam, iters=3)
+        sol = call()
+        rows.append({
+            "m1": m1, "K": K, "batch": batch, "iters": iters,
+            "us_per_user": us / batch,
+            "compliance": float(sol.compliant.mean()),
+            "mean_gap": float(jnp.nanmean(sol.gap)),
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"dual m1={m1:6d} K={K} {r['us_per_user']/1e3:8.2f} ms/user "
+                  f"compl {r['compliance']:.2f}", flush=True)
+    save_json("dual_scaling", rows)
+    return rows
+
+
+def records(rows):
+    return [Record(name=f"dual_scaling/m1={r['m1']}/K={r['K']}",
+                   us_per_call=r["us_per_user"],
+                   derived={"compliance": round(r["compliance"], 3)})
+            for r in rows]
+
+
+def main():
+    for rec in records(run()):
+        print(rec.csv())
+
+
+if __name__ == "__main__":
+    main()

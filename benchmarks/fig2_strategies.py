@@ -1,0 +1,90 @@
+"""Paper Figure 2: computation time vs constraint compliance per strategy.
+
+Sweeps (dataset x scenario m2 x strategy) on synthetic matched-statistics
+data (DESIGN.md §2): strategies none / optimal / mean / knn (+
+beyond-paper linear), scenarios rank top-{50, 500, 1000} of m1 = 1000
+candidates. Reports per-user computation time (batched program wall time
+/ users — the deployment model; the paper times a per-user solver loop),
+compliance probability, and mean utility on holdout users.
+
+Defaults are sized for the CPU container; --full approaches paper scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import Record, save_json, timed
+from repro.core.ranking import fit_pipeline, rank_with_strategy
+from repro.data.synthetic import build_experiment
+
+STRATEGIES = ("none", "optimal", "mean", "knn", "linear")
+
+
+def run(*, n_users=500, n_items=8000, m1=1000, scenarios=(50, 500, 1000),
+        datasets=("movielens", "yow"), dual_iters=300, seed=0,
+        recommender_epochs=3, verbose=True) -> list[dict]:
+    rows = []
+    for dataset in datasets:
+        for m2 in scenarios:
+            exp = build_experiment(
+                jax.random.key(seed), dataset=dataset, n_users=n_users,
+                n_items=n_items, m1=m1, m2=m2,
+                recommender_epochs=recommender_epochs)
+            u_tr, X_tr, a_tr = exp.split("train")
+            u_te, X_te, a_te = exp.split("test")
+            n_te = int(u_te.shape[0])
+            pipe = fit_pipeline(X_tr, u_tr, a_tr, exp.b, exp.gamma,
+                                m2=exp.m2, num_iters=dual_iters)
+            for strat in STRATEGIES:
+                def call():
+                    return rank_with_strategy(
+                        pipe, strat, X_te, u_te, a_te, exp.b,
+                        dual_iters=dual_iters)
+                us = timed(lambda: call().perm, iters=3)
+                out = call()
+                row = {
+                    "dataset": dataset, "m2": m2, "strategy": strat,
+                    "us_per_user": us / n_te,
+                    "compliance": float(out.compliant.mean()),
+                    "utility": float(out.utility.mean()),
+                    "n_te": n_te, "m1": m1,
+                }
+                rows.append(row)
+                if verbose:
+                    print(f"fig2 {dataset} m2={m2} {strat:8s} "
+                          f"{row['us_per_user']/1e3:9.3f} ms/user "
+                          f"compl {row['compliance']:.2f} "
+                          f"util {row['utility']:.1f}", flush=True)
+    save_json("fig2", rows)
+    return rows
+
+
+def records(rows) -> list[Record]:
+    out = []
+    for r in rows:
+        out.append(Record(
+            name=f"fig2/{r['dataset']}/m2={r['m2']}/{r['strategy']}",
+            us_per_call=r["us_per_user"],
+            derived={"compliance": round(r["compliance"], 3),
+                     "utility": round(r["utility"], 2)},
+        ))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale users (slower)")
+    args = ap.parse_args()
+    kw = dict(n_users=1000, n_items=20000) if args.full else {}
+    rows = run(**kw)
+    for rec in records(rows):
+        print(rec.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Kernel-path benchmarks: oracle (XLA) paths timed on CPU, kernel HBM
+models derived analytically.
+
+interpret=True Pallas runs execute the kernel body in Python per grid
+step — meaningful for CORRECTNESS, meaningless for wall time. So here we
+time the XLA oracle path (what the CPU actually runs) and report, per
+kernel, the analytic HBM-traffic ratio oracle/kernel — the quantity the
+TPU kernel improves (validated against the dry-run roofline for the
+paper cells in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Record, timed
+from repro.kernels import ref
+
+
+def run(quick: bool = False):
+    rows = []
+    key = jax.random.key(0)
+
+    # fused_rank: oracle materializes s (read+write) vs kernel streaming
+    n, m1, K, m2 = (64, 100_000, 5, 50) if not quick else (16, 10_000, 5, 50)
+    ks = jax.random.split(key, 3)
+    u = jax.random.uniform(ks[0], (n, m1))
+    a = (jax.random.uniform(ks[1], (n, K, m1)) < 0.1).astype(jnp.float32)
+    lam = jnp.abs(jax.random.normal(ks[2], (n, K)))
+    f = jax.jit(lambda u, a, lam: ref.fused_rank_ref(u, a, lam, m2))
+    us = timed(lambda: f(u, a, lam)[0], iters=3)
+    compulsory = (K + 1) * m1 * 4          # read u + a once
+    oracle_traffic = (K + 1) * m1 * 4 + 2 * m1 * 4  # + write s + read s
+    rows.append({"name": f"fused_rank/m1={m1}/K={K}", "us": us,
+                 "derived": {"hbm_ratio_oracle_over_kernel":
+                             round(oracle_traffic / compulsory, 3)}})
+
+    # knn_topk: oracle materializes the (B, N) distance matrix
+    B, N, D, k = (256, 65536, 20, 10) if not quick else (64, 8192, 20, 10)
+    kq, kd = jax.random.split(key)
+    xq = jax.random.normal(kq, (B, D))
+    xdb = jax.random.normal(kd, (N, D))
+    g = jax.jit(lambda xq, xdb: ref.knn_topk_ref(xq, xdb, k))
+    us = timed(lambda: g(xq, xdb)[0], iters=3)
+    kernel_traffic = N * D * 4             # stream db once (q tile resident)
+    oracle_traffic = N * D * 4 + 2 * B * N * 4   # + write/read d2
+    rows.append({"name": f"knn_topk/B={B}/N={N}", "us": us,
+                 "derived": {"hbm_ratio_oracle_over_kernel":
+                             round(oracle_traffic / kernel_traffic, 3)}})
+
+    # embedding_bag: oracle materializes gathered rows
+    V, Dd, nb, bag = (1_000_000, 64, 4096, 32) if not quick else (
+        10_000, 64, 512, 32)
+    kt, ki = jax.random.split(key)
+    table = jax.random.normal(kt, (V, Dd))
+    idx = jax.random.randint(ki, (nb, bag), 0, V)
+    h = jax.jit(lambda t, i: ref.embedding_bag_ref(t, i))
+    us = timed(lambda: h(table, idx), iters=3)
+    rows.append({"name": f"embedding_bag/V={V}/bag={bag}", "us": us,
+                 "derived": {"hbm_ratio_oracle_over_kernel": 2.0}})
+    return rows
+
+
+def records(rows):
+    return [Record(name=f"kernel/{r['name']}", us_per_call=r["us"],
+                   derived=r["derived"]) for r in rows]
+
+
+def main():
+    for rec in records(run()):
+        print(rec.csv())
+
+
+if __name__ == "__main__":
+    main()

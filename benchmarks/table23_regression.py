@@ -1,0 +1,86 @@
+"""Paper Tables 2-3: per-strategy performance deltas vs KNeighbors.
+
+The paper fits OLS with HC3 errors; with our synthetic replication the
+point estimates are what matters — we report, per dataset, the mean
+difference vs the 'knn' strategy in (log10 time, compliance, utility),
+aggregated over scenarios, plus per-size effects vs the top-50 scenario.
+Reads the fig2 sweep results (benchmarks/fig2_strategies.py).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+
+from benchmarks.common import Record, load_json
+from benchmarks.fig2_strategies import run as run_fig2
+
+
+def build_table(rows) -> dict:
+    by_ds: dict = defaultdict(lambda: defaultdict(list))
+    for r in rows:
+        by_ds[r["dataset"]][(r["strategy"], r["m2"])].append(r)
+
+    tables = {}
+    for ds, cells in by_ds.items():
+        m2s = sorted({m2 for (_, m2) in cells})
+        strategies = sorted({s for (s, _) in cells})
+
+        def mean(strategy, key):
+            vals = [r[key] for m2 in m2s for r in cells[(strategy, m2)]]
+            return sum(vals) / len(vals)
+
+        table = {}
+        for s in strategies:
+            if s == "knn":
+                continue
+            table[f"{s}_vs_knn"] = {
+                "log10_time_delta": round(
+                    math.log10(mean(s, "us_per_user"))
+                    - math.log10(mean("knn", "us_per_user")), 3),
+                "compliance_delta": round(
+                    mean(s, "compliance") - mean("knn", "compliance"), 3),
+                "utility_delta": round(
+                    mean(s, "utility") - mean("knn", "utility"), 3),
+            }
+        base_m2 = m2s[0]
+
+        def mean_m2(m2, key):
+            vals = [r[key] for s in strategies for r in cells[(s, m2)]]
+            return sum(vals) / len(vals)
+
+        for m2 in m2s[1:]:
+            table[f"size_{m2}_vs_{base_m2}"] = {
+                "log10_time_delta": round(
+                    math.log10(mean_m2(m2, "us_per_user"))
+                    - math.log10(mean_m2(base_m2, "us_per_user")), 3),
+                "compliance_delta": round(
+                    mean_m2(m2, "compliance") - mean_m2(base_m2, "compliance"), 3),
+                "utility_delta": round(
+                    mean_m2(m2, "utility") - mean_m2(base_m2, "utility"), 3),
+            }
+        tables[ds] = table
+    return tables
+
+
+def records(tables) -> list[Record]:
+    out = []
+    for ds, table in tables.items():
+        for row_name, vals in table.items():
+            out.append(Record(
+                name=f"table23/{ds}/{row_name}", us_per_call=float("nan"),
+                derived=vals))
+    return out
+
+
+def main():
+    rows = load_json("fig2")
+    if rows is None:
+        rows = run_fig2()
+    tables = build_table(rows)
+    for rec in records(tables):
+        print(rec.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Checkpointing: versioned, atomic, async-capable, elastic on restore.
+
+Format (no external deps):
+  <dir>/step_<n>/manifest.json   pytree structure, shapes, dtypes, step,
+                                 logical-axis annotations (for re-sharding)
+  <dir>/step_<n>/arrays.npz      raw buffers keyed by flattened path
+
+Design points for 1000+ node scale (DESIGN.md §4):
+  * atomic rename: write to step_<n>.tmp-<pid>, fsync, rename — a crashed
+    writer never corrupts the latest checkpoint;
+  * async save: `save_async` snapshots to host memory synchronously
+    (jax.device_get) and writes on a background thread, so the train loop
+    stalls only for D2H, not disk;
+  * elastic restore: the manifest stores *logical* metadata only; restore
+    maps buffers onto the CURRENT mesh via the caller-provided shardings —
+    the device count may differ from the saving run;
+  * GC: keep_last prunes old steps, newest first.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # ships with jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+# dtypes numpy's npz cannot round-trip: store as raw bytes + manifest dtype
+_EXOTIC = {"bfloat16", "float8_e4m3fn", "float8_e5m2", "float8_e4m3",
+           "float8_e5m2fnuz", "float8_e4m3fnuz"}
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    if str(arr.dtype) in _EXOTIC:
+        return arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+    return arr
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return arr
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _key_to_npz(key: str) -> str:
+    # npz disallows '/' on some loaders; keep it simple and reversible
+    return key.replace(_SEP, "__SL__")
+
+
+def _npz_to_key(name: str) -> str:
+    return name.replace("__SL__", _SEP)
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, *, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- paths --------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_", 1)[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, step: int, tree: PyTree, *, extra: dict | None = None) -> str:
+        """Synchronous checkpoint write with atomic rename."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree: PyTree, *, extra: dict | None = None):
+        """D2H snapshot now; disk write on a background thread. Joins any
+        in-flight write first (at most one outstanding)."""
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: PyTree, extra: dict) -> str:
+        flat, _ = _flatten_with_paths(host_tree)
+        final = self._step_dir(step)
+        tmp = f"{final}.tmp-{os.getpid()}-{threading.get_ident()}"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "extra": extra,
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()
+            },
+        }
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{_key_to_npz(k): _encode(v) for k, v in flat.items()})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: max(0, len(steps) - self.keep_last)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # orphaned tmp dirs from crashed writers
+        for name in os.listdir(self.directory):
+            if ".tmp-" in name:
+                path = os.path.join(self.directory, name)
+                if time.time() - os.path.getmtime(path) > 3600:
+                    shutil.rmtree(path, ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def restore(
+        self,
+        like: PyTree,
+        *,
+        step: int | None = None,
+        shardings: PyTree | None = None,
+    ) -> tuple[PyTree, dict]:
+        """Restore into the structure of `like` (a pytree of arrays or
+        ShapeDtypeStructs). If `shardings` (a matching pytree of
+        jax.sharding.Sharding) is given, buffers are placed directly onto
+        the current mesh — the ELASTIC path: the mesh/device count may
+        differ from the run that saved.
+
+        Returns (tree, manifest_extra).
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaf_meta = manifest["leaves"]
+        buffers = {
+            _npz_to_key(k): _decode(data[k], leaf_meta[_npz_to_key(k)]["dtype"])
+            for k in data.files
+        }
+
+        flat_like, treedef = _flatten_with_paths(like)
+        missing = set(flat_like) - set(buffers)
+        if missing:
+            raise KeyError(f"checkpoint step {step} missing leaves: {sorted(missing)[:5]}")
+
+        flat_shard = None
+        if shardings is not None:
+            flat_shard, _ = _flatten_with_paths(shardings)
+
+        out = {}
+        for key, ref in flat_like.items():
+            buf = buffers[key]
+            want_dtype = ref.dtype
+            if str(buf.dtype) != str(want_dtype):
+                buf = buf.astype(want_dtype)
+            if tuple(buf.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"leaf {key}: checkpoint shape {buf.shape} != expected {ref.shape}")
+            if flat_shard is not None and key in flat_shard:
+                out[key] = jax.device_put(buf, flat_shard[key])
+            else:
+                out[key] = jnp.asarray(buf)
+        leaves = [out[k] for k in flat_like]  # same iteration order as flatten
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest.get("extra", {})

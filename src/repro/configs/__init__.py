@@ -1,0 +1,22 @@
+# Importing this package registers every architecture (side effect).
+from repro.configs import (  # noqa: F401
+    bert4rec,
+    deepfm,
+    kimi_k2_1t_a32b,
+    llama3_2_1b,
+    llama4_scout_17b_16e,
+    meshgraphnet,
+    mind,
+    mistral_nemo_12b,
+    paper,
+    phi3_medium_14b,
+    sasrec,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_REGISTRY,
+    ArchSpec,
+    Cell,
+    Lowerable,
+    all_archs,
+    get_arch,
+)

@@ -1,0 +1,131 @@
+"""GNN-family (meshgraphnet) cell builders.
+
+Shape cells span three data regimes:
+  full_graph_sm   2 708 nodes / 10 556 edges / d_feat 1433 (full-batch)
+  minibatch_lg    232 965-node graph, sampled blocks: 1 024 seeds x
+                  fanout (15, 10) -> 169 984 nodes / 168 960 edges
+                  (static shapes; the uniform sampler is
+                  models/gnn.neighbor_sample)
+  ogb_products    2 449 029 nodes / 61 859 140 edges / d_feat 100
+                  (full-batch-large; edges sharded over (pod, data))
+  molecule        128 x (30 nodes / 64 edges) batched small graphs
+
+The MeshGraphNet core config (15 layers, d_hidden 128, sum aggregation,
+2-layer MLPs) is fixed; encoder/decoder widths adapt per cell's feature
+and target dims (dataclasses.replace).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import (
+    ArchSpec,
+    Cell,
+    Lowerable,
+    abstract_like,
+    pad_up,
+    sds,
+)
+from repro.distributed.sharding import GNN_RULES, filter_rules, param_shardings
+from repro.models.gnn import GNNConfig, MeshGraphNet, sampled_sizes
+from repro.optim import AdamState, adam_init
+
+GNN_CELLS = (
+    Cell("full_graph_sm", "train",
+         {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433, "d_out": 7}),
+    Cell("minibatch_lg", "train_sampled",
+         {"n_graph_nodes": 232_965, "batch_nodes": 1024,
+          "fanouts": (15, 10), "d_feat": 602, "d_out": 41}),
+    Cell("ogb_products", "train",
+         {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100,
+          "d_out": 47}),
+    Cell("molecule", "train_batched",
+         {"batch": 128, "n_nodes": 30, "n_edges": 64, "d_feat": 16,
+          "d_out": 3}),
+)
+
+GNN_SMOKE_CELLS = (
+    Cell("full_graph_sm", "train",
+         {"n_nodes": 40, "n_edges": 120, "d_feat": 24, "d_out": 4}),
+    Cell("minibatch_lg", "train_sampled",
+         {"n_graph_nodes": 200, "batch_nodes": 8, "fanouts": (3, 2),
+          "d_feat": 12, "d_out": 4}),
+    Cell("ogb_products", "train",
+         {"n_nodes": 60, "n_edges": 150, "d_feat": 10, "d_out": 5}),
+    Cell("molecule", "train_batched",
+         {"batch": 4, "n_nodes": 6, "n_edges": 10, "d_feat": 8, "d_out": 2}),
+)
+
+D_EDGE = 8  # relative-feature edge dim (mesh-relative coordinate stand-in)
+
+
+def cell_config(cfg: GNNConfig, cell: Cell) -> GNNConfig:
+    return replace(cfg, d_node_in=cell["d_feat"], d_edge_in=D_EDGE,
+                   d_out=cell["d_out"])
+
+
+def _graph_specs(cell: Cell, mesh, rules, *, batched: bool = False):
+    nodes_sh = NamedSharding(mesh, rules.resolve("nodes", None))
+    edges_sh = NamedSharding(mesh, rules.resolve("edges", None))
+    evec_sh = NamedSharding(mesh, rules.resolve("edges"))
+    if cell.kind == "train_sampled":
+        N, E = sampled_sizes(cell["batch_nodes"], tuple(cell["fanouts"]))
+    else:
+        N, E = cell["n_nodes"], cell["n_edges"]
+    # graph loaders pad node/edge arrays to mesh-divisible sizes
+    # (padding edges self-loop onto padding nodes with zero features)
+    N, E = pad_up(N), pad_up(E)
+    g = {
+        "nodes": sds((N, cell["d_feat"]), jnp.float32, nodes_sh),
+        "edges": sds((E, D_EDGE), jnp.float32, edges_sh),
+        "senders": sds((E,), jnp.int32, evec_sh),
+        "receivers": sds((E,), jnp.int32, evec_sh),
+        "targets": sds((N, cell["d_out"]), jnp.float32, nodes_sh),
+    }
+    if cell.kind == "train_sampled":
+        g["node_mask"] = sds((N,), jnp.float32,
+                             NamedSharding(mesh, rules.resolve("nodes")))
+    if batched:
+        B = cell["batch"]
+        bsh3 = NamedSharding(mesh, rules.resolve("batch", None, None))
+        bsh2 = NamedSharding(mesh, rules.resolve("batch", None))
+        g = {k: sds((B,) + v.shape, v.dtype,
+                    bsh3 if len(v.shape) == 2 else bsh2)
+             for k, v in g.items()}
+    return g
+
+
+def build_gnn(cfg: GNNConfig, cell: Cell, mesh) -> Lowerable:
+    rules = filter_rules(GNN_RULES, mesh)
+    ccfg = cell_config(cfg, cell)
+    model = MeshGraphNet(ccfg)
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    pshard = param_shardings(model.logical_axes(), mesh, rules)
+    params = abstract_like(shapes, pshard)
+    opt_shapes = jax.eval_shape(adam_init, params)
+    opt = AdamState(
+        step=sds((), jnp.int32, NamedSharding(mesh, P())),
+        mu=abstract_like(opt_shapes.mu, pshard),
+        nu=abstract_like(opt_shapes.nu, pshard),
+    )
+    graph = _graph_specs(cell, mesh, rules,
+                         batched=(cell.kind == "train_batched"))
+
+    def fn(params, opt, graph):
+        return model.train_step(params, opt, graph)
+
+    return Lowerable(fn=fn, args=(params, opt, graph), donate=(0, 1),
+                     rules=rules)
+
+
+def make_config(full: bool = True) -> GNNConfig:
+    if full:
+        return GNNConfig(name="meshgraphnet", n_layers=15, d_hidden=128,
+                         mlp_layers=2, aggregator="sum", remat=True)
+    return GNNConfig(name="meshgraphnet", n_layers=3, d_hidden=32,
+                     mlp_layers=2, aggregator="sum", remat=False)

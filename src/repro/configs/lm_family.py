@@ -1,0 +1,143 @@
+"""LM-family cell builders: train_4k / prefill_32k / decode_32k / long_500k.
+
+All four cells share one parameterization (models/transformer.py); the
+cells differ in which entry point they lower:
+
+  train_4k     train_step  (fwd + bwd + Adam), tokens (256, 4096)
+  prefill_32k  prefill     (build KV cache),   tokens (32, 32768)
+  decode_32k   decode_step (1 token vs 32k KV cache), batch 128
+  long_500k    decode_step (1 token vs 524 288 KV cache), batch 1
+               — decode against a long cache is O(L) per token, so full
+               attention runs this cell (DESIGN.md §6); the cache is
+               re-sharded: sequence over ('data','model'), batch axes
+               unsharded (B=1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, Cell, Lowerable, abstract_like, sds
+from repro.distributed.sharding import LM_RULES, filter_rules, param_shardings
+from repro.models.transformer import (
+    LMConfig,
+    cache_logical_axes,
+    lm_decode_step,
+    lm_init,
+    lm_logical_axes,
+    lm_prefill,
+    lm_train_step,
+    make_decode_cache,
+)
+from repro.optim import adam_init
+
+LM_CELLS = (
+    Cell("train_4k", "train", {"seq_len": 4096, "global_batch": 256}),
+    Cell("prefill_32k", "prefill", {"seq_len": 32768, "global_batch": 32}),
+    Cell("decode_32k", "decode", {"seq_len": 32768, "global_batch": 128}),
+    Cell("long_500k", "decode", {"seq_len": 524288, "global_batch": 1}),
+)
+
+# Reduced cells for smoke tests (same kinds, tiny sizes).
+LM_SMOKE_CELLS = (
+    Cell("train_4k", "train", {"seq_len": 64, "global_batch": 2}),
+    Cell("prefill_32k", "prefill", {"seq_len": 32, "global_batch": 2}),
+    Cell("decode_32k", "decode", {"seq_len": 32, "global_batch": 2}),
+    Cell("long_500k", "decode", {"seq_len": 128, "global_batch": 1}),
+)
+
+
+def _cell_rules(cell: Cell, cfg: LMConfig):
+    rules = LM_RULES
+    if cell.name == "long_500k":
+        # B = 1: nothing to gain from batch sharding; spread the 131 GB KV
+        # cache over ('data','model') instead.
+        rules = rules.override(batch=None, kv_batch=None,
+                               seq_shard=("data", "model"))
+    return rules
+
+
+def _abstract_params(cfg: LMConfig, mesh, rules):
+    shapes = jax.eval_shape(lambda k: lm_init(k, cfg), jax.random.key(0))
+    shard = param_shardings(lm_logical_axes(cfg), mesh, rules)
+    return abstract_like(shapes, shard)
+
+
+def _abstract_opt(params_sds, cfg: LMConfig, mesh, rules):
+    opt_shapes = jax.eval_shape(
+        partial(adam_init, moment_dtype=cfg.moment_dtype), params_sds)
+    shard = param_shardings(lm_logical_axes(cfg), mesh, rules)
+    from repro.optim import AdamState
+    return AdamState(
+        step=sds((), jnp.int32, NamedSharding(mesh, P())),
+        mu=abstract_like(opt_shapes.mu, shard),
+        nu=abstract_like(opt_shapes.nu, shard),
+    )
+
+
+def build_lm(cfg: LMConfig, cell: Cell, mesh) -> Lowerable:
+    rules = filter_rules(_cell_rules(cell, cfg), mesh)
+    S, B = cell["seq_len"], cell["global_batch"]
+    batch_sh = NamedSharding(mesh, rules.resolve("batch", None))
+    params = _abstract_params(cfg, mesh, rules)
+
+    if cell.kind == "train":
+        opt = _abstract_opt(params, cfg, mesh, rules)
+        batch = {
+            "tokens": sds((B, S), jnp.int32, batch_sh),
+            "labels": sds((B, S), jnp.int32, batch_sh),
+        }
+
+        def fn(params, opt, batch):
+            return lm_train_step(params, opt, batch, cfg)
+
+        return Lowerable(fn=fn, args=(params, opt, batch), donate=(0, 1),
+                         rules=rules)
+
+    if cell.kind == "prefill":
+        tokens = sds((B, S), jnp.int32, batch_sh)
+
+        def fn(params, tokens):
+            return lm_prefill(params, tokens, cfg)
+
+        return Lowerable(fn=fn, args=(params, tokens), rules=rules)
+
+    if cell.kind == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: make_decode_cache(cfg, B, S))
+        cache_shard = param_shardings(cache_logical_axes(cfg), mesh, rules)
+        cache = abstract_like(cache_shapes, cache_shard)
+        token = sds((B,), jnp.int32, NamedSharding(mesh, rules.resolve("batch")))
+        pos = sds((), jnp.int32, NamedSharding(mesh, P()))
+
+        def fn(params, cache, token, pos):
+            return lm_decode_step(params, cache, token, pos, cfg)
+
+        return Lowerable(fn=fn, args=(params, cache, token, pos),
+                         donate=(1,), rules=rules)
+
+    raise ValueError(cell.kind)
+
+
+def lm_arch(name: str, full_kwargs: dict, smoke_kwargs: dict,
+            notes: str = "", variants: dict | None = None) -> ArchSpec:
+    def make_config(full: bool = True) -> LMConfig:
+        kw = full_kwargs if full else smoke_kwargs
+        return LMConfig(name=name, **kw)
+
+    variant_fns = {
+        vname: (lambda kw=vkw: LMConfig(name=name, **{**full_kwargs, **kw}))
+        for vname, vkw in (variants or {}).items()
+    }
+    return ArchSpec(
+        name=name, family="lm",
+        cells=LM_CELLS,
+        make_config=make_config,
+        build=build_lm,
+        notes=notes,
+        variants=variant_fns,
+    )

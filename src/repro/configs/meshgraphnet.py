@@ -1,0 +1,27 @@
+"""meshgraphnet — encode-process-decode GNN [arXiv:2010.03409; unverified].
+
+n_layers=15 d_hidden=128 aggregator=sum mlp_layers=2. Message passing is
+segment_sum over an explicit edge list (JAX sparse is BCOO-only — the
+scatter substrate IS part of this system; see models/gnn.py).
+
+Paper-technique applicability: the constrained-ranking head does not
+apply to a physics rollout (no ranking decision) — the arch is
+implemented WITHOUT the technique; API-compatibility (node_scores ->
+ranking head) is exercised in tests only. DESIGN.md §5.
+"""
+
+from repro.configs.gnn_family import (
+    GNN_CELLS,
+    build_gnn,
+    make_config,
+)
+from repro.configs.registry import ArchSpec, register
+
+SPEC = register(ArchSpec(
+    name="meshgraphnet", family="gnn",
+    cells=GNN_CELLS,
+    make_config=make_config,
+    build=build_gnn,
+    notes="paper technique inapplicable (no ranking decision); "
+          "implemented without it per instructions.",
+))

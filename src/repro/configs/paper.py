@@ -1,0 +1,131 @@
+"""paper-ranking — the paper's own pipeline as a first-class arch.
+
+Three cells (beyond the 40 assigned cells; these drive §Perf for the
+technique itself):
+
+  offline_dual     batched dual solve: 8 192 users x (m1=1000, K=5) per
+                   step — Algorithm 1's offline stage as one program.
+  serve_online     the < 50 ms online stage at fleet batch: KNN shadow
+                   prices over a 1M-user database + adjusted-score
+                   ranking, 8 192 users/step, m1=1000 -> top-50.
+  serve_retrieval  the large-m1 regime: 2^20 candidates per user,
+                   batch 256 -> constrained top-50.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, Cell, Lowerable, register, sds
+from repro.core.constraints import dcg_discount
+from repro.core.dual_solver import solve_dual_batch
+from repro.core.predictors import knn_predict
+from repro.core.ranking import rank_given_lambda
+from repro.distributed.sharding import PAPER_RULES, filter_rules
+
+PAPER_CELLS = (
+    # m1 = 1024: the paper's 1000-object scenario, padded to the mesh
+    Cell("offline_dual", "offline",
+         {"batch": 8192, "m1": 1024, "K": 5, "m2": 50, "iters": 300}),
+    Cell("serve_online", "serve",
+         {"batch": 8192, "m1": 1024, "K": 5, "m2": 50, "d_cov": 20,
+          "n_db": 1_048_576}),
+    Cell("serve_retrieval", "serve_retrieval",
+         {"batch": 256, "m1": 1_048_576, "K": 5, "m2": 50, "d_cov": 20,
+          "n_db": 65536}),
+)
+
+PAPER_SMOKE_CELLS = (
+    Cell("offline_dual", "offline",
+         {"batch": 8, "m1": 64, "K": 3, "m2": 16, "iters": 50}),
+    Cell("serve_online", "serve",
+         {"batch": 8, "m1": 64, "K": 3, "m2": 16, "d_cov": 10, "n_db": 128}),
+    Cell("serve_retrieval", "serve_retrieval",
+         {"batch": 4, "m1": 1024, "K": 3, "m2": 16, "d_cov": 10,
+          "n_db": 128}),
+)
+
+
+@dataclass(frozen=True)
+class PaperConfig:
+    name: str = "paper-ranking"
+    knn_k: int = 10
+    eps: float = 1e-4
+    dual_iters: int = 300
+    # §Perf variant: shard_map distributed KNN + top-k (k per shard
+    # crosses the interconnect instead of the full distance matrix)
+    distributed: bool = False
+
+
+def build_paper(cfg: PaperConfig, cell: Cell, mesh) -> Lowerable:
+    rules = filter_rules(PAPER_RULES, mesh)
+    B, m1, K, m2 = cell["batch"], cell["m1"], cell["K"], cell["m2"]
+    gamma = dcg_discount(m2)
+    batch_sh = NamedSharding(mesh, rules.resolve("batch"))
+    u_sh = NamedSharding(mesh, rules.resolve("batch", "items"))
+    a_sh = NamedSharding(mesh, rules.resolve("batch", None, "items"))
+    rep = NamedSharding(mesh, P())
+
+    u = sds((B, m1), jnp.float32, u_sh)
+    a = sds((B, K, m1), jnp.float32, a_sh)
+    b = sds((K,), jnp.float32, rep)
+
+    if cell.kind == "offline":
+        iters = cell["iters"]
+
+        def fn(u, a, b):
+            return solve_dual_batch(u, a, b, gamma, m2=m2, num_iters=iters)
+
+        return Lowerable(fn=fn, args=(u, a, b), rules=rules)
+
+    # online cells: covariates + KNN database + ranking
+    d_cov, n_db = cell["d_cov"], cell["n_db"]
+    db_sh = NamedSharding(mesh, rules.resolve("users_db", None))
+    X = sds((B, d_cov), jnp.float32,
+            NamedSharding(mesh, rules.resolve("batch", None)))
+    X_db = sds((n_db, d_cov), jnp.float32, db_sh)
+    eps = cfg.eps
+    k = cfg.knn_k
+
+    if cfg.distributed and mesh.devices.size > 1:
+        # §Perf variant: distributed KNN + distributed constrained top-k.
+        # lam_db is replicated (n_db*K floats — tiny); constraints are
+        # shared (K, m1) rows, sharded over items.
+        from repro.core.serving_dist import (
+            knn_predict_distributed,
+            rank_distributed,
+        )
+        lam_db = sds((n_db, K), jnp.float32, NamedSharding(mesh, P()))
+        a_shared = sds((K, m1), jnp.float32,
+                       NamedSharding(mesh, rules.resolve(None, "items")))
+
+        def fn(X, u, a, b, X_db, lam_db):
+            lam_hat = knn_predict_distributed(mesh, X_db, lam_db, X, k=k)
+            return rank_distributed(mesh, u, a, b, lam_hat, gamma,
+                                    m2=m2, eps=eps)
+
+        return Lowerable(fn=fn, args=(X, u, a_shared, b, X_db, lam_db),
+                         rules=rules)
+
+    lam_db = sds((n_db, K), jnp.float32, db_sh)
+
+    def fn(X, u, a, b, X_db, lam_db):
+        lam_hat = knn_predict(X_db, lam_db, X, k=k)
+        return rank_given_lambda(u, a, b, lam_hat, gamma, m2=m2, eps=eps)
+
+    return Lowerable(fn=fn, args=(X, u, a, b, X_db, lam_db), rules=rules)
+
+
+SPEC = register(ArchSpec(
+    name="paper-ranking", family="paper",
+    cells=PAPER_CELLS,
+    make_config=lambda full=True: PaperConfig(),
+    build=build_paper,
+    notes="the paper's technique as its own arch (extra cells beyond "
+          "the assigned 40).",
+    variants={"dist-topk": lambda: PaperConfig(distributed=True)},
+))

@@ -1,0 +1,34 @@
+"""phi3-medium-14b — dense RoPE SwiGLU GQA [arXiv:2404.14219; unverified].
+
+40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.lm_family import lm_arch
+from repro.configs.registry import register
+
+FULL = dict(
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10, d_head=128,
+    d_ff=17920, vocab=100352,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, moment_dtype=jnp.bfloat16,
+    remat="full",
+)
+
+SMOKE = dict(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=160, vocab=256,
+    dtype=jnp.float32, param_dtype=jnp.float32,
+    dense_attn_threshold=4096,
+)
+
+SPEC = register(lm_arch(
+    "phi3-medium-14b", FULL, SMOKE,
+    variants={
+        # 40 heads don't divide the 16-way TP axis -> chunked attention
+        # replicates score tiles per device. Dense attention with the
+        # q-sequence axis sharded over 'model' (4096 % 16 == 0) restores
+        # 16-way activation parallelism for any head count.
+        "attn-seq-shard": dict(dense_attn_threshold=4096),
+    },
+))

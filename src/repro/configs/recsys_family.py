@@ -1,0 +1,195 @@
+"""RecSys-family cell builders: train_batch / serve_p99 / serve_bulk /
+retrieval_cand.
+
+retrieval_cand is the paper's native regime and lowers the FULL
+integrated program: backbone covariates -> KNN shadow-price prediction
+over a 64k-user database -> adjusted-score constrained top-50 over 10^6
+candidates (Algorithm 1 online stage as one accelerator program).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import (
+    ArchSpec,
+    Cell,
+    Lowerable,
+    abstract_like,
+    pad_up,
+    sds,
+)
+from repro.core.predictors import knn_predict
+from repro.distributed.sharding import RECSYS_RULES, filter_rules, param_shardings
+from repro.models.recsys import RECSYS_REGISTRY, RecsysConfig
+from repro.optim import AdamState, adam_init
+
+N_NEG = 127          # sampled-softmax negatives (training)
+N_MASK = 20          # bert4rec masked positions (10% of seq 200)
+RETRIEVAL_K = 5      # constraints in the retrieval head
+RETRIEVAL_M2 = 50    # ranking slots
+KNN_DB = 65536       # shadow-price train-user database (serving fleet)
+
+RECSYS_CELLS = (
+    Cell("train_batch", "train", {"batch": 65536}),
+    Cell("serve_p99", "serve", {"batch": 512}),
+    Cell("serve_bulk", "serve", {"batch": 262144}),
+    Cell("retrieval_cand", "retrieval", {"batch": 1, "n_candidates": 1_000_000}),
+)
+
+RECSYS_SMOKE_CELLS = (
+    Cell("train_batch", "train", {"batch": 16}),
+    Cell("serve_p99", "serve", {"batch": 8}),
+    Cell("serve_bulk", "serve", {"batch": 32}),
+    Cell("retrieval_cand", "retrieval", {"batch": 1, "n_candidates": 512}),
+)
+
+
+def _covariate_dim(cfg: RecsysConfig) -> int:
+    if cfg.kind == "deepfm":
+        return cfg.embed_dim
+    if cfg.kind == "mind":
+        return cfg.n_interests * cfg.embed_dim
+    return cfg.embed_dim
+
+
+def _abstract_params(model, mesh, rules):
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    shard = param_shardings(model.logical_axes(), mesh, rules)
+    return abstract_like(shapes, shard)
+
+
+def make_train_batch_specs(cfg: RecsysConfig, B: int) -> dict:
+    """Abstract train-batch schema per model kind (mirrors data/batches.py).
+    Shardings are attached by the caller (rank-dependent)."""
+    S = cfg.seq_len
+    if cfg.kind == "deepfm":
+        return {"ids": sds((B, cfg.n_sparse), jnp.int32),
+                "labels": sds((B,), jnp.int32)}
+    if cfg.kind == "sasrec":
+        return {"seq": sds((B, S), jnp.int32),
+                "pos": sds((B, S), jnp.int32),
+                "neg": sds((B, S, N_NEG), jnp.int32)}
+    if cfg.kind == "bert4rec":
+        return {"seq": sds((B, S), jnp.int32),
+                "mask_pos": sds((B, N_MASK), jnp.int32),
+                "mask_target": sds((B, N_MASK), jnp.int32),
+                "neg": sds((B, N_MASK, N_NEG), jnp.int32)}
+    if cfg.kind == "mind":
+        return {"seq": sds((B, S), jnp.int32),
+                "pos": sds((B,), jnp.int32),
+                "neg": sds((B, N_NEG), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def build_recsys(cfg: RecsysConfig, cell: Cell, mesh) -> Lowerable:
+    base_rules = RECSYS_RULES
+    if cfg.replicate_tables:
+        base_rules = base_rules.override(table_rows=None)
+    rules = filter_rules(base_rules, mesh)
+    model = RECSYS_REGISTRY[cfg.kind](cfg)
+    params = _abstract_params(model, mesh, rules)
+    batch_vec = NamedSharding(mesh, rules.resolve("batch"))
+    batch_mat = NamedSharding(mesh, rules.resolve("batch", None))
+    batch_3d = NamedSharding(mesh, rules.resolve("batch", None, None))
+
+    def _sh(spec: jax.ShapeDtypeStruct):
+        by_rank = {1: batch_vec, 2: batch_mat, 3: batch_3d}
+        return jax.ShapeDtypeStruct(
+            spec.shape, spec.dtype, sharding=by_rank[len(spec.shape)])
+
+    if cell.kind == "train":
+        B = cell["batch"]
+        batch = {k: _sh(v) for k, v in make_train_batch_specs(cfg, B).items()}
+        opt_shapes = jax.eval_shape(adam_init, params)
+        pshard = param_shardings(model.logical_axes(), mesh, rules)
+        opt = AdamState(
+            step=sds((), jnp.int32, NamedSharding(mesh, P())),
+            mu=abstract_like(opt_shapes.mu, pshard),
+            nu=abstract_like(opt_shapes.nu, pshard),
+        )
+
+        def fn(params, opt, batch):
+            return model.train_step(params, opt, batch)
+
+        return Lowerable(fn=fn, args=(params, opt, batch), donate=(0, 1),
+                         rules=rules)
+
+    if cell.kind == "serve":
+        B = cell["batch"]
+        if cfg.kind == "deepfm":
+            args = (params, sds((B, cfg.n_sparse), jnp.int32, batch_mat))
+
+            def fn(params, ids):
+                return model.serve(params, ids)
+        else:
+            args = (params,
+                    sds((B, cfg.seq_len), jnp.int32, batch_mat),
+                    sds((B,), jnp.int32, batch_vec))
+
+            def fn(params, seq, target):
+                return model.serve(params, seq, target)
+
+        return Lowerable(fn=fn, args=args, rules=rules)
+
+    if cell.kind == "retrieval":
+        # batch = 1: one query against 10^6 candidates -> the candidate
+        # axis carries all the parallelism; pipeline pads it to the mesh.
+        B, n_cand = cell["batch"], pad_up(cell["n_candidates"])
+        cand_sh = NamedSharding(mesh, rules.resolve("candidates"))
+        cand_mat = NamedSharding(mesh, rules.resolve(None, "candidates"))
+        db_sh = NamedSharding(mesh, rules.resolve("users_db", None))
+        d_cov = _covariate_dim(cfg)
+        n_db = KNN_DB
+
+        cand_ids = sds((n_cand,), jnp.int32, cand_sh)
+        a = sds((RETRIEVAL_K, n_cand), jnp.float32, cand_mat)
+        X_db = sds((n_db, d_cov), jnp.float32, db_sh)
+        lam_db = sds((n_db, RETRIEVAL_K), jnp.float32, db_sh)
+        if cfg.kind == "deepfm":
+            user_in = sds((B, cfg.n_sparse - 1), jnp.int32, batch_mat)
+        else:
+            user_in = sds((B, cfg.seq_len), jnp.int32, batch_mat)
+
+        m2 = min(RETRIEVAL_M2, n_cand)
+
+        def fn(params, user_in, cand_ids, a, X_db, lam_db):
+            # Algorithm 1 online stage, end to end:
+            scores = model.retrieval_scores(params, user_in, cand_ids)
+            X = model.user_covariates(params, user_in)        # (B, d)
+            lam_hat = knn_predict(X_db, lam_db, X, k=10)      # (B, K)
+            s = scores + (1.0 + 1e-4) * lam_hat @ a           # adjusted
+            vals, idx = jax.lax.top_k(s, m2)
+            return vals, idx, lam_hat
+
+        return Lowerable(
+            fn=fn, args=(params, user_in, cand_ids, a, X_db, lam_db),
+            rules=rules)
+
+    raise ValueError(cell.kind)
+
+
+def recsys_arch(name: str, kind: str, full_kwargs: dict, smoke_kwargs: dict,
+                notes: str = "", variants: dict | None = None) -> ArchSpec:
+    def make_config(full: bool = True) -> RecsysConfig:
+        kw = full_kwargs if full else smoke_kwargs
+        return RecsysConfig(name=name, kind=kind, **kw)
+
+    variant_fns = {
+        vname: (lambda kw=vkw: RecsysConfig(name=name, kind=kind,
+                                            **{**full_kwargs, **kw}))
+        for vname, vkw in (variants or {}).items()
+    }
+    return ArchSpec(
+        name=name, family="recsys",
+        cells=RECSYS_CELLS,
+        make_config=make_config,
+        build=build_recsys,
+        notes=notes,
+        variants=variant_fns,
+    )

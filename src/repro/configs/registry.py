@@ -1,0 +1,129 @@
+"""Architecture registry: every assigned arch is a selectable config
+(``--arch <id>``) with its own shape-cell set.
+
+Each ArchSpec provides:
+  * make_config(full)   — the exact public-literature config (full=True)
+    or a reduced same-family smoke config (full=False);
+  * cells               — the assigned input shapes;
+  * build(cfg, cell, mesh, rules) -> Lowerable — the jit-ready program +
+    abstract (ShapeDtypeStruct, NamedSharding) arguments for that cell.
+
+The dry-run (launch/dryrun.py) iterates the registry x cells x meshes;
+smoke tests instantiate make_config(full=False) with real arrays.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping
+
+import jax
+
+from repro.distributed.sharding import AxisRules
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One assigned input shape for an architecture."""
+
+    name: str                   # e.g. 'train_4k'
+    kind: str                   # train | prefill | decode | serve | retrieval
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __getitem__(self, k):
+        return self.params[k]
+
+
+@dataclass(frozen=True)
+class Lowerable:
+    """A jit-ready program with abstract args (dry-run unit)."""
+
+    fn: Callable                # positional-args function to jit
+    args: tuple                 # pytrees of ShapeDtypeStruct w/ shardings
+    donate: tuple = ()          # donate_argnums
+    rules: AxisRules | None = None
+    static: Mapping[str, Any] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                                  # lm | gnn | recsys | paper
+    cells: tuple[Cell, ...]
+    make_config: Callable[[bool], Any]
+    build: Callable[[Any, Cell, Any], Lowerable]  # (cfg, cell, mesh) -> Lowerable
+    notes: str = ""
+    # §Perf hillclimb variants: name -> () -> optimized full-scale config.
+    # The baseline (make_config) stays paper-exact; variants are the
+    # beyond-paper optimized versions recorded separately.
+    variants: Mapping[str, Callable[[], Any]] = field(default_factory=dict)
+
+    def cell(self, name: str) -> Cell:
+        for c in self.cells:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.name}: no cell {name!r}; have "
+                       f"{[c.name for c in self.cells]}")
+
+
+ARCH_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    ARCH_REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_arch(name: str) -> ArchSpec:
+    # import side-effect registration on first use
+    import repro.configs  # noqa: F401
+    if name not in ARCH_REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCH_REGISTRY)}")
+    return ARCH_REGISTRY[name]
+
+
+def all_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(ARCH_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Shared abstract-arg helpers
+# ---------------------------------------------------------------------------
+
+def abstract_like(tree, shardings=None):
+    """Pytree of arrays/ShapeDtypeStructs -> ShapeDtypeStructs with
+    shardings attached (None shardings -> no placement constraint).
+    Non-divisible dims are relaxed to replication per leaf."""
+    from jax.sharding import NamedSharding
+
+    from repro.distributed.sharding import drop_nondivisible
+
+    if shardings is None:
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+    def leaf(x, s):
+        if isinstance(s, NamedSharding):
+            s = NamedSharding(s.mesh, drop_nondivisible(s.spec, x.shape, s.mesh))
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s)
+
+    return jax.tree.map(leaf, tree, shardings)
+
+
+def sds(shape, dtype, sharding=None):
+    from jax.sharding import NamedSharding
+
+    from repro.distributed.sharding import drop_nondivisible
+
+    if isinstance(sharding, NamedSharding):
+        sharding = NamedSharding(
+            sharding.mesh, drop_nondivisible(sharding.spec, shape, sharding.mesh))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def pad_up(n: int, mult: int = 512) -> int:
+    """Data-pipeline padding: spec sizes rounded up so every sharded axis
+    divides the mesh (512 = lcm-safe for all our meshes). Loaders pad the
+    real arrays the same way."""
+    return -(-n // mult) * mult

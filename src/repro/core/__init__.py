@@ -1,0 +1,36 @@
+# The paper's primary contribution: ranking under constraints with
+# prediction replacing optimization (Tkachenko et al., 2022), TPU-native.
+from repro.core.assignment import (
+    auction,
+    brute_force,
+    brute_force_constrained,
+    greedy_half_approx,
+    rank_by_sort,
+)
+from repro.core.constraints import (
+    ConstraintSet,
+    dcg_discount,
+    exposure_quota_constraints,
+    geometric_discount,
+    make_constraints,
+    movielens_style_constraints,
+)
+from repro.core.dual_solver import DualSolution, serve_rank, solve_dual, solve_dual_batch
+from repro.core.monge import is_inverse_monge, is_permuted_inverse_monge, monge_defect
+from repro.core.predictors import (
+    KNNLambdaPredictor,
+    LinearLambdaPredictor,
+    MLPLambdaPredictor,
+    MeanLambdaPredictor,
+    knn_predict,
+)
+from repro.core.ranking import (
+    EPS_GRID,
+    RankingOutput,
+    RankingPipeline,
+    fit_pipeline,
+    rank_given_lambda,
+    rank_with_strategy,
+    serve,
+    tune_eps,
+)

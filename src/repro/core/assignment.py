@@ -1,0 +1,195 @@
+"""Assignment (weighted bipartite matching) algorithms.
+
+The paper needs four assignment routines with different generality/speed
+trade-offs (Sec. 3.2):
+
+  * ``rank_by_sort``      — O(m log m) sort-based optimal assignment for
+                            fixed-discounting / (permuted) inverse-Monge S
+                            (rearrangement inequality, Hardy et al. 1952).
+  * ``greedy_half_approx``— O(m1·m2) greedy 1/2-approximation (Avis 1983,
+                            Preis 1999) for general S.
+  * ``auction``           — Bertsekas auction algorithm: exact (up to eps)
+                            max-weight matching for general S. TPU-friendly
+                            replacement for the Hungarian algorithm (the
+                            Hungarian augmenting-path search is serial and
+                            does not vectorize; Jacobi-style auction rounds
+                            are pure dense argmax/scatter).
+  * ``brute_force``       — O(m!) oracle for tests (numpy, m <= 8).
+
+All routines work on the *unbalanced* case (m1 items -> m2 <= m1 rank
+positions; every rank holds exactly one item, items may be unassigned).
+
+Conventions
+-----------
+A ranking is represented as ``perm``: an int array of shape (m2,) where
+``perm[j]`` = index of the item placed at rank j (0-based, rank 0 = top).
+"""
+
+from __future__ import annotations
+
+import itertools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Sort-based optimal assignment (fixed discounting / Monge structure)
+# ---------------------------------------------------------------------------
+
+def rank_by_sort(s: Array, m2: int | None = None) -> Array:
+    """Optimal assignment for fixed-discounting S = s @ gamma^T.
+
+    By the rearrangement inequality, with gamma > 0 descending, sorting s
+    descending and assigning rank j to the j-th largest element maximizes
+    tr(S^T P). Returns ``perm`` of shape (m2,).
+
+    ``jax.lax.top_k`` is used instead of a full argsort when m2 < m1: the
+    serving hot path only needs the top-m2 items.
+    """
+    m1 = s.shape[-1]
+    if m2 is None:
+        m2 = m1
+    if m2 == m1:
+        return jnp.argsort(-s, axis=-1)
+    _, idx = jax.lax.top_k(s, m2)
+    return idx
+
+
+def assignment_value(s: Array, gamma: Array, perm: Array) -> Array:
+    """tr(S^T P) for S = s gamma^T and the ranking ``perm``."""
+    return jnp.sum(jnp.take(s, perm, axis=-1) * gamma, axis=-1)
+
+
+def assignment_value_dense(S: Array, perm: Array) -> Array:
+    """tr(S^T P) for a dense (m1, m2) score matrix."""
+    m2 = perm.shape[-1]
+    cols = jnp.arange(m2)
+    return jnp.sum(S[perm, cols], axis=-1)
+
+
+def perm_to_matrix(perm: Array, m1: int) -> Array:
+    """Ranking -> (m1, m2) permutation (selection) matrix P."""
+    m2 = perm.shape[-1]
+    P = jnp.zeros((m1, m2), dtype=jnp.float32)
+    return P.at[perm, jnp.arange(m2)].set(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Greedy 1/2-approximation (general S, no Monge structure needed)
+# ---------------------------------------------------------------------------
+
+def greedy_half_approx(S: Array) -> Array:
+    """Greedy max-weight matching: repeatedly take the largest remaining
+    entry of S, retiring its row (item) and column (rank). 1/2-approximation
+    in the worst case; optimal when S satisfies box inequalities.
+
+    Vectorized as m2 rounds of a masked dense argmax (O(m1·m2) work per
+    round -> O(m1·m2^2) total; fine off the hot path).
+    """
+    m1, m2 = S.shape
+    neg_inf = jnp.asarray(-jnp.inf, S.dtype)
+
+    def body(carry, _):
+        Sm, perm_accum, step = carry
+        flat = jnp.argmax(Sm)
+        i, j = flat // m2, flat % m2
+        Sm = Sm.at[i, :].set(neg_inf)
+        Sm = Sm.at[:, j].set(neg_inf)
+        perm_accum = perm_accum.at[j].set(i)
+        return (Sm, perm_accum, step + 1), None
+
+    init = (S, jnp.zeros((m2,), jnp.int32), 0)
+    (Sm, perm, _), _ = jax.lax.scan(body, init, None, length=m2)
+    return perm
+
+
+# ---------------------------------------------------------------------------
+# Auction algorithm (exact general solver; TPU-friendly Hungarian substitute)
+# ---------------------------------------------------------------------------
+
+def auction(S: Array, eps: float = 1e-3, max_iters: int = 50_000) -> Array:
+    """Gauss-Seidel-flavoured auction, JAX while_loop, simple & correct.
+
+    One bid resolved per iteration (the lowest-index unassigned rank bids).
+    Slower than Jacobi rounds but exact and easy to verify; used as a
+    general-S oracle off the hot path.
+    """
+    S = jnp.asarray(S, jnp.float32)
+    m1, m2 = S.shape
+
+    def cond(state):
+        rank_owner, _, it = state  # rank_owner[j] = item of rank j or -1
+        return jnp.logical_and(jnp.any(rank_owner < 0), it < max_iters)
+
+    def body(state):
+        rank_owner, prices, it = state
+        j = jnp.argmax(rank_owner < 0)  # first unassigned rank
+        values = S[:, j] - prices
+        top2, idx2 = jax.lax.top_k(values, 2)
+        i = idx2[0]
+        incr = top2[0] - top2[1] + eps
+        prices = prices.at[i].add(incr)
+        # evict whoever owns item i
+        owns_i = rank_owner == i
+        rank_owner = jnp.where(owns_i, -1, rank_owner)
+        rank_owner = rank_owner.at[j].set(i)
+        return rank_owner, prices, it + 1
+
+    init = (jnp.full((m2,), -1, jnp.int32), jnp.zeros((m1,), jnp.float32), 0)
+    rank_owner, _, _ = jax.lax.while_loop(cond, body, init)
+    return rank_owner
+
+
+# ---------------------------------------------------------------------------
+# Brute force oracle (tests only)
+# ---------------------------------------------------------------------------
+
+def brute_force(S: np.ndarray) -> np.ndarray:
+    """Exact max-weight assignment by enumeration. m1 <= 8. Returns perm."""
+    S = np.asarray(S)
+    m1, m2 = S.shape
+    best_val, best_perm = -np.inf, None
+    cols = np.arange(m2)
+    for items in itertools.permutations(range(m1), m2):
+        val = S[list(items), cols].sum()
+        if val > best_val:
+            best_val, best_perm = val, np.array(items)
+    return best_perm
+
+
+def brute_force_constrained(
+    U: np.ndarray, A: np.ndarray, b: np.ndarray, signs: np.ndarray
+) -> tuple[np.ndarray | None, float]:
+    """Exact *constrained* max-utility assignment by enumeration (tests only).
+
+    U: (m1, m2) utility; A: (K, m1, m2) constraint matrices; b: (K,);
+    signs: (K,) +1 for >=, -1 for <=. Returns (perm, value) over feasible
+    permutations, or (None, -inf) if infeasible.
+    """
+    U = np.asarray(U)
+    m1, m2 = U.shape
+    K = len(b)
+    best_val, best_perm = -np.inf, None
+    cols = np.arange(m2)
+    for items in itertools.permutations(range(m1), m2):
+        items_l = list(items)
+        ok = True
+        for k in range(K):
+            v = A[k][items_l, cols].sum()
+            if signs[k] > 0 and v < b[k] - 1e-9:
+                ok = False
+                break
+            if signs[k] < 0 and v > b[k] + 1e-9:
+                ok = False
+                break
+        if not ok:
+            continue
+        val = U[items_l, cols].sum()
+        if val > best_val:
+            best_val, best_perm = val, np.array(items)
+    return best_perm, best_val

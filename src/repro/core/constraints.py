@@ -1,0 +1,111 @@
+"""Constraint specifications for ranking under constraints.
+
+The paper's constraints (Table 1) are all *fixed-discounting* linear
+exposure constraints:  tr(A_k^T P) >=/<= b_k  with  A_k = a_k @ gamma^T,
+where a_k is a per-item attribute vector (topic indicator, scaled release
+year, ...) and gamma is the shared rank-discount vector.
+
+We normalize every constraint internally to ">=" form by flipping the sign
+of (a_k, b_k) for "<=" constraints, so the dual shadow prices are always
+lambda_k >= 0 against ">=" constraints — matching eq. (4).
+
+ConstraintSet is a pytree; all fields are arrays so it can flow through
+jit/vmap/shard_map.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def dcg_discount(m2: int, dtype=jnp.float32) -> Array:
+    """gamma_j = 1 / log2(j + 1), j in 1..m2 (descending, positive)."""
+    j = jnp.arange(1, m2 + 1, dtype=dtype)
+    return 1.0 / jnp.log2(j + 1.0)
+
+
+def geometric_discount(m2: int, d: float = 0.9, dtype=jnp.float32) -> Array:
+    """gamma_j = d^j — the 'simple discounting' alternative in footnote 2."""
+    j = jnp.arange(1, m2 + 1, dtype=dtype)
+    return jnp.asarray(d, dtype) ** j
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class ConstraintSet:
+    """K fixed-discounting constraints, normalized to >= form.
+
+    a: (K, m1) per-item attribute rows (already sign-flipped for <=).
+    b: (K,)    thresholds in absolute exposure units (sign-flipped for <=).
+    """
+
+    a: Array
+    b: Array
+
+    @property
+    def num_constraints(self) -> int:
+        return self.a.shape[0]
+
+    def exposure(self, perm: Array, gamma: Array) -> Array:
+        """tr(A_k^T P) for every k given a ranking perm: (K,)."""
+        # a[:, perm[j]] * gamma[j] summed over j
+        return jnp.einsum("kj,j->k", jnp.take(self.a, perm, axis=1), gamma)
+
+    def violations(self, perm: Array, gamma: Array) -> Array:
+        """Positive part of (b - exposure): 0 where satisfied."""
+        return jnp.maximum(self.b - self.exposure(perm, gamma), 0.0)
+
+    def is_compliant(self, perm: Array, gamma: Array, atol: float = 1e-6) -> Array:
+        return jnp.all(self.exposure(perm, gamma) >= self.b - atol)
+
+
+def make_constraints(
+    a_list, b_list, signs, dtype=jnp.float32
+) -> ConstraintSet:
+    """Build a ConstraintSet from raw (a_k, b_k, sign_k) triples.
+
+    sign +1 means `tr(A^T P) >= b`, -1 means `<=`. Internally flips <=
+    constraints to >=.
+    """
+    a = jnp.asarray(np.stack(a_list), dtype)
+    b = jnp.asarray(np.asarray(b_list), dtype)
+    s = jnp.asarray(np.asarray(signs), dtype)
+    return ConstraintSet(a=a * s[:, None], b=b * s)
+
+
+def exposure_quota_constraints(
+    topic_indicators: Array,  # (K_topics, m1) binary
+    quota_fracs: Array,  # (K_topics,) fraction of total exposure
+    signs: Array,  # (K_topics,) +1 for >=, -1 for <=
+    gamma: Array,
+) -> ConstraintSet:
+    """Table-1-style constraints: topic exposure >= (or <=) quota% of total
+    exposure sum_j gamma_j."""
+    total = jnp.sum(gamma)
+    b = jnp.asarray(quota_fracs) * total
+    return make_constraints(
+        list(jnp.asarray(topic_indicators)), list(b), list(jnp.asarray(signs))
+    )
+
+
+def movielens_style_constraints(
+    topic_indicators: Array,  # (4, m1)
+    release_year_delta: Array,  # (m1,) (year - 1990) / 100
+    quota_frac: float,
+    gamma: Array,
+) -> ConstraintSet:
+    """The MovieLens experiment set: 4 topic quotas (>=) + exposure-weighted
+    mean release-year >= 0 (Table 1a)."""
+    total = jnp.sum(gamma)
+    a_rows = [topic_indicators[i] for i in range(topic_indicators.shape[0])]
+    b_rows = [quota_frac * total] * len(a_rows)
+    a_rows.append(release_year_delta)
+    b_rows.append(0.0)
+    signs = [1.0] * len(a_rows)
+    return make_constraints(a_rows, b_rows, signs)

@@ -1,0 +1,216 @@
+"""Shadow-price predictors f(X) -> lambda (Algorithm 1, online stage).
+
+The paper's estimator is a ball-tree KNN regressor with inverse-distance
+weights (k = 10, Euclidean). On TPU a ball tree is pointer-chasing; we use
+the *exact same estimator* computed by brute force: a (batch x train_users)
+distance matmul that maps perfectly onto the MXU, followed by top-k. For
+train databases sharded over the `model` mesh axis the top-k is merged
+across shards (lax.top_k per shard -> gather k*shards -> re-top-k), see
+`repro.distributed.topk.sharded_knn_topk`.
+
+Beyond-paper predictors (recorded separately in EXPERIMENTS.md):
+  * ridge-regression linear predictor (closed form, one (d x d) solve),
+  * MLP predictor trained with the repo Adam — both strictly cheaper to
+    serve than KNN (no train-database residency) and often as compliant.
+
+All predictors share the interface:
+  fit(X_train, lam_train) -> fitted predictor (pytree)
+  predict(X) -> lam_hat   (jit-able, vmap-able, shard_map-able)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam_init, adam_update
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Mean predictor (paper's 'Mean lambda' baseline)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class MeanLambdaPredictor:
+    """Intercept-only, covariate-free predictor: lam_hat = mean(lam_train)."""
+
+    mean_lam: Array  # (K,)
+
+    @staticmethod
+    def fit(X_train: Array, lam_train: Array) -> "MeanLambdaPredictor":
+        del X_train
+        return MeanLambdaPredictor(mean_lam=jnp.mean(lam_train, axis=0))
+
+    def predict(self, X: Array) -> Array:
+        batch = X.shape[:-1]
+        return jnp.broadcast_to(self.mean_lam, batch + self.mean_lam.shape)
+
+
+# ---------------------------------------------------------------------------
+# KNN predictor (paper's proposed 'KNeighbors lambda')
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class KNNLambdaPredictor:
+    """Exact k-nearest-neighbour regressor, inverse-distance weighted.
+
+    Identical estimator to the paper's sklearn ball-tree KNN (k=10,
+    weights='distance', Euclidean metric); computed by brute force:
+      d2(x, xi) = |x|^2 - 2 x.xi + |xi|^2  -> top-k -> 1/d weights.
+    The train database (X_db, lam_db) rides along in the pytree so the
+    predictor can be donated/sharded like any other model state.
+    """
+
+    X_db: Array    # (n_train, d)
+    lam_db: Array  # (n_train, K)
+    k: int
+
+    @staticmethod
+    def fit(X_train: Array, lam_train: Array, k: int = 10) -> "KNNLambdaPredictor":
+        return KNNLambdaPredictor(
+            X_db=jnp.asarray(X_train), lam_db=jnp.asarray(lam_train), k=int(k)
+        )
+
+    def predict(self, X: Array) -> Array:
+        return knn_predict(self.X_db, self.lam_db, X, k=self.k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def knn_predict(X_db: Array, lam_db: Array, X: Array, *, k: int = 10) -> Array:
+    """Inverse-distance-weighted KNN regression, batched over X rows.
+
+    X: (..., d) -> (..., K). Exact: brute-force distances then top-k.
+    When a query coincides with a database point (d == 0) the estimator
+    returns that point's value (sklearn 'distance' weights semantics).
+    """
+    squeeze = X.ndim == 1
+    Xq = jnp.atleast_2d(X)
+    # (b, n) squared distances via the expanded form — one MXU matmul.
+    x2 = jnp.sum(Xq * Xq, axis=-1, keepdims=True)          # (b, 1)
+    y2 = jnp.sum(X_db * X_db, axis=-1)                      # (n,)
+    d2 = x2 - 2.0 * (Xq @ X_db.T) + y2[None, :]             # (b, n)
+    d2 = jnp.maximum(d2, 0.0)
+    neg_top, idx = jax.lax.top_k(-d2, k)                    # (b, k)
+    dist = jnp.sqrt(-neg_top)
+    # Inverse-distance weights with exact-match override. The expanded-form
+    # d2 carries O(eps_f32 * |x|^2) error, so 'exact' is a relative test.
+    scale2 = x2 + y2[idx] + 1e-12                           # (b, k)
+    exact = -neg_top <= 1e-6 * scale2
+    any_exact = jnp.any(exact, axis=-1, keepdims=True)
+    w_inv = 1.0 / jnp.maximum(dist, 1e-12)
+    w = jnp.where(any_exact, exact.astype(d2.dtype), w_inv)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    lam_neighbors = lam_db[idx]                             # (b, k, K)
+    out = jnp.einsum("bk,bkc->bc", w, lam_neighbors)
+    return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Ridge-regression predictor (beyond paper)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class LinearLambdaPredictor:
+    """Ridge regression lam ~ W x + c, closed form; lam_hat clipped >= 0."""
+
+    W: Array  # (K, d)
+    c: Array  # (K,)
+
+    @staticmethod
+    def fit(
+        X_train: Array, lam_train: Array, l2: float = 1e-3
+    ) -> "LinearLambdaPredictor":
+        X = jnp.asarray(X_train, jnp.float32)
+        Y = jnp.asarray(lam_train, jnp.float32)
+        mu_x = jnp.mean(X, axis=0)
+        mu_y = jnp.mean(Y, axis=0)
+        Xc, Yc = X - mu_x, Y - mu_y
+        d = X.shape[1]
+        G = Xc.T @ Xc + l2 * jnp.eye(d, dtype=X.dtype)
+        W = jnp.linalg.solve(G, Xc.T @ Yc).T               # (K, d)
+        c = mu_y - W @ mu_x
+        return LinearLambdaPredictor(W=W, c=c)
+
+    def predict(self, X: Array) -> Array:
+        return jnp.maximum(X @ self.W.T + self.c, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# MLP predictor (beyond paper)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class MLPLambdaPredictor:
+    """Two-layer MLP lam ~ softplus-headed f(x); trained with repo Adam."""
+
+    params: Any
+
+    @staticmethod
+    def init_params(key: Array, d_in: int, d_hidden: int, K: int):
+        k1, k2 = jax.random.split(key)
+        s1 = 1.0 / jnp.sqrt(d_in)
+        s2 = 1.0 / jnp.sqrt(d_hidden)
+        return {
+            "w1": jax.random.normal(k1, (d_in, d_hidden), jnp.float32) * s1,
+            "b1": jnp.zeros((d_hidden,), jnp.float32),
+            "w2": jax.random.normal(k2, (d_hidden, K), jnp.float32) * s2,
+            "b2": jnp.zeros((K,), jnp.float32),
+        }
+
+    @staticmethod
+    def apply(params, X: Array) -> Array:
+        h = jax.nn.relu(X @ params["w1"] + params["b1"])
+        # softplus keeps lam_hat >= 0 (dual feasibility) with smooth grads.
+        return jax.nn.softplus(h @ params["w2"] + params["b2"])
+
+    @staticmethod
+    def fit(
+        X_train: Array,
+        lam_train: Array,
+        *,
+        d_hidden: int = 64,
+        num_steps: int = 500,
+        lr: float = 1e-2,
+        seed: int = 0,
+    ) -> "MLPLambdaPredictor":
+        X = jnp.asarray(X_train, jnp.float32)
+        Y = jnp.asarray(lam_train, jnp.float32)
+        params = MLPLambdaPredictor.init_params(
+            jax.random.key(seed), X.shape[1], d_hidden, Y.shape[1]
+        )
+        opt = adam_init(params)
+
+        def loss_fn(p):
+            pred = MLPLambdaPredictor.apply(p, X)
+            return jnp.mean((pred - Y) ** 2)
+
+        @jax.jit
+        def step(p, o):
+            loss, g = jax.value_and_grad(loss_fn)(p)
+            p, o = adam_update(g, o, p, lr=lr)
+            return p, o, loss
+
+        for _ in range(num_steps):
+            params, opt, _ = step(params, opt)
+        return MLPLambdaPredictor(params=params)
+
+    def predict(self, X: Array) -> Array:
+        return MLPLambdaPredictor.apply(self.params, X)
+
+
+PREDICTOR_REGISTRY = {
+    "mean": MeanLambdaPredictor,
+    "knn": KNNLambdaPredictor,
+    "linear": LinearLambdaPredictor,
+    "mlp": MLPLambdaPredictor,
+}

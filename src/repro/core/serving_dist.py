@@ -1,0 +1,122 @@
+"""Distributed (fleet-scale) variants of the online serving stage.
+
+Beyond-paper optimizations, recorded separately in EXPERIMENTS.md §Perf:
+the paper's online stage is per-user CPU code; at fleet scale the
+GSPMD-global formulation (core/predictors.knn_predict + a global top_k)
+makes XLA all-gather the (batch x n_db) distance matrix over the model
+axis before selecting. These shard_map versions move only k candidates
+per shard across the interconnect:
+
+  knn_predict_distributed   per-shard distances + local top-k -> merge
+                            (collective: B*k*shards*12 bytes, down from
+                            B*n_db*4)
+  rank_distributed          adjusted scores + top-m2 with the item axis
+                            sharded (serve_retrieval's 2^20 candidates)
+
+Numerically identical to the dense versions (exact KNN, exact top-k) —
+asserted in tests/test_multidevice.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.topk import distributed_top_k
+
+Array = jax.Array
+
+
+def knn_predict_distributed(
+    mesh: Mesh,
+    X_db: Array,     # (n_db, d) row-sharded over `db_axis`
+    lam_db: Array,   # (n_db, K) REPLICATED (tiny: n_db*K floats)
+    X: Array,        # (B, d) sharded over batch axes
+    *,
+    k: int = 10,
+    db_axis: str = "model",
+    batch_axes=("pod", "data"),
+) -> Array:
+    """Inverse-distance-weighted KNN regression, database sharded by rows.
+
+    Matches core.predictors.knn_predict exactly (same weighting and
+    relative exact-match override). The d2 norms needed for the override
+    ride through the merge as a payload — nothing database-sized crosses
+    the interconnect.
+    """
+    batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def body(xq, xdb_local, lam_all):
+        x2 = jnp.sum(xq * xq, axis=-1, keepdims=True)        # (B_l, 1)
+        y2l = jnp.sum(xdb_local * xdb_local, axis=-1)        # (n_l,)
+        d2 = jnp.maximum(x2 - 2.0 * (xq @ xdb_local.T) + y2l[None, :], 0.0)
+        y2_b = jnp.broadcast_to(y2l[None, :], d2.shape)
+        neg_d2, idx, y2_sel = distributed_top_k(
+            -d2, k, db_axis, payload=y2_b)
+        d2k = -neg_d2                                        # (B_l, k) asc
+        lam_nb = lam_all[idx]                                # (B_l, k, K)
+        scale2 = x2 + y2_sel + 1e-12
+        exact = d2k <= 1e-6 * scale2
+        any_exact = jnp.any(exact, axis=-1, keepdims=True)
+        w_inv = 1.0 / jnp.maximum(jnp.sqrt(d2k), 1e-12)
+        w = jnp.where(any_exact, exact.astype(d2.dtype), w_inv)
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+        return jnp.einsum("bk,bkc->bc", w, lam_nb)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch_axes, None), P(db_axis, None), P()),
+        out_specs=P(batch_axes, None),
+        check_vma=False,
+    )(X, X_db, lam_db)
+
+
+def rank_distributed(
+    mesh: Mesh,
+    u: Array,        # (B, m1) items sharded over `item_axis`
+    a: Array,        # (K, m1) shared constraints, items sharded
+    b: Array,        # (K,) thresholds, replicated
+    lam: Array,      # (B, K) sharded over batch axes
+    gamma: Array,    # (m2,) replicated
+    *,
+    m2: int,
+    eps: float = 1e-4,
+    item_axis: str = "model",
+    batch_axes=("pod", "data"),
+):
+    """Online ranking with the item/candidate axis sharded: adjusted
+    scores computed per item shard, local top-m2 per shard, merge of
+    m2*shards candidates. Raw utilities AND the K constraint-attribute
+    rows ride the merge as payloads, so utility / exposure / compliance
+    need no second gather — the outputs match rank_given_lambda exactly.
+
+    Returns a RankingOutput.
+    """
+    from repro.core.ranking import RankingOutput
+
+    batch_axes = tuple(ax for ax in batch_axes if ax in mesh.axis_names)
+
+    def body(u_l, a_l, b_r, lam_l, gamma_r):
+        B_l = u_l.shape[0]
+        s = u_l + (1.0 + eps) * (lam_l @ a_l)                # (B_l, m1_l)
+        a_bcast = jnp.broadcast_to(a_l[None], (B_l,) + a_l.shape)
+        payload = {"u": u_l,
+                   "a": jnp.moveaxis(a_bcast, 1, 0)}          # (K, B_l, m1_l)
+        vals, idx, sel = distributed_top_k(s, m2, item_axis, payload=payload)
+        utility = sel["u"] @ gamma_r                          # (B_l,)
+        exposure = jnp.einsum("kbm,m->bk", sel["a"], gamma_r)
+        compliant = jnp.all(exposure >= b_r - 1e-6, axis=-1)
+        return RankingOutput(perm=idx, utility=utility, exposure=exposure,
+                             compliant=compliant, lam=lam_l)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch_axes, item_axis), P(None, item_axis), P(),
+                  P(batch_axes, None), P()),
+        out_specs=RankingOutput(
+            perm=P(batch_axes, None), utility=P(batch_axes),
+            exposure=P(batch_axes, None), compliant=P(batch_axes),
+            lam=P(batch_axes, None)),
+        check_vma=False,
+    )(u, a, b, lam, gamma)

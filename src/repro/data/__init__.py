@@ -1,0 +1,19 @@
+from repro.data.synthetic import (
+    Corpus,
+    InteractionData,
+    RankingExperiment,
+    build_experiment,
+    make_interactions,
+    make_movielens_corpus,
+    make_yow_corpus,
+    movielens_constraints,
+    yow_constraints,
+)
+from repro.data.batches import (
+    make_csr_graph,
+    make_deepfm_batch,
+    make_lm_batch,
+    make_molecule_batch,
+    make_random_graph,
+    make_seqrec_batch,
+)

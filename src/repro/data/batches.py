@@ -1,0 +1,135 @@
+"""Synthetic training/serving batches for every assigned architecture.
+
+Two entry points per family:
+
+  * ``make_*_batch``  — real arrays (smoke tests, examples, CPU training);
+    deterministic from a seed.
+  * the configs' ``input_specs()`` (src/repro/configs) — ShapeDtypeStruct
+    stand-ins for the dry-run; THESE functions define the layouts those
+    specs mirror.
+
+The LM stream is a Zipf-ish token source with enough structure (bigram
+bias) that a few hundred training steps show a falling loss in the
+end-to-end example.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# LM batches
+# --------------------------------------------------------------------------
+
+def make_lm_batch(key: Array, *, batch: int, seq: int, vocab: int) -> dict:
+    """Causal-LM batch with learnable bigram structure:
+    next token = (3 * tok + noise) mod vocab."""
+    k1, k2 = jax.random.split(key)
+    first = jax.random.randint(k1, (batch, 1), 0, vocab)
+    noise = jax.random.randint(k2, (batch, seq), 0, 7)
+
+    def step(tok, n):
+        nxt = (3 * tok + n) % vocab
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(
+        lambda c, n: step(c, n), first[:, 0], noise[:, :-1].T)
+    tokens = jnp.concatenate([first, rest.T], axis=1)
+    _, nxt = step(tokens[:, -1], noise[:, -1])
+    labels = jnp.concatenate([tokens[:, 1:], nxt[:, None]], axis=1)
+    return {"tokens": tokens.astype(jnp.int32), "labels": labels.astype(jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# RecSys batches
+# --------------------------------------------------------------------------
+
+def make_deepfm_batch(key: Array, *, batch: int, n_sparse: int,
+                      field_vocab: int) -> dict:
+    """CTR batch: per-field global ids + clicks correlated with id parity."""
+    k1, k2 = jax.random.split(key)
+    local = jax.random.randint(k1, (batch, n_sparse), 0, field_vocab)
+    offsets = jnp.arange(n_sparse) * field_vocab
+    ids = local + offsets[None, :]
+    click_p = 0.2 + 0.6 * (jnp.mean(local % 2, axis=1))
+    labels = (jax.random.uniform(k2, (batch,)) < click_p).astype(jnp.int32)
+    return {"ids": ids.astype(jnp.int32), "labels": labels}
+
+
+def make_seqrec_batch(key: Array, *, batch: int, seq_len: int, n_items: int,
+                      n_neg: int, kind: str = "sasrec",
+                      n_mask: int = 8) -> dict:
+    """Sequence batches. sasrec/mind: next-item; bert4rec: masked-item."""
+    ks = jax.random.split(key, 5)
+    # random-walk item sequences (neighbourhood structure -> learnable)
+    start = jax.random.randint(ks[0], (batch, 1), 0, n_items)
+    steps = jax.random.randint(ks[1], (batch, seq_len), -3, 4)
+    seq = (start + jnp.cumsum(steps, axis=1)) % n_items
+    if kind == "sasrec":
+        pos = (seq + 1) % n_items                    # next-item targets (B,S)
+        neg = jax.random.randint(ks[2], (batch, seq_len, n_neg), 0, n_items)
+        return {"seq": seq.astype(jnp.int32), "pos": pos.astype(jnp.int32),
+                "neg": neg.astype(jnp.int32)}
+    if kind == "bert4rec":
+        n_mask = min(n_mask, seq_len)
+        mask_pos = jax.random.randint(ks[2], (batch, n_mask), 0, seq_len)
+        target = jnp.take_along_axis(seq, mask_pos, axis=1)
+        seq_masked = seq.at[jnp.arange(batch)[:, None], mask_pos].set(0)
+        neg = jax.random.randint(ks[3], (batch, n_mask, n_neg), 0, n_items)
+        return {"seq": seq_masked.astype(jnp.int32),
+                "mask_pos": mask_pos.astype(jnp.int32),
+                "mask_target": target.astype(jnp.int32),
+                "neg": neg.astype(jnp.int32)}
+    if kind == "mind":
+        pos = ((seq[:, -1] + 1) % n_items)
+        neg = jax.random.randint(ks[2], (batch, n_neg), 0, n_items)
+        return {"seq": seq.astype(jnp.int32), "pos": pos.astype(jnp.int32),
+                "neg": neg.astype(jnp.int32)}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Graph batches
+# --------------------------------------------------------------------------
+
+def make_random_graph(key: Array, *, n_nodes: int, n_edges: int,
+                      d_node: int, d_edge: int, d_out: int,
+                      np_rng: bool = False) -> dict:
+    """Random graph with smooth targets (sum of neighbour features) so the
+    GNN has learnable signal."""
+    ks = jax.random.split(key, 4)
+    nodes = jax.random.normal(ks[0], (n_nodes, d_node))
+    senders = jax.random.randint(ks[1], (n_edges,), 0, n_nodes)
+    receivers = jax.random.randint(ks[2], (n_edges,), 0, n_nodes)
+    edges = jnp.abs(nodes[senders, :d_edge] - nodes[receivers, :d_edge])
+    agg = jax.ops.segment_sum(nodes[senders, :d_out], receivers,
+                              num_segments=n_nodes)
+    targets = jnp.tanh(agg)
+    return {"nodes": nodes, "edges": edges,
+            "senders": senders.astype(jnp.int32),
+            "receivers": receivers.astype(jnp.int32), "targets": targets}
+
+
+def make_csr_graph(key: Array, *, n_nodes: int, avg_degree: int):
+    """CSR adjacency for the neighbor sampler (minibatch_lg pipeline)."""
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    deg = rng.poisson(avg_degree, n_nodes).astype(np.int64)
+    deg = np.maximum(deg, 1)
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    indices = rng.integers(0, n_nodes, int(indptr[-1]))
+    return jnp.asarray(indptr, jnp.int32), jnp.asarray(indices, jnp.int32)
+
+
+def make_molecule_batch(key: Array, *, batch: int, n_nodes: int, n_edges: int,
+                        d_node: int, d_edge: int, d_out: int) -> dict:
+    """Batched small graphs (molecule cell): leading batch dim on every leaf."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda k: make_random_graph(
+        k, n_nodes=n_nodes, n_edges=n_edges, d_node=d_node, d_edge=d_edge,
+        d_out=d_out))(keys)

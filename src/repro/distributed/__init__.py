@@ -1,0 +1,11 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    RULES_BY_FAMILY,
+    current_mesh,
+    current_rules,
+    logical_shard,
+    logical_spec,
+    param_shardings,
+    use_mesh_rules,
+)
+from repro.distributed.topk import distributed_top_k, sharded_knn_topk

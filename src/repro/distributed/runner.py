@@ -1,0 +1,127 @@
+"""Fault-tolerant training runner: checkpoint/restart, failure injection,
+straggler detection. The control-plane layer of DESIGN.md §4.
+
+On real fleets, failures surface as raised exceptions from the step
+function (XLA device errors, DMA timeouts) or as missing heartbeats. The
+runner's contract:
+
+  * every `ckpt_every` steps: async checkpoint (atomic, versioned);
+  * on step failure: restore the latest checkpoint and replay — data
+    order is reproducible because batches derive from (seed, step);
+  * `max_restarts` bounds the retry budget; exhausted -> re-raise;
+  * straggler detection: per-step wall times feed an EWMA; steps slower
+    than `straggler_factor` x EWMA are counted and reported via metrics
+    so the orchestration layer can trigger hot-spares. (On a real pod
+    slice this hooks into the per-host heartbeat; on one process it is
+    measurement-only.)
+
+The runner is deliberately model-agnostic: state is (params, opt_state,
+extra) pytrees, `step_fn(state, batch) -> (state, metrics)`, and
+`batch_fn(step) -> batch` regenerates data deterministically for replay.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.store import CheckpointStore
+
+PyTree = Any
+
+
+@dataclass
+class RunnerReport:
+    steps_run: int = 0
+    restarts: int = 0
+    straggler_steps: int = 0
+    checkpoints: int = 0
+    metrics_history: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+
+
+class FaultTolerantRunner:
+    def __init__(
+        self,
+        store: CheckpointStore,
+        step_fn: Callable[[PyTree, Any], tuple[PyTree, dict]],
+        batch_fn: Callable[[int], Any],
+        *,
+        ckpt_every: int = 50,
+        max_restarts: int = 3,
+        straggler_factor: float = 3.0,
+        async_ckpt: bool = True,
+    ):
+        self.store = store
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.straggler_factor = straggler_factor
+        self.async_ckpt = async_ckpt
+
+    def run(
+        self,
+        state: PyTree,
+        num_steps: int,
+        *,
+        start_step: int = 0,
+        resume: bool = True,
+        fail_at: Callable[[int], bool] | None = None,
+        shardings: PyTree | None = None,
+    ) -> tuple[PyTree, RunnerReport]:
+        """Run to `num_steps`, surviving step failures.
+
+        `fail_at(step)` is the failure-injection hook used by tests /
+        chaos drills: when it returns True the runner behaves as if the
+        device step raised.
+        """
+        report = RunnerReport()
+        step = start_step
+        if resume and self.store.latest_step() is not None:
+            state, extra = self.store.restore(state, shardings=shardings)
+            step = int(extra.get("next_step", self.store.latest_step()))
+        restarts = 0
+        ewma = None
+
+        while step < num_steps:
+            batch = self.batch_fn(step)
+            t0 = time.perf_counter()
+            try:
+                if fail_at is not None and fail_at(step):
+                    raise RuntimeError(f"injected failure at step {step}")
+                state, metrics = self.step_fn(state, batch)
+                metrics = jax.tree.map(
+                    lambda x: x.item() if hasattr(x, "item") else x, metrics)
+            except Exception:
+                restarts += 1
+                report.restarts = restarts
+                if restarts > self.max_restarts:
+                    self.store.wait()
+                    raise
+                if self.store.latest_step() is not None:
+                    state, extra = self.store.restore(state, shardings=shardings)
+                    step = int(extra.get("next_step", self.store.latest_step()))
+                else:
+                    step = start_step
+                continue
+            dt = time.perf_counter() - t0
+            report.step_times.append(dt)
+            if ewma is None:
+                ewma = dt
+            else:
+                if dt > self.straggler_factor * ewma:
+                    report.straggler_steps += 1
+                ewma = 0.9 * ewma + 0.1 * dt
+            report.metrics_history.append(metrics)
+            report.steps_run += 1
+            step += 1
+            if step % self.ckpt_every == 0 or step == num_steps:
+                save = self.store.save_async if self.async_ckpt else self.store.save
+                save(step, state, extra={"next_step": step})
+                report.checkpoints += 1
+        self.store.wait()
+        return state, report

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes:
+#   fused_rank    — adjusted-score ranking (the <50 ms online hot path)
+#   knn_topk      — lambda-predictor KNN over the train-user database
+#   embedding_bag — recsys sparse-lookup substrate
+# Each has a pure-jnp oracle in ref.py; ops.py wraps with padding +
+# XLA fallbacks. Validated with interpret=True on CPU (tests/test_kernels.py).
+from repro.kernels import ref
+from repro.kernels.ops import embedding_bag, fused_rank, knn_predict_kernel, knn_topk

@@ -1,0 +1,63 @@
+"""Shared in-kernel primitives for the Pallas TPU kernels.
+
+`topk_merge` is the streaming-selection building block used by knn_topk
+and fused_rank: merge a fresh (B, T) score tile into a running (B, k)
+top-k buffer held in VMEM scratch, flash-attention-style. k passes of
+(max + first-argmax + mask) over the concatenated (B, k+T) tile; every
+op is a lane reduction or elementwise — no sorts, no gathers, TPU-lowerable.
+
+Ties break toward the candidate that comes FIRST in the concatenated
+order. Because the running buffer (earlier tiles) precedes the fresh tile
+and within a tile iota order is ascending, global tie-breaking is 'lowest
+index wins' — matching the jnp stable-argsort oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(-1e30)
+
+
+def first_argmax(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, N) -> (B,) index of the first maximum along the last axis,
+    via the iota-min trick (jnp.argmax's tie semantics, TPU-friendly)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, dimension=x.ndim - 1)
+    masked = jnp.where(x >= m, iota, jnp.iinfo(jnp.int32).max)
+    return jnp.min(masked, axis=-1)
+
+
+def topk_merge(
+    run_vals: jnp.ndarray,   # (B, k) running top values (descending-ish)
+    run_idx: jnp.ndarray,    # (B, k) their global indices
+    tile_vals: jnp.ndarray,  # (B, T) fresh candidate values
+    tile_idx: jnp.ndarray,   # (B, T) their global indices
+    k: int,
+):
+    """Return new (run_vals, run_idx): top-k of the union, descending,
+    ties to lower concat position (running buffer first)."""
+    B = run_vals.shape[0]
+    cand_v = jnp.concatenate([run_vals, tile_vals], axis=-1)   # (B, k+T)
+    cand_i = jnp.concatenate([run_idx, tile_idx], axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, dimension=1)
+
+    out_v = jnp.full((B, k), NEG_INF, cand_v.dtype)
+    out_i = jnp.zeros((B, k), jnp.int32)
+
+    def body(j, carry):
+        cand_v, out_v, out_i = carry
+        sel = first_argmax(cand_v)                             # (B,)
+        onehot = iota == sel[:, None]                          # (B, k+T)
+        v = jnp.max(jnp.where(onehot, cand_v, NEG_INF), axis=-1)
+        gi = jnp.max(jnp.where(onehot, cand_i, -1), axis=-1)
+        # write column j of the output buffers
+        col = jax.lax.broadcasted_iota(jnp.int32, (B, k), dimension=1) == j
+        out_v = jnp.where(col, v[:, None], out_v)
+        out_i = jnp.where(col, gi[:, None], out_i)
+        cand_v = jnp.where(onehot, NEG_INF, cand_v)
+        return cand_v, out_v, out_i
+
+    _, out_v, out_i = jax.lax.fori_loop(0, k, body, (cand_v, out_v, out_i))
+    return out_v, out_i

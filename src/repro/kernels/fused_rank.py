@@ -1,0 +1,123 @@
+"""fused_rank — the paper's online hot path as one Pallas TPU kernel.
+
+Computes, per user n:   s = u + (1 + eps) * sum_k lam_k a_k
+and streams the top-m2 (score, item) pairs out — the adjusted scores
+NEVER materialize in HBM. For the retrieval_cand regime (m1 = 10^6
+candidates, m2 = 50 slots) this turns
+
+  XLA path:  read u (4 MB) + a (K*4 MB), write s (4 MB), read s (4 MB),
+             top_k -> ~ (2K + 10) MB of HBM traffic per user
+  kernel:    read u + a once, write m2 values  -> (K + 1) * 4 MB
+
+i.e. strictly the compulsory traffic. The memory-bound roofline term
+drops by ~(K+3)/(K+1) (measured in EXPERIMENTS.md §Perf).
+
+Grid: (batch_tiles, m1_tiles); m1 is the minor (fastest) axis so the
+running top-k scratch lives in VMEM across the whole m1 sweep of one
+batch tile. BlockSpec tiles:
+  u    (Bn, Tm)      VMEM
+  a    (Bn, K, Tm)   VMEM  (K is small: 5-8 constraints)
+  lam  (Bn, K)       VMEM, same block every m1 step
+  out  (Bn, m2) x2   written on the last m1 step
+
+Alignment: Tm is a multiple of 128 (lanes); Bn a multiple of 8
+(sublanes, f32). m2 <= MAX_KERNEL_M2 keeps the merge cheap; bigger m2
+falls back to the XLA path in ops.py (a full sort is the right tool
+once m2 ~ m1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.common import NEG_INF, topk_merge
+
+MAX_KERNEL_M2 = 128
+
+
+def _fused_rank_kernel(
+    lam_ref, u_ref, a_ref,                 # inputs
+    vals_ref, idx_ref,                     # outputs
+    run_v, run_i,                          # VMEM scratch
+    *, eps: float, m2: int, tile_m: int, num_k: int,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        run_v[...] = jnp.full_like(run_v, NEG_INF)
+        run_i[...] = jnp.zeros_like(run_i)
+
+    u = u_ref[...].astype(jnp.float32)                   # (Bn, Tm)
+    lam = lam_ref[...].astype(jnp.float32)               # (Bn, K)
+    # K static and small: unrolled axpy chain (no dot_general needed)
+    s = u
+    for k in range(num_k):
+        s = s + (1.0 + eps) * lam[:, k][:, None] * a_ref[:, k, :].astype(jnp.float32)
+
+    base = t * tile_m
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, dimension=1)
+    new_v, new_i = topk_merge(run_v[...], run_i[...], s, gidx, m2)
+    run_v[...] = new_v
+    run_i[...] = new_i
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = run_v[...]
+        idx_ref[...] = run_i[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m2", "eps", "tile_b", "tile_m", "interpret"))
+def fused_rank_pallas(
+    u: jax.Array,        # (n, m1)
+    a: jax.Array,        # (n, K, m1)
+    lam: jax.Array,      # (n, K)
+    *,
+    m2: int,
+    eps: float = 1e-4,
+    tile_b: int = 8,
+    tile_m: int = 512,
+    interpret: bool = False,
+):
+    """Returns (top scores (n, m2) descending f32, item indices (n, m2))."""
+    n, m1 = u.shape
+    K = a.shape[1]
+    if m2 > MAX_KERNEL_M2:
+        raise ValueError(f"kernel path supports m2 <= {MAX_KERNEL_M2}; "
+                         f"use repro.kernels.ops.fused_rank (XLA fallback)")
+    if n % tile_b or m1 % tile_m:
+        raise ValueError(f"(n={n}, m1={m1}) must tile by ({tile_b}, {tile_m})")
+
+    grid = (n // tile_b, m1 // tile_m)
+    kernel = functools.partial(
+        _fused_rank_kernel, eps=eps, m2=m2, tile_m=tile_m, num_k=K)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, K), lambda b, t: (b, 0)),
+            pl.BlockSpec((tile_b, tile_m), lambda b, t: (b, t)),
+            pl.BlockSpec((tile_b, K, tile_m), lambda b, t: (b, 0, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, m2), lambda b, t: (b, 0)),
+            pl.BlockSpec((tile_b, m2), lambda b, t: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m2), jnp.float32),
+            jax.ShapeDtypeStruct((n, m2), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_b, m2), jnp.float32),
+            pltpu.VMEM((tile_b, m2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lam, u, a)
+    return vals, idx

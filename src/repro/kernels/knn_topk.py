@@ -1,0 +1,103 @@
+"""knn_topk — tiled squared-L2 distances + streaming top-k (Pallas TPU).
+
+The paper's lambda predictor is an exact KNN regressor; its serving cost
+is one (batch x train-users) distance computation + top-k. This kernel
+streams the train-user database HBM->VMEM exactly once per query tile:
+
+  d2[b, n] = |q_b|^2 - 2 q_b . x_n + |x_n|^2
+
+The cross term is an MXU matmul per (query tile, db tile); |x_n|^2 is
+recomputed per tile (D multiplies — negligible vs the matmul); the
+running top-k (negated distances) lives in VMEM scratch across the db
+sweep. VMEM working set per step:
+  q (Bq, D) + db (Tn, D) + d2 (Bq, Tn) + 2 (Bq, k) buffers.
+
+Grid: (query_tiles, db_tiles), db minor so scratch persists. Alignment:
+D and Tn multiples of 128 for the MXU; Bq multiple of 8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.common import NEG_INF, topk_merge
+
+
+def _knn_kernel(
+    q_ref, db_ref,                 # inputs
+    d2_ref, idx_ref,               # outputs
+    run_v, run_i,                  # scratch
+    *, k: int, tile_n: int,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        run_v[...] = jnp.full_like(run_v, NEG_INF)
+        run_i[...] = jnp.zeros_like(run_i)
+
+    q = q_ref[...].astype(jnp.float32)                       # (Bq, D)
+    db = db_ref[...].astype(jnp.float32)                     # (Tn, D)
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)              # (Bq, 1)
+    db2 = jnp.sum(db * db, axis=-1)                          # (Tn,)
+    cross = jnp.dot(q, db.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(q2 - 2.0 * cross + db2[None, :], 0.0)   # (Bq, Tn)
+
+    base = t * tile_n
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, d2.shape, dimension=1)
+    new_v, new_i = topk_merge(run_v[...], run_i[...], -d2, gidx, k)
+    run_v[...] = new_v
+    run_i[...] = new_i
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _flush():
+        d2_ref[...] = -run_v[...]
+        idx_ref[...] = run_i[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tile_q", "tile_n", "interpret"))
+def knn_topk_pallas(
+    xq: jax.Array,    # (B, D) queries
+    xdb: jax.Array,   # (N, D) database
+    *,
+    k: int = 10,
+    tile_q: int = 8,
+    tile_n: int = 512,
+    interpret: bool = False,
+):
+    """Returns (d2 (B, k) ascending, idx (B, k) — ties to lower index)."""
+    B, D = xq.shape
+    N = xdb.shape[0]
+    if B % tile_q or N % tile_n:
+        raise ValueError(f"(B={B}, N={N}) must tile by ({tile_q}, {tile_n})")
+
+    grid = (B // tile_q, N // tile_n)
+    kernel = functools.partial(_knn_kernel, k=k, tile_n=tile_n)
+    d2, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, D), lambda b, t: (b, 0)),
+            pl.BlockSpec((tile_n, D), lambda b, t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((tile_q, k), lambda b, t: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, k), jnp.float32),
+            pltpu.VMEM((tile_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xq, xdb)
+    return d2, idx

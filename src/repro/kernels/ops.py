@@ -1,0 +1,131 @@
+"""jit'd public wrappers for the Pallas kernels, with XLA fallbacks.
+
+Call these, not the kernels directly: they pad awkward shapes to tile
+boundaries, dispatch to the XLA reference when the kernel's static
+constraints don't hold (huge m2, CPU runtime without interpret), and
+return results in the oracle's exact format so callers can swap paths
+without code changes.
+
+On this container (CPU) the kernels run with interpret=True; on TPU the
+same call sites compile the real kernels (interpret=False default).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.fused_rank import MAX_KERNEL_M2, fused_rank_pallas
+from repro.kernels.knn_topk import knn_topk_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: Array, axis: int, mult: int, value):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# fused_rank
+# ---------------------------------------------------------------------------
+
+def fused_rank(
+    u: Array, a: Array, lam: Array, *, m2: int, eps: float = 1e-4,
+    use_kernel: bool | None = None, interpret: bool | None = None,
+    tile_b: int = 8, tile_m: int = 512,
+):
+    """(top scores (n, m2) desc f32, item idx (n, m2)). See ref.fused_rank_ref."""
+    if use_kernel is None:
+        use_kernel = m2 <= MAX_KERNEL_M2
+    if not use_kernel:
+        return ref.fused_rank_ref(u, a, lam, m2, eps)
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, m1 = u.shape
+    u_p = _pad_to(_pad_to(u, 0, tile_b, 0.0), 1, tile_m, -jnp.inf)
+    a_p = _pad_to(_pad_to(a, 0, tile_b, 0.0), 2, tile_m, 0.0)
+    lam_p = _pad_to(lam, 0, tile_b, 0.0)
+    vals, idx = fused_rank_pallas(
+        u_p, a_p, lam_p, m2=m2, eps=eps, tile_b=tile_b, tile_m=tile_m,
+        interpret=interpret)
+    return vals[:n], idx[:n]
+
+
+# ---------------------------------------------------------------------------
+# knn_topk
+# ---------------------------------------------------------------------------
+
+def knn_topk(
+    xq: Array, xdb: Array, *, k: int = 10,
+    use_kernel: bool = True, interpret: bool | None = None,
+    tile_q: int = 8, tile_n: int = 512,
+):
+    """(d2 (B, k) ascending, idx (B, k)). See ref.knn_topk_ref."""
+    if not use_kernel:
+        return ref.knn_topk_ref(xq, xdb, k)
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, D = xq.shape
+    N = xdb.shape[0]
+    # pad the db with far-away rows so padded entries never enter top-k
+    xq_p = _pad_to(xq, 0, tile_q, 0.0)
+    xdb_p = _pad_to(xdb, 0, tile_n, 1e15)
+    d2, idx = knn_topk_pallas(
+        xq_p, xdb_p, k=k, tile_q=tile_q, tile_n=tile_n, interpret=interpret)
+    return d2[:B], idx[:B]
+
+
+def knn_predict_kernel(
+    X_db: Array, lam_db: Array, X: Array, *, k: int = 10,
+    interpret: bool | None = None,
+) -> Array:
+    """Kernel-backed twin of repro.core.predictors.knn_predict (same
+    inverse-distance weighting and exact-match semantics)."""
+    squeeze = X.ndim == 1
+    Xq = jnp.atleast_2d(X)
+    d2, idx = knn_topk(Xq, X_db, k=k, interpret=interpret)
+    dist = jnp.sqrt(d2)
+    x2 = jnp.sum(Xq * Xq, axis=-1, keepdims=True)
+    y2 = jnp.sum(X_db * X_db, axis=-1)[idx]
+    exact = d2 <= 1e-6 * (x2 + y2 + 1e-12)
+    any_exact = jnp.any(exact, axis=-1, keepdims=True)
+    w_inv = 1.0 / jnp.maximum(dist, 1e-12)
+    w = jnp.where(any_exact, exact.astype(d2.dtype), w_inv)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bk,bkc->bc", w, lam_db[idx])
+    return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+def embedding_bag(
+    table: Array, indices: Array, weights: Array | None = None, *,
+    use_kernel: bool = True, interpret: bool | None = None, tile_b: int = 8,
+):
+    """(n_bags, D) sum-mode bag. See ref.embedding_bag_ref."""
+    if not use_kernel:
+        return ref.embedding_bag_ref(table, indices, weights)
+    if interpret is None:
+        interpret = not _on_tpu()
+    n_bags = indices.shape[0]
+    idx_p = _pad_to(indices, 0, tile_b, -1)
+    w_p = None if weights is None else _pad_to(weights, 0, tile_b, 0.0)
+    out = embedding_bag_pallas(
+        table, idx_p, w_p, tile_b=tile_b, interpret=interpret)
+    return out[:n_bags]

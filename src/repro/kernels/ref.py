@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: tests sweep shapes/dtypes and assert
+the kernels (run with interpret=True on CPU) match these references.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def knn_topk_ref(xq: Array, xdb: Array, k: int) -> tuple[Array, Array]:
+    """k nearest database rows per query under squared-L2 distance.
+
+    xq: (B, D), xdb: (N, D) -> (dists (B, k) ascending, idx (B, k)).
+    Ties broken by lower index (stable), matching the kernel's
+    iterative-argmin selection.
+    """
+    xq = xq.astype(jnp.float32)
+    xdb = xdb.astype(jnp.float32)
+    d2 = (
+        jnp.sum(xq * xq, axis=-1, keepdims=True)
+        - 2.0 * (xq @ xdb.T)
+        + jnp.sum(xdb * xdb, axis=-1)[None, :]
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    # Stable ascending selection: argsort is stable in jnp.
+    order = jnp.argsort(d2, axis=-1, stable=True)[:, :k]
+    return jnp.take_along_axis(d2, order, axis=-1), order
+
+
+def fused_rank_ref(
+    u: Array, a: Array, lam: Array, m2: int, eps: float = 1e-4
+) -> tuple[Array, Array]:
+    """Adjusted-score top-m2 selection (the paper's online hot path).
+
+    u: (n, m1); a: (n, K, m1); lam: (n, K).
+    s = u + (1 + eps) * lam @ a;  returns (top scores (n, m2) descending,
+    item indices (n, m2)). Ties broken by lower item index.
+    """
+    s = u.astype(jnp.float32) + (1.0 + eps) * jnp.einsum(
+        "nk,nkm->nm", lam.astype(jnp.float32), a.astype(jnp.float32)
+    )
+    order = jnp.argsort(-s, axis=-1, stable=True)[:, :m2]
+    return jnp.take_along_axis(s, order, axis=-1), order
+
+
+def embedding_bag_ref(
+    table: Array, indices: Array, weights: Array | None = None
+) -> Array:
+    """Multi-hot embedding-bag (sum mode), the recsys lookup hot path.
+
+    table: (V, D); indices: (n_bags, bag) int32, entries < 0 are padding;
+    weights: optional (n_bags, bag) per-sample weights.
+    Returns (n_bags, D) = sum_j w[i,j] * table[indices[i,j]].
+    """
+    valid = (indices >= 0).astype(table.dtype)
+    idx = jnp.maximum(indices, 0)
+    rows = table[idx]                                   # (n_bags, bag, D)
+    w = valid if weights is None else weights * valid
+    return jnp.einsum("nb,nbd->nd", w.astype(table.dtype), rows)
+
+
+def dual_adjust_ref(u: Array, a: Array, lam: Array, eps: float = 0.0) -> Array:
+    """Just the adjusted score s = u + (1+eps) lam @ a (no selection)."""
+    return u + (1.0 + eps) * jnp.einsum("nk,nkm->nm", lam, a)

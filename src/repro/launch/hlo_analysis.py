@@ -1,0 +1,125 @@
+"""HLO post-mortem for the dry-run: collective bytes, op census, memory.
+
+cost_analysis() gives FLOPs and HBM bytes but NOT collective traffic —
+we parse the post-SPMD per-device HLO text and sum the RESULT buffer
+sizes of every collective op, bucketed by kind. Result-size is the
+per-device bytes landed by the collective; for ring algorithms actual
+link traffic is within 2x of this, uniformly across ops, so relative
+comparisons (the §Perf deltas) are exact and absolute terms conservative.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# one buffer type like  bf16[8,128]{1,0:T(8,128)}  or f32[] or pred[4]
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _buffer_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# "%name = TYPE op-name(" where TYPE may be a tuple; capture lazily up to
+# the op name we care about.
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"([a-z0-9-]+)(?:-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer bytes per collective kind. Returns
+    {kind: bytes, ..., 'total': int, 'count': int}."""
+    out: dict = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _OP_RE.search(s)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        kind = None
+        for ck in COLLECTIVE_KINDS:
+            if op == ck or op.startswith(ck + "-"):
+                kind = ck
+                break
+        if kind is None:
+            continue
+        # '-done' ops alias the '-start' buffer; count once (at start/plain)
+        if op.endswith("-done"):
+            continue
+        out[kind] += _buffer_bytes(type_str)
+        count += 1
+    out = dict(out)
+    out["total"] = sum(v for k, v in out.items())
+    out["count"] = count
+    return out
+
+
+def op_census(hlo_text: str, ops=("fusion", "custom-call", "while",
+                                  "dot", "convolution", "scatter",
+                                  "gather", "sort")) -> dict:
+    """Rough op histogram — used to spot remat recompute and layout
+    churn (duplicate op names) when hillclimbing."""
+    census: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m and m.group(2) in ops:
+            census[m.group(2)] += 1
+    return dict(census)
+
+
+def memory_analysis_dict(compiled) -> dict:
+    """compiled.memory_analysis() -> plain dict (None-safe: the CPU
+    backend may not implement it)."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() -> plain dict of floats."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {str(k): float(v) for k, v in dict(ca).items()}

@@ -1,0 +1,373 @@
+"""Trip-count-aware cost walk over compiled (post-SPMD, per-device) HLO.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` visits every
+computation ONCE — a 61-layer ``lax.scan`` body is counted as one
+iteration (verified empirically; see EXPERIMENTS.md §Dry-run), so FLOPs,
+bytes, and any text-level collective count undercount loops by the trip
+count. This module re-derives the three roofline inputs with loops
+multiplied out:
+
+  flops             MXU work: 2 * prod(result dims) * prod(contracting
+                    dims) per ``dot`` (vector-unit transcendentals are
+                    deliberately excluded — the compute roofline term is
+                    MXU peak).
+  bytes             HBM traffic: per op, operand + result buffer sizes,
+                    with the three aliasing patterns that matter handled:
+                      * fused dynamic-slice reads count the SLICE, not
+                        the full operand (layer-stacked weight scans);
+                      * dynamic-update-slice writes count the UPDATE
+                        (KV-cache append);
+                      * gather/scatter count touched rows, not the whole
+                        table (embedding lookups).
+                    Fusion internals are free (one pass over inputs and
+                    outputs — XLA's own fusion cost convention).
+  collectives       result-buffer bytes per collective kind.
+
+All three are multiplied by while-loop trip counts (parsed from the loop
+condition's comparison constant) and averaged over conditional branches.
+Shapes in post-SPMD HLO are per-device, so every number here is
+PER-DEVICE per step.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call",
+}
+
+# Elementwise ops count RESULT bytes only: on TPU, XLA fuses them into
+# their producers (one read-modify-write pass); the CPU backend we
+# compile on fuses less, and charging operands+result would bake the CPU
+# fusion boundaries into the TPU roofline.
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "select", "compare", "convert", "broadcast", "exponential", "tanh",
+    "negate", "abs", "and", "or", "not", "xor", "power", "rsqrt", "sqrt",
+    "log", "exp", "floor", "ceil", "sign", "clamp", "reshape",
+    "transpose", "reverse", "expm1", "log1p", "logistic", "cosine",
+    "sine", "rem", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "pad", "concatenate", "reduce-window",
+}
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _buffer_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        total += math.prod(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # %name -> type_str
+
+
+# op line:  %name = TYPE opname(...), attrs
+# TYPE may be a (possibly NESTED) tuple — match greedily and let the
+# opname anchor backtrack to the correct split.
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s+=\s+"
+    r"((?:\(.*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z][a-z0-9\-]*)"
+    r"\((.*?)\)(.*)$")
+
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def parse_module(hlo: str) -> tuple[dict[str, Computation], str]:
+    """-> ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _HDR_RE.match(line.strip())
+            if m and ("->" in line):
+                cur = Computation(name=m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, operand_str, attrs = m.groups()
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        cur.symbols[name] = type_str
+        cur.ops.append(Op(name=name, type_str=type_str, op=op,
+                          operands=operands, attrs=attrs, line=line))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _called(attrs: str, key: str) -> list[str]:
+    m = re.search(key + r"=\{?%?([\w.\-]+(?:, ?%[\w.\-]+)*)\}?", attrs)
+    if not m:
+        return []
+    return [s.strip().lstrip("%") for s in m.group(1).split(",")]
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop condition compares the induction var (starting at 0) against a
+    constant: take the largest integer constant in the condition."""
+    best = 1
+    for op in cond.ops:
+        if op.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res = _shape_dims(op.type_str)
+    if not res:
+        return 0.0
+    result_elems = math.prod(res[0][1]) if res[0][1] else 1
+    lhs_type = comp.symbols.get(op.operands[0], "") if op.operands else ""
+    lhs = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if lhs and m and m.group(1):
+        dims = lhs[0][1]
+        for d in m.group(1).split(","):
+            contract *= dims[int(d)]
+    return 2.0 * result_elems * contract
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    return sum(_buffer_bytes(comp.symbols.get(o, "")) for o in op.operands)
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  comps: dict[str, Computation]) -> int:
+    """Result + operands, but slice-consumed / DUS-produced params count at
+    their touched size."""
+    called = _called(op.attrs, "calls")
+    inner = comps.get(called[0]) if called else None
+    out_bytes = _buffer_bytes(op.type_str)
+    if inner is None:
+        return out_bytes + _operand_bytes(op, comp)
+    # map fused-computation parameter index -> caller operand
+    param_sizes = {}
+    for iop in inner.ops:
+        if iop.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", iop.line)
+            if m:
+                param_sizes[iop.name] = int(m.group(1))
+    # resolve pass-through chains (copy/bitcast/convert/reshape) so a
+    # parameter consumed by a slice THROUGH a bitcast still counts as
+    # sliced (the lax.scan carry-stash DUS pattern)
+    _PASSTHRU = {"copy", "bitcast", "convert", "reshape", "transpose"}
+    origin = dict.fromkeys(param_sizes, None)
+    for p in param_sizes:
+        origin[p] = p
+    for iop in inner.ops:
+        if iop.op in _PASSTHRU and iop.operands:
+            src = origin.get(iop.operands[0])
+            if src is not None:
+                origin[iop.name] = src
+
+    def _param_of(name):
+        return origin.get(name)
+
+    sliced_params = set()
+    sliced_bytes = 0
+    for iop in inner.ops:
+        if iop.op in ("dynamic-slice", "slice"):
+            for o in iop.operands:
+                p = _param_of(o)
+                if p is not None:
+                    sliced_params.add(p)
+                    sliced_bytes += _buffer_bytes(iop.type_str)
+        elif iop.op == "gather":
+            p = _param_of(iop.operands[0]) if iop.operands else None
+            if p is not None:
+                sliced_params.add(p)
+                sliced_bytes += _buffer_bytes(iop.type_str)
+        elif iop.op == "dynamic-update-slice":
+            p = _param_of(iop.operands[0]) if iop.operands else None
+            if p is not None:
+                sliced_params.add(p)
+                upd = iop.operands[1] if len(iop.operands) > 1 else None
+                sliced_bytes += _buffer_bytes(inner.symbols.get(upd, ""))
+                # output buffer aliases the input: don't charge full result
+                out_bytes = min(out_bytes,
+                                _buffer_bytes(inner.symbols.get(upd, "")))
+    full = 0
+    for pname, idx in param_sizes.items():
+        if pname in sliced_params:
+            continue
+        if idx < len(op.operands):
+            full += _buffer_bytes(comp.symbols.get(op.operands[idx], ""))
+    return out_bytes + full + sliced_bytes
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0) + v
+        self.unknown_trip_loops += other.unknown_trip_loops
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.collectives.items()},
+                    self.unknown_trip_loops)
+
+
+def _comp_cost(comp: Computation, comps: dict[str, Computation],
+               memo: dict) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    total = Cost()
+    memo[comp.name] = total  # break cycles defensively
+    for op in comp.ops:
+        kind = None
+        base = op.op[:-6] if op.op.endswith("-start") else op.op
+        for ck in COLLECTIVE_KINDS:
+            if base == ck:
+                kind = ck
+                break
+        if op.op.endswith("-done"):
+            continue
+        if kind is not None:
+            b = _buffer_bytes(op.type_str)
+            total.collectives[kind] = total.collectives.get(kind, 0) + b
+            total.bytes += b  # collectives also touch HBM
+            continue
+        if op.op == "while":
+            body = _called(op.attrs, "body")
+            cond = _called(op.attrs, "condition")
+            trips = 1
+            if cond and cond[0] in comps:
+                trips = _trip_count(comps[cond[0]])
+            if body and body[0] in comps:
+                total += _comp_cost(comps[body[0]], comps, memo).scaled(trips)
+            continue
+        if op.op == "conditional":
+            branches = _called(op.attrs, "branch_computations")
+            if not branches:
+                branches = [c for c in (_called(op.attrs, "true_computation")
+                                        + _called(op.attrs, "false_computation"))]
+            costs = [_comp_cost(comps[b], comps, memo) for b in branches
+                     if b in comps]
+            if costs:
+                # branch probabilities unknown -> average (documents the
+                # causal-chunk-skip pattern without assuming it)
+                total += Cost(
+                    sum(c.flops for c in costs) / len(costs),
+                    sum(c.bytes for c in costs) / len(costs),
+                    {k: sum(c.collectives.get(k, 0) for c in costs) / len(costs)
+                     for c in costs for k in c.collectives},
+                )
+            continue
+        if op.op == "call":
+            for c in _called(op.attrs, "to_apply"):
+                if c in comps:
+                    total += _comp_cost(comps[c], comps, memo)
+            continue
+        if op.op == "fusion":
+            total.bytes += _fusion_bytes(op, comp, comps)
+            called = _called(op.attrs, "calls")
+            if called and called[0] in comps:
+                inner = comps[called[0]]
+                for iop in inner.ops:
+                    if iop.op == "dot":
+                        total.flops += _dot_flops(iop, inner)
+            continue
+        if op.op == "dot":
+            total.flops += _dot_flops(op, comp)
+            total.bytes += _buffer_bytes(op.type_str) + _operand_bytes(op, comp)
+            continue
+        if op.op in ("gather", "scatter"):
+            res = _buffer_bytes(op.type_str)
+            idx = (_buffer_bytes(comp.symbols.get(op.operands[1], ""))
+                   if len(op.operands) > 1 else 0)
+            total.bytes += 2 * res + idx  # touched rows, not the full table
+            continue
+        if op.op == "dynamic-update-slice":
+            upd = (_buffer_bytes(comp.symbols.get(op.operands[1], ""))
+                   if len(op.operands) > 1 else 0)
+            total.bytes += 2 * upd
+            continue
+        if op.op in _SKIP_BYTES_OPS:
+            continue
+        if op.op in _ELEMENTWISE_OPS:
+            total.bytes += _buffer_bytes(op.type_str)
+            continue
+        # default: one pass over operands + result
+        total.bytes += _buffer_bytes(op.type_str) + _operand_bytes(op, comp)
+    memo[comp.name] = total
+    return total
+
+
+def hlo_cost(hlo_text: str) -> dict:
+    """Per-device, per-step cost of the compiled module."""
+    comps, entry = parse_module(hlo_text)
+    memo: dict = {}
+    # fused computations are charged at their call sites; only walk entry
+    cost = _comp_cost(comps[entry], comps, memo) if entry in comps else Cost()
+    coll = dict(cost.collectives)
+    coll["total"] = sum(coll.values())
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collectives": coll,
+        "unknown_trip_loops": cost.unknown_trip_loops,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,116 @@
+"""Roofline terms from dry-run artifacts (TPU v5e targets).
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * LINK_BW)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). On the host
+platform XLA reports the PRE-partition (global) program cost, so both
+are divided by the chip count; collective_bytes is parsed from the
+post-SPMD per-device HLO (already per-device, counted once per chip).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per the assignment;
+useful_fraction = MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste
+(train cells; >1 would mean the compiler pruned declared compute).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link (~3 links usable/chip)
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of the step spent at peak-FLOPs usefulness if the
+        dominant term were perfectly overlapped with the others."""
+        return self.compute_s / self.bound_s if self.bound_s else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "compute_fraction": self.compute_fraction,
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+        }
+
+
+def terms_from_artifact(artifact: dict) -> RooflineTerms:
+    """artifact: one dry-run JSON record (launch/dryrun.py).
+
+    Prefers the trip-count-aware per-device hlo_cost walk; falls back to
+    XLA's cost_analysis (global, loop-undercounting) when absent.
+    """
+    chips = int(artifact["mesh_devices"])
+    hc = artifact.get("hlo_cost")
+    if hc:
+        flops = float(hc["flops"])          # per-device, loops multiplied
+        bytes_accessed = float(hc["bytes"])
+        coll = float(hc["collectives"].get("total", 0.0))
+        return RooflineTerms(
+            compute_s=flops / PEAK_FLOPS,
+            memory_s=bytes_accessed / HBM_BW,
+            collective_s=coll / LINK_BW,
+            flops=flops, bytes_accessed=bytes_accessed,
+            collective_bytes=coll, chips=chips,
+        )
+    ca = artifact.get("xla_cost_analysis_raw",
+                      artifact.get("cost_analysis", {}))
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    coll = float(artifact.get("collective_bytes", {}).get("total", 0.0))
+    return RooflineTerms(
+        compute_s=flops / (chips * PEAK_FLOPS),
+        memory_s=bytes_accessed / (chips * HBM_BW),
+        collective_s=coll / LINK_BW,
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        collective_bytes=coll,
+        chips=chips,
+    )
+
+
+def model_flops(arch_name: str, cfg, cell) -> float | None:
+    """6*N(_active)*D for LM train cells; None where the 6ND convention
+    does not define a number (inference steps use 2ND per token)."""
+    family = getattr(cfg, "name", "")
+    if not hasattr(cfg, "active_params_per_token"):
+        return None
+    tokens = cell["seq_len"] * cell["global_batch"]
+    n_active = cfg.active_params_per_token
+    if cell.kind == "train":
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n_active * tokens
+    if cell.kind == "decode":
+        return 2.0 * n_active * cell["global_batch"]
+    return None

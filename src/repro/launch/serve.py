@@ -1,0 +1,141 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <recsys-id>``.
+
+The deployment shape of the paper's system: train (or load) a retrieval
+backbone, run Algorithm 1's offline stage (batched dual solve on a user
+sample + KNN predictor fit), then serve batched requests through the
+integrated online path and report latency percentiles + compliance.
+
+Runs real inference on the available devices (reduced configs on CPU;
+the same code path pjit-shards on a pod — the compiled counterpart is
+the dry-run's retrieval_cand / serve_online cells).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch sasrec --requests 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.constraints import dcg_discount
+from repro.core.dual_solver import solve_dual_batch
+from repro.core.predictors import KNNLambdaPredictor
+from repro.core.ranking import rank_given_lambda
+from repro.data.batches import make_deepfm_batch, make_seqrec_batch
+from repro.models.recsys import RECSYS_REGISTRY
+from repro.optim import adam_init
+
+
+def _request_batch(cfg, B, seed):
+    k = jax.random.key(seed)
+    if cfg.kind == "deepfm":
+        return make_deepfm_batch(k, batch=B, n_sparse=cfg.n_sparse,
+                                 field_vocab=cfg.field_vocab)["ids"]
+    return make_seqrec_batch(k, batch=B, seq_len=cfg.seq_len,
+                             n_items=cfg.n_items, n_neg=1,
+                             kind=cfg.kind)["seq"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="sasrec",
+                    choices=["deepfm", "sasrec", "bert4rec", "mind"])
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--candidates", type=int, default=512)
+    ap.add_argument("--m2", type=int, default=50)
+    ap.add_argument("--constraints", type=int, default=5)
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--offline-users", type=int, default=256)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.make_config(full=False)
+    model = RECSYS_REGISTRY[cfg.kind](cfg)
+    params = model.init(jax.random.key(0))
+
+    # --- 1. backbone training (reduced scale on CPU) -----------------------
+    opt = adam_init(params)
+
+    @jax.jit
+    def train_step(p, o, b):
+        return model.train_step(p, o, b, lr=3e-3)
+
+    for step in range(args.train_steps):
+        if cfg.kind == "deepfm":
+            batch = make_deepfm_batch(jax.random.key(step), batch=64,
+                                      n_sparse=cfg.n_sparse,
+                                      field_vocab=cfg.field_vocab)
+        else:
+            batch = make_seqrec_batch(jax.random.key(step), batch=64,
+                                      seq_len=cfg.seq_len,
+                                      n_items=cfg.n_items, n_neg=15,
+                                      kind=cfg.kind)
+        params, opt, metrics = train_step(params, opt, batch)
+
+    # --- 2. offline stage: duals + predictor -------------------------------
+    n_cand = min(args.candidates, cfg.n_items)
+    m2, K = min(args.m2, n_cand), args.constraints
+    gamma = dcg_discount(m2)
+    cand_ids = jnp.arange(n_cand)
+    topics = (jax.random.uniform(jax.random.key(7), (K, n_cand)) < 0.15
+              ).astype(jnp.float32)
+    b = 0.08 * jnp.sum(gamma) * jnp.ones((K,))
+
+    off_req = _request_batch(cfg, args.offline_users, seed=10_000)
+    if cfg.kind == "deepfm":
+        u_off = model.retrieval_scores(params, off_req[:, 1:], cand_ids)
+        X_off = model.user_covariates(params, off_req)
+    else:
+        u_off = model.retrieval_scores(params, off_req, cand_ids)
+        X_off = model.user_covariates(params, off_req)
+    sol = solve_dual_batch(u_off, topics, b, gamma, m2=m2, num_iters=300)
+    knn = KNNLambdaPredictor.fit(X_off, sol.lam, k=10)
+
+    # --- 3. online loop -----------------------------------------------------
+    @jax.jit
+    def serve(params, req):
+        if cfg.kind == "deepfm":
+            u = model.retrieval_scores(params, req[:, 1:], cand_ids)
+            X = model.user_covariates(params, req)
+        else:
+            u = model.retrieval_scores(params, req, cand_ids)
+            X = model.user_covariates(params, req)
+        lam_hat = knn.predict(X)
+        return rank_given_lambda(u, topics, b, lam_hat, gamma, m2=m2)
+
+    warm = _request_batch(cfg, args.batch_size, seed=1)
+    jax.block_until_ready(serve(params, warm).perm)
+
+    lat, compl = [], []
+    n_batches = max(args.requests // args.batch_size, 1)
+    for i in range(n_batches):
+        req = _request_batch(cfg, args.batch_size, seed=20_000 + i)
+        t0 = time.perf_counter()
+        out = serve(params, req)
+        jax.block_until_ready(out.perm)
+        lat.append((time.perf_counter() - t0) * 1e3)
+        compl.append(float(out.compliant.mean()))
+    lat = np.asarray(lat)
+    print(json.dumps({
+        "arch": args.arch, "requests": n_batches * args.batch_size,
+        "batch_size": args.batch_size, "n_candidates": n_cand,
+        "m2": m2, "K": K,
+        "offline_compliance": round(float(sol.compliant.mean()), 3),
+        "p50_ms_batch": round(float(np.percentile(lat, 50)), 2),
+        "p99_ms_batch": round(float(np.percentile(lat, 99)), 2),
+        "ms_per_user_p50": round(float(np.percentile(lat, 50))
+                                 / args.batch_size, 4),
+        "online_compliance": round(float(np.mean(compl)), 3),
+        "within_50ms_budget": bool(np.percentile(lat, 99) <= 50.0),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

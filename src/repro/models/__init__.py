@@ -1,0 +1,15 @@
+from repro.models.transformer import (
+    LMConfig,
+    TransformerLM,
+    lm_logical_axes,
+)
+from repro.models.recsys import (
+    RecsysConfig,
+    BERT4Rec,
+    DeepFM,
+    MIND,
+    SASRec,
+    embedding_bag,
+)
+from repro.models.gnn import GNNConfig, MeshGraphNet, neighbor_sample
+from repro.models.recommender import PaperRecommender, RecommenderConfig

@@ -1,0 +1,414 @@
+"""Decoder-only transformer LM family (dense + MoE) — pjit-native.
+
+One parameterization, three lowered entry points (matching the assigned
+shape cells):
+
+  * ``train_step``   — causal-LM step: fwd (chunked-flash attention) +
+                       bwd + Adam update. Layers are scan-stacked (compact
+                       HLO, O(1) compile in depth) and remat'ed.
+  * ``prefill``      — build the KV cache for a prompt, return last-token
+                       logits (inference-prefill cells).
+  * ``decode_step``  — one new token against a KV cache of static length
+                       (inference-decode / long-context cells).
+
+Params are plain dicts with scan-stacked layer leaves (leading dim L).
+`lm_logical_axes` mirrors the params tree with per-dim logical axis names
+consumed by repro.distributed.sharding (FSDP over 'data', TP/EP over
+'model', DP over ('pod','data')).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_shard
+from repro.models.layers import (
+    apply_rope,
+    attn_axes,
+    attn_init,
+    chunked_causal_attention,
+    decode_attention,
+    dense_causal_attention,
+    dense_init,
+    embed_init,
+    ffn_apply,
+    ffn_axes,
+    ffn_init,
+    moe_apply,
+    moe_axes,
+    moe_init,
+    rms_norm,
+)
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 64
+    d_ff: int = 512
+    vocab: int = 1024
+    # MoE
+    moe: bool = False
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_moe: int = 256
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # 'onehot': (T*K, E) one-hot cumsum positions (baseline).
+    # 'sort':   sort-based positions + capacity-sharded dispatch buffers
+    #           (§Perf variant: no (T*K, E) matrices, no full-buffer
+    #           all-reduce).
+    moe_dispatch: str = "onehot"
+    # numerics / execution
+    rope_theta: float = 500_000.0
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    remat: str = "full"            # 'none' | 'full' | 'dots'
+    attn_chunk_q: int = 512
+    attn_chunk_kv: int = 512
+    attn_skip_masked: bool = True
+    dense_attn_threshold: int = 1024   # S <= this -> dense attention
+    tie_embeddings: bool = False
+    moment_dtype: Any = jnp.float32
+
+    @property
+    def params_per_layer(self) -> int:
+        D, H, KV, Dh = self.d_model, self.n_heads, self.n_kv_heads, self.d_head
+        attn = D * H * Dh + 2 * D * KV * Dh + H * Dh * D
+        if self.moe:
+            ffn = self.n_experts * 3 * D * self.d_ff_moe + D * self.n_experts
+            if self.shared_expert:
+                ffn += 3 * D * self.d_ff_moe
+        else:
+            ffn = 3 * D * self.d_ff
+        return attn + ffn + 2 * D
+
+    @property
+    def n_params(self) -> int:
+        embed = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * self.params_per_layer + embed + self.d_model
+
+    @property
+    def active_params_per_token(self) -> int:
+        """N_active for MODEL_FLOPS = 6 * N_active * D_tokens."""
+        D, H, KV, Dh = self.d_model, self.n_heads, self.n_kv_heads, self.d_head
+        attn = D * H * Dh + 2 * D * KV * Dh + H * Dh * D
+        if self.moe:
+            ffn = self.top_k * 3 * D * self.d_ff_moe
+            if self.shared_expert:
+                ffn += 3 * D * self.d_ff_moe
+        else:
+            ffn = 3 * D * self.d_ff
+        layer = attn + ffn
+        embed = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * layer + embed
+
+
+# --------------------------------------------------------------------------
+# Init + logical axes
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig) -> dict:
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "attn": attn_init(ka, cfg),
+    }
+    if cfg.moe:
+        p["moe"] = moe_init(kf, cfg)
+    else:
+        p["ffn"] = ffn_init(kf, cfg)
+    return p
+
+
+def lm_init(key, cfg: LMConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    # Stack per-layer params on a leading L axis (scan convention).
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    params = {
+        "embed": embed_init(ke, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_ln": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab),
+                                       cfg.param_dtype)
+    return params
+
+
+def lm_logical_axes(cfg: LMConfig) -> dict:
+    L = "layers"
+    layer_axes = {
+        "ln1": (L, "norm"),
+        "ln2": (L, "norm"),
+        "attn": {k: (L,) + v for k, v in attn_axes().items()},
+    }
+    if cfg.moe:
+        ma = moe_axes(cfg)
+        layer_axes["moe"] = jax.tree.map(
+            lambda v: (L,) + v, ma, is_leaf=lambda x: isinstance(x, tuple)
+        )
+    else:
+        layer_axes["ffn"] = {k: (L,) + v for k, v in ffn_axes().items()}
+    axes = {
+        "embed": ("vocab", "embed_fsdp"),
+        "layers": layer_axes,
+        "final_ln": ("norm",),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed_fsdp", "vocab")
+    return axes
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _attention_fwd(p_attn, x, cfg: LMConfig, positions):
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p_attn["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (x @ p_attn["wk"].astype(x.dtype)).reshape(B, S, KV, Dh)
+    v = (x @ p_attn["wv"].astype(x.dtype)).reshape(B, S, KV, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = logical_shard(q, "batch", "seq", "heads", None)
+    k = logical_shard(k, "batch", "seq", "kv_heads", None)
+    v = logical_shard(v, "batch", "seq", "kv_heads", None)
+    if S <= cfg.dense_attn_threshold:
+        out = dense_causal_attention(q, k, v)
+    else:
+        cq = min(cfg.attn_chunk_q, S)
+        ck = min(cfg.attn_chunk_kv, S)
+        out = chunked_causal_attention(
+            q, k, v, chunk_q=cq, chunk_kv=ck,
+            skip_masked_chunks=cfg.attn_skip_masked,
+        )
+    out = out.reshape(B, S, H * Dh)
+    return out @ p_attn["wo"].astype(x.dtype), (k, v)
+
+
+def _layer_fwd(p, x, cfg: LMConfig, positions):
+    h, kv = _attention_fwd(p["attn"], rms_norm(x, p["ln1"]), cfg, positions)
+    x = x + h
+    x = logical_shard(x, "batch", "seq", "embed")
+    hn = rms_norm(x, p["ln2"])
+    if cfg.moe:
+        h2, aux = _moe_dispatching(p["moe"], hn, cfg)
+    else:
+        h2, aux = ffn_apply(p["ffn"], hn), jnp.zeros((), jnp.float32)
+    x = x + h2
+    x = logical_shard(x, "batch", "seq", "embed")
+    return x, aux, kv
+
+
+def _moe_dispatching(p_moe, hn, cfg: LMConfig):
+    """Select the MoE execution path. 'shmap' (§Perf variant) requires an
+    active mesh whose 'model' axis divides n_experts; otherwise falls
+    back to the GSPMD-global dispatch."""
+    if cfg.moe_dispatch == "shmap":
+        from repro.distributed.sharding import current_mesh
+        from repro.models.layers import moe_apply_shmap
+        mesh = current_mesh()
+        ep = mesh.shape.get("model", 1) if mesh is not None else 1
+        if mesh is not None and cfg.n_experts % ep == 0:
+            return moe_apply_shmap(p_moe, hn, cfg, mesh)
+    return moe_apply(p_moe, hn, cfg)
+
+
+def _maybe_remat(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def lm_forward(params, tokens: Array, cfg: LMConfig) -> tuple[Array, Array]:
+    """tokens (B, S) -> (logits (B, S, V), aux_loss)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = logical_shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, p_layer):
+        y, aux, _ = _layer_fwd(p_layer, x, cfg, positions)
+        return y, aux
+
+    body = _maybe_remat(body, cfg)
+    x, aux = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_ln"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = logical_shard(logits, "batch", "seq", "vocab")
+    return logits, jnp.sum(aux)
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    """batch: {'tokens': (B,S), 'labels': (B,S)} -> (loss, metrics)."""
+    logits, aux = lm_forward(params, batch["tokens"], cfg)
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    # Label logit as a masked reduction (not take_along_axis): the vocab
+    # axis is sharded over 'model'; a gather along a sharded dim would
+    # make GSPMD all-gather the full (B, S, V) logits. The masked-sum
+    # stays elementwise-sharded and reduces with one tiny psum.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    label_mask = vocab_iota == batch["labels"][..., None]
+    label_logit = jnp.sum(jnp.where(label_mask, logits, 0.0), axis=-1)
+    nll = jnp.mean(lse - label_logit)
+    loss = nll + cfg.aux_loss_weight * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Train step
+# --------------------------------------------------------------------------
+
+def lm_train_step(params, opt_state, batch, cfg: LMConfig, *, lr: float = 3e-4,
+                  clip_norm: float = 1.0):
+    from repro.optim import adam_update
+    from repro.optim.clip import clip_by_global_norm
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm_loss(p, batch, cfg), has_aux=True
+    )(params)
+    grads, gnorm = clip_by_global_norm(grads, clip_norm)
+    params, opt_state = adam_update(grads, opt_state, params, lr=lr)
+    metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+    return params, opt_state, metrics
+
+
+# --------------------------------------------------------------------------
+# Inference: prefill + decode
+# --------------------------------------------------------------------------
+
+def lm_prefill(params, tokens: Array, cfg: LMConfig):
+    """Build the KV cache for a prompt.
+
+    Returns (cache {'k','v': (L, B, S, KV, Dh)}, last-token logits (B, V)).
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = logical_shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, p_layer):
+        y, _, (k, v) = _layer_fwd(p_layer, x, cfg, positions)
+        k = logical_shard(k, "kv_batch", "seq_shard", None, None)
+        v = logical_shard(v, "kv_batch", "seq_shard", None, None)
+        return y, (k, v)
+
+    body = _maybe_remat(body, cfg)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x_last = rms_norm(x[:, -1, :], params["final_ln"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x_last @ head.astype(x.dtype)).astype(jnp.float32)
+    return {"k": ks, "v": vs}, logits
+
+
+def make_decode_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def cache_logical_axes(cfg: LMConfig) -> dict:
+    return {
+        "k": ("layers", "kv_batch", "seq_shard", None, None),
+        "v": ("layers", "kv_batch", "seq_shard", None, None),
+    }
+
+
+def lm_decode_step(params, cache, token: Array, pos: Array, cfg: LMConfig):
+    """One decode step. token: (B,) int32; pos: scalar int32 (next write
+    index; tokens at cache positions <= pos are attended after the write).
+
+    Returns (logits (B, V) f32, updated cache).
+    """
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)[:, None, :]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def body(x, layer_in):
+        p, k_cache, v_cache = layer_in
+        hn = rms_norm(x, p["ln1"])
+        q = (hn @ p["attn"]["wq"].astype(x.dtype)).reshape(B, 1, H, Dh)
+        k = (hn @ p["attn"]["wk"].astype(x.dtype)).reshape(B, 1, KV, Dh)
+        v = (hn @ p["attn"]["wv"].astype(x.dtype)).reshape(B, 1, KV, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), pos, axis=1)
+        k_cache = logical_shard(k_cache, "kv_batch", "seq_shard", None, None)
+        v_cache = logical_shard(v_cache, "kv_batch", "seq_shard", None, None)
+        att = decode_attention(q, k_cache, v_cache, pos)
+        h = att.reshape(B, 1, H * Dh) @ p["attn"]["wo"].astype(x.dtype)
+        x = x + h
+        hn2 = rms_norm(x, p["ln2"])
+        if cfg.moe:
+            h2, _ = moe_apply(p["moe"], hn2, cfg)
+        else:
+            h2 = ffn_apply(p["ffn"], hn2)
+        return x + h2, (k_cache, v_cache)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x_last = rms_norm(x[:, 0, :], params["final_ln"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x_last @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs}
+
+
+class TransformerLM:
+    """Thin OO wrapper binding an LMConfig to the functional entry points."""
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return lm_init(key, self.cfg)
+
+    def logical_axes(self):
+        return lm_logical_axes(self.cfg)
+
+    def forward(self, params, tokens):
+        return lm_forward(params, tokens, self.cfg)
+
+    def loss(self, params, batch):
+        return lm_loss(params, batch, self.cfg)
+
+    def train_step(self, params, opt_state, batch, **kw):
+        return lm_train_step(params, opt_state, batch, self.cfg, **kw)
+
+    def prefill(self, params, tokens):
+        return lm_prefill(params, tokens, self.cfg)
+
+    def decode_step(self, params, cache, token, pos):
+        return lm_decode_step(params, cache, token, pos, self.cfg)
+
+    def make_cache(self, batch, max_seq, dtype=None):
+        return make_decode_cache(self.cfg, batch, max_seq, dtype)

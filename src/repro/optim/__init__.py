@@ -1,0 +1,9 @@
+from repro.optim.adafactor import (
+    FactoredState,
+    adafactor_init,
+    adafactor_update,
+)
+from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.optim.schedules import constant_schedule, cosine_schedule, linear_warmup_cosine
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.compression import compress_int8, decompress_int8, compressed_psum

@@ -1,0 +1,121 @@
+"""Factored second-moment Adam (Adafactor-style, Shazeer & Stern 2018).
+
+For a (n, m) parameter the second moment is stored as a rank-1 outer
+product of row/column statistics — O(n+m) instead of O(n·m). At kimi-k2
+scale that turns 2.06 TB of nu into ~0.3 GB, which is what lets the 1T
+config's optimizer state approach a single-pod fit (EXPERIMENTS.md
+§Dry-run fit math). First moment stays dense (optionally bf16).
+
+1-D (and scalar) params fall back to dense nu. Update rule matches Adam
+otherwise (beta2 bias correction included) so small-scale training curves
+are comparable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class FactoredState:
+    step: Array
+    mu: PyTree          # dense first moments
+    nu_row: PyTree      # (..., n) row stats for >=2-D leaves, else dense nu
+    nu_col: PyTree      # (..., m) col stats for >=2-D leaves, else None-like
+
+
+def _is_factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params: PyTree, moment_dtype=jnp.bfloat16) -> FactoredState:
+    def mu0(p):
+        return jnp.zeros(p.shape, moment_dtype)
+
+    def row0(p):
+        if _is_factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)     # dense nu fallback
+
+    def col0(p):
+        if _is_factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)        # placeholder
+
+    return FactoredState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(mu0, params),
+        nu_row=jax.tree.map(row0, params),
+        nu_col=jax.tree.map(col0, params),
+    )
+
+
+def adafactor_update(
+    grads: PyTree,
+    state: FactoredState,
+    params: PyTree,
+    *,
+    lr: float | Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-30,
+    eps_scale: float = 1e-8,
+) -> tuple[PyTree, FactoredState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1.0 - b1) * g32
+        g2 = g32 * g32 + eps
+        if _is_factored(p):
+            vr32 = vr * b2 + (1.0 - b2) * jnp.mean(g2, axis=-1)
+            vc32 = vc * b2 + (1.0 - b2) * jnp.mean(g2, axis=-2)
+            # rank-1 reconstruction: v ~ vr vc / mean(vr)
+            denom = jnp.mean(vr32, axis=-1, keepdims=True) + eps
+            v_hat = (vr32[..., None] * vc32[..., None, :]) / denom[..., None]
+        else:
+            vr32 = vr * b2 + (1.0 - b2) * g2
+            vc32 = vc
+            v_hat = vr32
+        u = (m32 / bc1) / (jnp.sqrt(v_hat / bc2) + eps_scale)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), vr32, vc32
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_r = treedef.flatten_up_to(state.nu_row)
+    flat_c = treedef.flatten_up_to(state.nu_col)
+    out = [upd(g, m, r, c, p)
+           for g, m, r, c, p in zip(flat_g, flat_m, flat_r, flat_c, flat_p)]
+    return treedef.unflatten([o[0] for o in out]), FactoredState(
+        step=step,
+        mu=treedef.unflatten([o[1] for o in out]),
+        nu_row=treedef.unflatten([o[2] for o in out]),
+        nu_col=treedef.unflatten([o[3] for o in out]),
+    )
+
+
+def state_bytes(params: PyTree, *, factored: bool) -> int:
+    """Optimizer-state bytes for the fit math (EXPERIMENTS.md §Dry-run)."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        total += p.size * 2                                   # mu bf16
+        if factored and p.ndim >= 2:
+            total += (int(jnp.prod(jnp.asarray(p.shape[:-1])))
+                      + int(jnp.prod(jnp.asarray(p.shape[:-2] + p.shape[-1:])))
+                      ) * 4
+        else:
+            total += p.size * 4                               # dense nu f32
+    return total

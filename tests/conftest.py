@@ -1,0 +1,11 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benchmarks must see
+# the single real CPU device. Only launch/dryrun.py forces 512 host devices.
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

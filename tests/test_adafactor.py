@@ -1,0 +1,54 @@
+"""Factored second-moment optimizer (optim/adafactor.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adafactor import (
+    adafactor_init,
+    adafactor_update,
+    state_bytes,
+)
+
+
+def test_converges_quadratic():
+    params = {"w": jnp.asarray([[5.0, -3.0], [2.0, -4.0]])}
+    st = adafactor_init(params)
+    for _ in range(400):
+        g = {"w": 2 * params["w"]}
+        params, st = adafactor_update(g, st, params, lr=0.05)
+    np.testing.assert_allclose(params["w"], 0.0, atol=5e-2)
+
+
+def test_matches_adam_direction_early():
+    """First-step update equals lr in magnitude (like Adam)."""
+    params = {"w": jnp.ones((4, 8))}
+    g = {"w": jnp.full((4, 8), 3.0)}
+    st = adafactor_init(params)
+    new, _ = adafactor_update(g, st, params, lr=0.1)
+    np.testing.assert_allclose(np.abs(np.asarray(new["w"] - params["w"])),
+                               0.1, rtol=1e-3)
+
+
+def test_mixed_rank_pytree():
+    params = {"mat": jnp.ones((6, 4)), "vec": jnp.ones((5,)),
+              "scalar": jnp.ones(())}
+    st = adafactor_init(params)
+    g = jax.tree.map(lambda p: 0.5 * p, params)
+    new, st2 = adafactor_update(g, st, params, lr=0.01)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)):
+        assert a.shape == b.shape
+        assert bool(jnp.all(jnp.isfinite(a)))
+    assert int(st2.step) == 1
+
+
+def test_memory_factorization_wins():
+    """The point of the exercise: 1T-scale second moments collapse."""
+    params = {"w": jnp.zeros((4096, 4096), jnp.bfloat16)}
+    dense = state_bytes(params, factored=False)
+    fact = state_bytes(params, factored=True)
+    # mu is the same; nu goes from n*m*4 to (n+m)*4
+    assert fact < dense * 0.35
+    # kimi-k2-scale estimate: nu for a 7168x2048 expert weight is ~37 KB
+    # factored vs 58 MB dense
+    assert (7168 + 2048) * 4 < 7168 * 2048 * 4 / 1000

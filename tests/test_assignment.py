@@ -1,0 +1,83 @@
+"""Assignment algorithms vs the brute-force oracle + rearrangement props."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import (
+    assignment_value_dense,
+    auction,
+    brute_force,
+    greedy_half_approx,
+    perm_to_matrix,
+    rank_by_sort,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand_S(seed, m1, m2):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(m1, m2)).astype(np.float32)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(2, 6))
+def test_auction_matches_brute_force(seed, m1, m2):
+    if m2 > m1:
+        m1, m2 = m2, m1
+    S = _rand_S(seed, m1, m2)
+    perm_bf = brute_force(S)
+    perm_auc = np.asarray(auction(jnp.asarray(S), eps=1e-4))
+    v_bf = float(assignment_value_dense(jnp.asarray(S), jnp.asarray(perm_bf)))
+    v_auc = float(assignment_value_dense(jnp.asarray(S), jnp.asarray(perm_auc)))
+    # auction is eps-optimal
+    assert v_auc >= v_bf - 1e-2
+    assert len(set(perm_auc.tolist())) == m2  # valid matching
+
+
+@given(st.integers(0, 10_000), st.integers(2, 7), st.integers(2, 7))
+def test_greedy_half_approximation_bound(seed, m1, m2):
+    if m2 > m1:
+        m1, m2 = m2, m1
+    S = np.abs(_rand_S(seed, m1, m2))  # nonneg weights for the 1/2 bound
+    perm_g = np.asarray(greedy_half_approx(jnp.asarray(S)))
+    perm_bf = brute_force(S)
+    v_g = float(assignment_value_dense(jnp.asarray(S), jnp.asarray(perm_g)))
+    v_bf = float(assignment_value_dense(jnp.asarray(S), jnp.asarray(perm_bf)))
+    assert v_g >= 0.5 * v_bf - 1e-5
+    assert len(set(perm_g.tolist())) == m2
+
+
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(1, 8))
+def test_rank_by_sort_optimal_for_fixed_discounting(seed, m1, m2):
+    """Rearrangement inequality: sorting s equals the brute-force optimum
+    of S = s gamma^T (paper Sec. 3.2.1)."""
+    if m2 > m1:
+        m2 = m1
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=(m1,)).astype(np.float32)
+    gamma = np.sort(rng.uniform(0.05, 1.0, size=(m2,)))[::-1].copy()
+    S = np.outer(s, gamma)
+    perm_sort = np.asarray(rank_by_sort(jnp.asarray(s), m2))
+    perm_bf = brute_force(S)
+    v_sort = float(assignment_value_dense(jnp.asarray(S), jnp.asarray(perm_sort)))
+    v_bf = float(assignment_value_dense(jnp.asarray(S), jnp.asarray(perm_bf)))
+    assert v_sort >= v_bf - 1e-5
+
+
+def test_perm_to_matrix_roundtrip():
+    perm = jnp.asarray([3, 0, 2])
+    P = perm_to_matrix(perm, 5)
+    assert P.shape == (5, 3)
+    np.testing.assert_allclose(np.asarray(P).sum(axis=0), 1.0)
+    S = jnp.arange(15.0).reshape(5, 3)
+    assert float(jnp.sum(S * P)) == float(assignment_value_dense(S, perm))
+
+
+def test_unbalanced_sort_takes_top_m2():
+    s = jnp.asarray([0.1, 5.0, -1.0, 3.0])
+    perm = rank_by_sort(s, 2)
+    np.testing.assert_array_equal(np.asarray(perm), [1, 3])

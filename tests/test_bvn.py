@@ -1,0 +1,66 @@
+"""Birkhoff-von Neumann decomposition (the paper's primal rounding)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import perm_to_matrix
+from repro.core.bvn import (
+    bvn_decompose,
+    is_doubly_stochastic,
+    sample_ranking,
+    sinkhorn_project,
+)
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _random_ds(seed, m):
+    rng = np.random.default_rng(seed)
+    M = rng.uniform(0.1, 1.0, size=(m, m))
+    return np.asarray(sinkhorn_project(jnp.asarray(M), iters=400))
+
+
+@given(st.integers(0, 500), st.integers(2, 7))
+def test_decomposition_reconstructs(seed, m):
+    P = _random_ds(seed, m)
+    coeffs, perms = bvn_decompose(P)
+    assert np.isclose(coeffs.sum(), 1.0, atol=1e-6)
+    R = np.zeros((m, m))
+    for c, perm in zip(coeffs, perms):
+        R += c * np.asarray(perm_to_matrix(jnp.asarray(perm), m))
+    np.testing.assert_allclose(R, P, atol=5e-3)
+    assert len(coeffs) <= (m - 1) ** 2 + 1
+
+
+def test_permutation_matrix_is_its_own_decomposition():
+    perm = np.asarray([2, 0, 1])
+    P = np.asarray(perm_to_matrix(jnp.asarray(perm), 3))
+    coeffs, perms = bvn_decompose(P)
+    assert len(coeffs) == 1
+    np.testing.assert_array_equal(perms[0], perm)
+
+
+def test_sampling_matches_marginals():
+    P = _random_ds(7, 4)
+    coeffs, perms = bvn_decompose(P)
+    counts = np.zeros((4, 4))
+    n = 3000
+    for i in range(n):
+        perm = np.asarray(sample_ranking(jax.random.key(i), coeffs, perms))
+        counts[perm, np.arange(4)] += 1
+    np.testing.assert_allclose(counts / n, P, atol=0.05)
+
+
+def test_rejects_non_ds():
+    with pytest.raises(ValueError):
+        bvn_decompose(np.ones((3, 3)))
+
+
+def test_sinkhorn_produces_ds():
+    M = np.random.default_rng(0).uniform(0.5, 2.0, size=(6, 6))
+    P = sinkhorn_project(jnp.asarray(M), iters=500)
+    assert is_doubly_stochastic(P, atol=1e-4)

@@ -1,0 +1,89 @@
+"""Synthetic data generators: statistics, determinism, learnability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.batches import make_csr_graph, make_lm_batch, make_seqrec_batch
+from repro.data.synthetic import (
+    YOW_TOPIC_RATE,
+    make_interactions,
+    make_movielens_corpus,
+    make_yow_corpus,
+    movielens_constraints,
+    yow_constraints,
+)
+from repro.core.constraints import dcg_discount
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def test_interactions_ratings_in_range():
+    d = make_interactions(jax.random.key(0), n_users=50, n_items=60,
+                          n_obs=2000)
+    r = np.asarray(d.rating)
+    assert r.min() >= 1 and r.max() <= 5
+    assert len(np.unique(r)) >= 3   # not degenerate
+
+
+def test_generators_deterministic():
+    a = make_interactions(jax.random.key(5), n_users=20, n_items=30, n_obs=100)
+    b = make_interactions(jax.random.key(5), n_users=20, n_items=30, n_obs=100)
+    np.testing.assert_array_equal(a.rating, b.rating)
+
+
+def test_movielens_topic_rates():
+    c = make_movielens_corpus(jax.random.key(1), 20000)
+    rates = np.asarray(c.topics).mean(axis=1)
+    np.testing.assert_allclose(rates, 0.05, atol=0.01)
+    years = np.asarray(c.extra[0]) * 100 + 1990
+    assert years.min() >= 1950 and years.max() < 2020
+
+
+def test_yow_topic_rates_match_table_1b():
+    c = make_yow_corpus(jax.random.key(2), 50000)
+    rates = np.asarray(c.topics).mean(axis=1)
+    np.testing.assert_allclose(rates, YOW_TOPIC_RATE, atol=0.01)
+
+
+@given(st.sampled_from([50, 500, 1000]))
+def test_constraint_signs_and_scales(m2):
+    gamma = dcg_discount(m2)
+    keyc = jax.random.key(3)
+    ml = movielens_constraints(make_movielens_corpus(keyc, 3000),
+                               jnp.arange(1000), gamma, m2)
+    assert ml.a.shape == (5, 1000)
+    assert float(ml.b[-1]) == 0.0            # release-year threshold
+    yw = yow_constraints(make_yow_corpus(keyc, 3000), jnp.arange(1000),
+                         gamma, m2)
+    assert yw.a.shape == (8, 1000)
+    # <= rows were sign-flipped: their attribute rows are <= 0
+    assert float(yw.a[2].max()) <= 0.0        # business is a <= constraint
+    assert float(yw.a[0].min()) >= 0.0        # sci&tech is a >= constraint
+
+
+def test_lm_batch_next_token_structure():
+    b = make_lm_batch(jax.random.key(4), batch=4, seq=32, vocab=101)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert int(b["tokens"].max()) < 101
+
+
+def test_seqrec_batches_within_vocab():
+    for kind in ("sasrec", "bert4rec", "mind"):
+        b = make_seqrec_batch(jax.random.key(6), batch=4, seq_len=12,
+                              n_items=77, n_neg=5, kind=kind, n_mask=3)
+        for k, v in b.items():
+            assert int(v.max()) < 77, (kind, k)
+            assert int(v.min()) >= 0
+
+
+def test_csr_graph_valid():
+    indptr, indices = make_csr_graph(jax.random.key(7), n_nodes=200,
+                                     avg_degree=4)
+    assert indptr.shape == (201,)
+    assert int(indptr[0]) == 0
+    assert int(indptr[-1]) == indices.shape[0]
+    assert bool(jnp.all(jnp.diff(indptr) >= 1))  # min degree 1
+    assert int(indices.max()) < 200

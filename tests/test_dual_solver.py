@@ -1,0 +1,92 @@
+"""Dual solver vs the exact constrained brute-force oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.assignment import brute_force_constrained
+from repro.core.constraints import ConstraintSet, dcg_discount, make_constraints
+from repro.core.dual_solver import serve_rank, solve_dual, solve_dual_batch
+
+
+def _instance(seed, m1=8, m2=4, K=2):
+    """Small feasible constrained-ranking instance."""
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(1, 5, size=m1).astype(np.float32)
+    gamma = np.asarray(dcg_discount(m2))
+    a = (rng.uniform(size=(K, m1)) < 0.4).astype(np.float32)
+    # threshold: half of what the best single placement could achieve
+    b = np.asarray([0.5 * gamma[0] * max(a[k].max(), 0.1) for k in range(K)],
+                   np.float32)
+    return u, a, b, gamma
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_dual_solution_near_oracle(seed):
+    u, a, b, gamma = _instance(seed)
+    m2 = len(gamma)
+    sol = solve_dual(jnp.asarray(u), ConstraintSet(a=jnp.asarray(a), b=jnp.asarray(b)),
+                     jnp.asarray(gamma), m2=m2, num_iters=300)
+    A = np.stack([np.outer(a[k], gamma) for k in range(len(b))])
+    U = np.outer(u, gamma)
+    perm_bf, v_bf = brute_force_constrained(U, A, b, np.ones(len(b)))
+    assert perm_bf is not None, "instance should be feasible"
+    # compliant and within 2% of the exact constrained optimum
+    assert bool(sol.compliant)
+    assert float(sol.primal_value) >= v_bf - 0.02 * abs(v_bf)
+    # dual value upper-bounds the constrained optimum (weak duality)
+    assert float(sol.dual_value) >= v_bf - 1e-3
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_duality_gap_nonnegative_and_small(seed):
+    u, a, b, gamma = _instance(seed, m1=20, m2=8, K=3)
+    sol = solve_dual(jnp.asarray(u), ConstraintSet(a=jnp.asarray(a), b=jnp.asarray(b)),
+                     jnp.asarray(gamma), m2=8, num_iters=400)
+    assert float(sol.gap) >= -1e-3
+    assert float(sol.gap) <= 0.1 * abs(float(sol.dual_value)) + 0.5
+
+
+def test_batch_matches_single():
+    u0, a0, b0, gamma = _instance(0)
+    u1, a1, _, _ = _instance(1)
+    ub = jnp.stack([jnp.asarray(u0), jnp.asarray(u1)])
+    ab = jnp.stack([jnp.asarray(a0), jnp.asarray(a1)])
+    sol_b = solve_dual_batch(ub, ab, jnp.asarray(b0), jnp.asarray(gamma),
+                             m2=4, num_iters=150)
+    sol_0 = solve_dual(jnp.asarray(u0),
+                       ConstraintSet(a=jnp.asarray(a0), b=jnp.asarray(b0)),
+                       jnp.asarray(gamma), m2=4, num_iters=150)
+    np.testing.assert_allclose(sol_b.lam[0], sol_0.lam, rtol=1e-5, atol=1e-6)
+    assert sol_b.lam.shape == (2, len(b0))
+
+
+def test_scale_invariance():
+    """lambda scales linearly with utility scale (the normalized solver)."""
+    u, a, b, gamma = _instance(3)
+    cs = ConstraintSet(a=jnp.asarray(a), b=jnp.asarray(b))
+    sol1 = solve_dual(jnp.asarray(u), cs, jnp.asarray(gamma), m2=4, num_iters=200)
+    sol2 = solve_dual(jnp.asarray(u) * 100.0, cs, jnp.asarray(gamma), m2=4,
+                      num_iters=200)
+    np.testing.assert_allclose(sol2.lam, sol1.lam * 100.0, rtol=1e-4, atol=1e-4)
+
+
+def test_infeasible_flagged_not_crashed():
+    u = jnp.asarray(np.random.default_rng(0).uniform(1, 5, 6), jnp.float32)
+    a = jnp.zeros((1, 6))          # constraint attribute absent everywhere
+    b = jnp.asarray([1.0])         # ... but exposure >= 1 required
+    gamma = dcg_discount(3)
+    sol = solve_dual(u, ConstraintSet(a=a, b=b), gamma, m2=3, num_iters=100)
+    assert not bool(sol.compliant)
+    assert np.isfinite(float(sol.dual_value))
+
+
+def test_serve_rank_hot_path():
+    u, a, b, gamma = _instance(2)
+    lam = jnp.asarray([0.5, 0.2])
+    perm, util = serve_rank(jnp.asarray(u), jnp.asarray(a), lam,
+                            jnp.asarray(gamma), m2=4)
+    assert perm.shape == (4,)
+    s = np.asarray(u) + (1 + 1e-4) * (np.asarray(lam) @ np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(perm), np.argsort(-s)[:4])

@@ -1,0 +1,90 @@
+"""The trip-count-aware HLO cost walker (launch/hlo_cost.py)."""
+
+import pytest
+
+from repro.launch.hlo_cost import (
+    _buffer_bytes,
+    _trip_count,
+    hlo_cost,
+    parse_module,
+)
+
+TOY = """\
+HloModule jit_f
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %w = f32[128,128]{1,0} constant({...})
+  %ag = f32[8,256]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+  %y = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,128]{1,0}) tuple(%i2, %y)
+}
+
+%cond (p2: (s32[], f32[8,128])) -> pred[] {
+  %p2 = (s32[], f32[8,128]{1,0}) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]{1,0}) tuple(%zero, %a)
+  %w2 = (s32[], f32[8,128]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_buffer_bytes():
+    assert _buffer_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert _buffer_bytes("bf16[4,4]") == 32
+    assert _buffer_bytes("(f32[2], s32[3])") == 8 + 12
+    assert _buffer_bytes("pred[]") == 1
+
+
+def test_parse_module_structure():
+    comps, entry = parse_module(TOY)
+    assert set(comps) == {"body", "cond", "main"}
+    assert entry == "main"
+    ops = {o.op for o in comps["body"].ops}
+    assert {"dot", "all-gather", "add"} <= ops
+
+
+def test_trip_count_from_condition():
+    comps, _ = parse_module(TOY)
+    assert _trip_count(comps["cond"]) == 7
+
+
+def test_cost_multiplies_loops():
+    r = hlo_cost(TOY)
+    # dot flops per iter: 2 * (8*128) * 128 ; x7 iterations
+    assert r["flops"] == 7 * 2 * 8 * 128 * 128
+    # all-gather result bytes per iter x7
+    assert r["collectives"]["all-gather"] == 7 * 8 * 256 * 4
+    assert r["collectives"]["total"] == r["collectives"]["all-gather"]
+    assert r["bytes"] > 0
+
+
+def test_dus_and_gather_counted_at_touched_size():
+    hlo = """\
+HloModule m
+
+ENTRY %main (t: f32[1000,64], i: s32[5,1], u: f32[1,64]) -> f32[5,64] {
+  %t = f32[1000,64]{1,0} parameter(0)
+  %i = s32[5,1]{1,0} parameter(1)
+  %u = f32[1,64]{1,0} parameter(2)
+  %z = s32[] constant(0)
+  %dus = f32[1000,64]{1,0} dynamic-update-slice(%t, %u, %z, %z)
+  ROOT %g = f32[5,64]{1,0} gather(%dus, %i), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,64}
+}
+"""
+    r = hlo_cost(hlo)
+    # DUS: 2 * update bytes; gather: 2 * result + indices — NOT the table
+    expected = 2 * 64 * 4 + (2 * 5 * 64 * 4 + 5 * 4)
+    assert r["bytes"] == expected

@@ -1,0 +1,121 @@
+"""LM family: shapes, numerics, decode==forward consistency, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.batches import make_lm_batch
+from repro.models.transformer import LMConfig, TransformerLM
+from repro.optim import adam_init
+
+CFG = LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_head=8,
+               d_ff=64, vocab=64, dtype=jnp.float32, param_dtype=jnp.float32,
+               remat="none", dense_attn_threshold=4096)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = TransformerLM(CFG)
+    return model, model.init(jax.random.key(0))
+
+
+def test_forward_shapes_and_finite(model_and_params):
+    model, params = model_and_params
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, CFG.vocab)
+    logits, aux = model.forward(params, tokens)
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(model_and_params):
+    """Changing a future token must not change past logits."""
+    model, params = model_and_params
+    t1 = jax.random.randint(jax.random.key(2), (1, 12), 0, CFG.vocab)
+    t2 = t1.at[0, 8].set((t1[0, 8] + 1) % CFG.vocab)
+    l1, _ = model.forward(params, t1)
+    l2, _ = model.forward(params, t2)
+    np.testing.assert_allclose(l1[0, :8], l2[0, :8], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, 8:], l2[0, 8:], atol=1e-6)
+
+
+def test_chunked_attention_matches_dense():
+    cfg = LMConfig(**{**CFG.__dict__, "dense_attn_threshold": 0,
+                      "attn_chunk_q": 4, "attn_chunk_kv": 4})
+    cfg_dense = CFG
+    model_c, model_d = TransformerLM(cfg), TransformerLM(cfg_dense)
+    params = model_d.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(3), (2, 16), 0, CFG.vocab)
+    lc, _ = model_c.forward(params, tokens)
+    ld, _ = model_d.forward(params, tokens)
+    np.testing.assert_allclose(lc, ld, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_forward(model_and_params):
+    """prefill + decode_step token-by-token == full forward logits."""
+    model, params = model_and_params
+    B, S = 2, 10
+    tokens = jax.random.randint(jax.random.key(4), (B, S), 0, CFG.vocab)
+    full_logits, _ = model.forward(params, tokens)
+
+    prompt = tokens[:, :4]
+    cache_seed = model.make_cache(B, S)
+    cache, logits_p = model.prefill(params, prompt)
+    # copy prefill cache into the static decode cache
+    cache_full = {
+        "k": cache_seed["k"].at[:, :, :4].set(cache["k"]),
+        "v": cache_seed["v"].at[:, :, :4].set(cache["v"]),
+    }
+    np.testing.assert_allclose(logits_p, full_logits[:, 3], rtol=2e-4, atol=2e-4)
+    for pos in range(4, S):
+        logits_d, cache_full = model.decode_step(
+            params, cache_full, tokens[:, pos], jnp.asarray(pos))
+        np.testing.assert_allclose(
+            logits_d, full_logits[:, pos], rtol=2e-4, atol=2e-4,
+            err_msg=f"pos {pos}")
+
+
+def test_train_loss_decreases(model_and_params):
+    model, params = model_and_params
+    opt = adam_init(params)
+    batch = make_lm_batch(jax.random.key(5), batch=8, seq=32, vocab=CFG.vocab)
+
+    @jax.jit
+    def step(p, o, b):
+        return model.train_step(p, o, b, lr=1e-2)
+
+    losses = []
+    for i in range(30):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::10]
+    assert np.isfinite(losses).all()
+
+
+def test_moe_forward_and_train():
+    cfg = LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_head=8,
+                   d_ff=64, vocab=64, moe=True, n_experts=4, top_k=2,
+                   d_ff_moe=32, shared_expert=True,
+                   dtype=jnp.float32, param_dtype=jnp.float32, remat="none",
+                   dense_attn_threshold=4096)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    logits, aux = model.forward(params, tokens)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert float(aux) > 0  # load-balance loss present
+    opt = adam_init(params)
+    batch = make_lm_batch(jax.random.key(2), batch=4, seq=16, vocab=cfg.vocab)
+    p2, _, metrics = model.train_step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    diff = jax.tree.reduce(
+        lambda acc, x: acc + float(jnp.sum(jnp.abs(x))),
+        jax.tree.map(lambda a, b: a - b, p2, params), 0.0)
+    assert diff > 0
+
+
+def test_param_count_formula(model_and_params):
+    model, params = model_and_params
+    n_actual = sum(x.size for x in jax.tree.leaves(params))
+    assert n_actual == CFG.n_params

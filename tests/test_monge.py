@@ -1,0 +1,56 @@
+"""(Inverse) Monge structure properties (paper Appendix A)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.monge import is_inverse_monge, is_permuted_inverse_monge, monge_defect
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 10_000), st.integers(2, 10), st.integers(2, 10))
+def test_outer_product_of_sorted_vectors_is_inverse_monge(seed, m, n):
+    rng = np.random.default_rng(seed)
+    s = np.sort(rng.normal(size=m))[::-1]
+    gamma = np.sort(rng.uniform(0.01, 1, size=n))[::-1]
+    S = jnp.asarray(np.outer(s, gamma))
+    assert bool(is_inverse_monge(S))
+    assert float(monge_defect(S)) == 0.0
+
+
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(2, 8))
+def test_fixed_discounting_is_permuted_inverse_monge(seed, m, n):
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=m)          # arbitrary order
+    gamma = np.sort(rng.uniform(0.01, 1, size=n))[::-1]
+    S = jnp.asarray(np.outer(s, gamma))
+    assert bool(is_permuted_inverse_monge(S))
+
+
+@given(st.integers(0, 10_000), st.integers(3, 8))
+def test_monge_closure_under_nonneg_combination(seed, m):
+    """Appendix A: tau*C, C + D, and F = C + alpha_i + beta_j stay
+    inverse Monge."""
+    rng = np.random.default_rng(seed)
+
+    def rand_monge():
+        s = np.sort(rng.normal(size=m))[::-1]
+        g = np.sort(rng.uniform(0.01, 1, size=m))[::-1]
+        return np.outer(s, g)
+
+    C, D = rand_monge(), rand_monge()
+    tau = rng.uniform(0, 5)
+    assert bool(is_inverse_monge(jnp.asarray(tau * C)))
+    assert bool(is_inverse_monge(jnp.asarray(C + D)))
+    alpha = rng.normal(size=m)
+    beta = rng.normal(size=m)
+    F = C + alpha[:, None] + beta[None, :]
+    assert bool(is_inverse_monge(jnp.asarray(F)))
+
+
+def test_non_monge_detected():
+    S = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])  # anti-diagonal: not inv-Monge
+    assert not bool(is_inverse_monge(S))
+    assert float(monge_defect(S)) > 0

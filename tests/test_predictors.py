@@ -1,0 +1,86 @@
+"""Shadow-price predictors: exactness, consistency, registry interface."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.predictors import (
+    KNNLambdaPredictor,
+    LinearLambdaPredictor,
+    MeanLambdaPredictor,
+    MLPLambdaPredictor,
+    knn_predict,
+)
+
+
+def _data(seed=0, n=200, d=6, K=3):
+    rng = np.random.default_rng(seed)
+    # X >= 0 and W >= 0 keep lam = XW^T + noise positive without clipping
+    # (clipping would make the map non-linear and break the ridge test)
+    X = rng.uniform(0, 1, size=(n, d)).astype(np.float32)
+    W = rng.uniform(0, 1, size=(K, d)).astype(np.float32)
+    lam = np.maximum(X @ W.T + 0.05 * rng.normal(size=(n, K)), 0).astype(np.float32)
+    return jnp.asarray(X), jnp.asarray(lam)
+
+
+def test_mean_predictor():
+    X, lam = _data()
+    p = MeanLambdaPredictor.fit(X, lam)
+    out = p.predict(X[:5])
+    np.testing.assert_allclose(out, jnp.broadcast_to(jnp.mean(lam, 0), (5, 3)),
+                               rtol=1e-5)
+
+
+def test_knn_exact_match_returns_training_value():
+    """sklearn 'distance'-weights semantics: query == db point -> that
+    point's target exactly."""
+    X, lam = _data()
+    p = KNNLambdaPredictor.fit(X, lam, k=10)
+    out = p.predict(X[:20])
+    np.testing.assert_allclose(out, lam[:20], rtol=1e-4, atol=1e-4)
+
+
+def test_knn_interpolates_between_neighbors():
+    X = jnp.asarray([[0.0], [1.0]])
+    lam = jnp.asarray([[0.0], [1.0]])
+    out = knn_predict(X, lam, jnp.asarray([[0.25]]), k=2)
+    # inverse-distance weights: w = (4, 4/3) -> normalized (0.75, 0.25)
+    np.testing.assert_allclose(out, [[0.25]], rtol=1e-4)
+
+
+def test_knn_consistency_improves_with_data():
+    """KNN regression is consistent: more data -> lower error on E[lam|X].
+    Train and test must come from ONE draw (same ground-truth map)."""
+    X_all, lam_all = _data(seed=1, n=1000)
+    Xt, lamt = X_all[-100:], lam_all[-100:]
+    errs = []
+    for n in (50, 900):
+        p = KNNLambdaPredictor.fit(X_all[:n], lam_all[:n], k=10)
+        errs.append(float(jnp.mean((p.predict(Xt) - lamt) ** 2)))
+    assert errs[1] < errs[0]
+
+
+def test_linear_recovers_linear_map():
+    X, lam = _data(seed=2, n=500)
+    p = LinearLambdaPredictor.fit(X, lam, l2=1e-6)
+    pred = p.predict(X)
+    resid = float(jnp.mean((pred - lam) ** 2))
+    base = float(jnp.mean((lam - jnp.mean(lam, 0)) ** 2))
+    assert resid < 0.1 * base
+
+
+def test_mlp_trains():
+    X, lam = _data(seed=3, n=300)
+    p = MLPLambdaPredictor.fit(X, lam, num_steps=200, d_hidden=32)
+    pred = p.predict(X)
+    base = float(jnp.mean((lam - jnp.mean(lam, 0)) ** 2))
+    assert float(jnp.mean((pred - lam) ** 2)) < 0.5 * base
+    assert bool(jnp.all(pred >= 0))  # softplus head: dual feasible
+
+
+def test_predictors_are_pytrees():
+    X, lam = _data()
+    p = KNNLambdaPredictor.fit(X, lam, k=5)
+    leaves = jax.tree.leaves(p)
+    assert len(leaves) >= 2  # X_db, lam_db ride along for donation/sharding

@@ -1,0 +1,119 @@
+"""End-to-end behaviour of the paper's system (Algorithm 1).
+
+Builds a synthetic MovieLens-style experiment (matched statistics), runs
+the full offline stage (batched dual solve -> predictor fit -> eps
+tuning) and the online stage for all strategies, and asserts the paper's
+QUALITATIVE claims:
+
+  * compliance ordering: none < {mean, knn} <= optimal (Fig. 2);
+  * the utility cost of constraints is small (Tables 2-3: utility deltas
+    across strategies are marginal);
+  * KNN serving is orders faster than per-user optimization (timed on
+    CPU; the architectural claim, not a 50 ms wall-clock assertion).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ranking import fit_pipeline, rank_with_strategy
+from repro.data.synthetic import build_experiment
+
+STRATEGIES = ("none", "mean", "knn", "optimal")
+
+
+@pytest.fixture(scope="module")
+def experiment():
+    exp = build_experiment(
+        jax.random.key(11), dataset="movielens", n_users=80, n_items=500,
+        m1=200, m2=50, recommender_epochs=2)
+    u_tr, X_tr, a_tr = exp.split("train")
+    pipe = fit_pipeline(X_tr, u_tr, a_tr, exp.b, exp.gamma, m2=exp.m2,
+                        num_iters=400)
+    return exp, pipe
+
+
+@pytest.fixture(scope="module")
+def results(experiment):
+    exp, pipe = experiment
+    u_te, X_te, a_te = exp.split("test")
+    out = {}
+    for s in STRATEGIES:
+        res = rank_with_strategy(pipe, s, X_te, u_te, a_te, exp.b,
+                                 dual_iters=400)
+        out[s] = {
+            "compliance": float(res.compliant.mean()),
+            "utility": float(res.utility.mean()),
+        }
+    return out
+
+
+def test_compliance_ordering(results):
+    c = {s: results[s]["compliance"] for s in STRATEGIES}
+    assert c["optimal"] >= 0.9, c
+    assert c["knn"] >= c["none"] + 0.3, c
+    assert c["mean"] >= c["none"], c
+    assert c["optimal"] >= c["knn"] - 0.05, c
+
+
+def test_utility_cost_of_constraints_is_small(results):
+    """Paper: 'the price of imposing diversity constraints is often low'."""
+    u_none = results["none"]["utility"]
+    for s in ("mean", "knn", "optimal"):
+        assert results[s]["utility"] >= 0.90 * u_none, results
+
+
+def test_rankings_are_valid_permutations(experiment):
+    exp, pipe = experiment
+    u_te, X_te, a_te = exp.split("test")
+    res = rank_with_strategy(pipe, "knn", X_te, u_te, a_te, exp.b)
+    perm = np.asarray(res.perm)
+    for row in perm:
+        assert len(set(row.tolist())) == exp.m2  # no duplicate items
+
+
+def test_prediction_is_much_faster_than_optimization(experiment):
+    """The paper's core speed claim, architecture-level: serving via
+    prediction avoids the per-user dual solve entirely."""
+    exp, pipe = experiment
+    u_te, X_te, a_te = exp.split("test")
+
+    def timed(strategy, n=3):
+        rank_with_strategy(pipe, strategy, X_te, u_te, a_te, exp.b,
+                           dual_iters=400)  # warm-up/compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(
+                rank_with_strategy(pipe, strategy, X_te, u_te, a_te, exp.b,
+                                   dual_iters=400).perm)
+        return (time.perf_counter() - t0) / n
+
+    t_knn = timed("knn")
+    t_opt = timed("optimal")
+    assert t_knn < t_opt / 3, (t_knn, t_opt)
+
+
+def test_eps_tuning_selected_from_paper_grid(experiment):
+    from repro.core.ranking import EPS_GRID
+    _, pipe = experiment
+    assert pipe.eps in EPS_GRID
+
+
+def test_yow_style_mixed_sign_constraints():
+    """The YOW table has <= constraints; the sign-flip normalization must
+    keep the solver sound."""
+    exp = build_experiment(
+        jax.random.key(13), dataset="yow", n_users=30, n_items=400,
+        m1=150, m2=50, recommender_epochs=1)
+    u_tr, X_tr, a_tr = exp.split("train")
+    pipe = fit_pipeline(X_tr, u_tr, a_tr, exp.b, exp.gamma, m2=exp.m2,
+                        num_iters=400)
+    u_te, X_te, a_te = exp.split("test")
+    res_opt = rank_with_strategy(pipe, "optimal", X_te, u_te, a_te, exp.b,
+                                 dual_iters=400)
+    res_none = rank_with_strategy(pipe, "none", X_te, u_te, a_te, exp.b)
+    assert float(res_opt.compliant.mean()) >= float(res_none.compliant.mean())
+    assert float(res_opt.compliant.mean()) > 0.5
