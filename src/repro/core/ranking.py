@@ -144,7 +144,7 @@ def rank_given_lambda(
     a: Array,           # (n, K, m1) or (K, m1)
     b: Array,           # (n, K) or (K,)
     lam: Array,         # (n, K)
-    gamma: Array,       # (m2,)
+    gamma: Array,       # (m2,) or (n, m2)
     *,
     m2: int,
     eps: float = 1e-4,
@@ -153,19 +153,26 @@ def rank_given_lambda(
 
     Pure jnp reference; the Pallas `fused_rank` kernel computes the same
     quantity with the adjusted scores never leaving VMEM.
+
+    ``gamma`` may be per-request (n, m2): shape-bucketed serving pads
+    requests with fewer real slots by zeroing their trailing discounts,
+    which leaves utility/exposure/compliance identical to the unpadded
+    problem (repro.serving.buckets).
     """
     if a.ndim == 2:
         a = jnp.broadcast_to(a, (u.shape[0],) + a.shape)
     if b.ndim == 1:
         b = jnp.broadcast_to(b, (u.shape[0],) + b.shape)
+    if gamma.ndim == 1:
+        gamma = jnp.broadcast_to(gamma, (u.shape[0],) + gamma.shape)
     s = u + (1.0 + eps) * jnp.einsum("nk,nkm->nm", lam, a)
     perm = rank_by_sort(s, m2)                                   # (n, m2)
     u_sel = jnp.take_along_axis(u, perm, axis=-1)                # (n, m2)
-    utility = u_sel @ gamma
+    utility = jnp.einsum("nm,nm->n", u_sel, gamma)
     a_sel = jnp.take_along_axis(
         a, perm[:, None, :].repeat(a.shape[1], axis=1), axis=-1
     )                                                            # (n, K, m2)
-    exposure = a_sel @ gamma
+    exposure = jnp.einsum("nkm,nm->nk", a_sel, gamma)
     compliant = jnp.all(exposure >= b - 1e-6, axis=-1)
     return RankingOutput(
         perm=perm, utility=utility, exposure=exposure,

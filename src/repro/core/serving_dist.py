@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.compat import shard_map
 from repro.distributed.topk import distributed_top_k
 
 Array = jax.Array
@@ -64,7 +65,7 @@ def knn_predict_distributed(
         w = w / jnp.sum(w, axis=-1, keepdims=True)
         return jnp.einsum("bk,bkc->bc", w, lam_nb)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_axes, None), P(db_axis, None), P()),
         out_specs=P(batch_axes, None),
@@ -75,10 +76,10 @@ def knn_predict_distributed(
 def rank_distributed(
     mesh: Mesh,
     u: Array,        # (B, m1) items sharded over `item_axis`
-    a: Array,        # (K, m1) shared constraints, items sharded
-    b: Array,        # (K,) thresholds, replicated
+    a: Array,        # (K, m1) shared or (B, K, m1) per-request, items sharded
+    b: Array,        # (K,) shared or (B, K) per-request
     lam: Array,      # (B, K) sharded over batch axes
-    gamma: Array,    # (m2,) replicated
+    gamma: Array,    # (m2,) shared or (B, m2) per-request
     *,
     m2: int,
     eps: float = 1e-4,
@@ -91,29 +92,40 @@ def rank_distributed(
     rows ride the merge as payloads, so utility / exposure / compliance
     need no second gather — the outputs match rank_given_lambda exactly.
 
+    Accepts the same shared-vs-per-request broadcast forms as
+    rank_given_lambda (per-request a/b/gamma is what the shape-bucketed
+    serving engine feeds when a mesh is present).
+
     Returns a RankingOutput.
     """
     from repro.core.ranking import RankingOutput
 
     batch_axes = tuple(ax for ax in batch_axes if ax in mesh.axis_names)
+    a_spec = (P(batch_axes, None, item_axis) if a.ndim == 3
+              else P(None, item_axis))
+    b_spec = P(batch_axes, None) if b.ndim == 2 else P()
+    gamma_spec = P(batch_axes, None) if gamma.ndim == 2 else P()
 
     def body(u_l, a_l, b_r, lam_l, gamma_r):
         B_l = u_l.shape[0]
-        s = u_l + (1.0 + eps) * (lam_l @ a_l)                # (B_l, m1_l)
-        a_bcast = jnp.broadcast_to(a_l[None], (B_l,) + a_l.shape)
+        if a_l.ndim == 2:
+            a_l = jnp.broadcast_to(a_l[None], (B_l,) + a_l.shape)
+        if gamma_r.ndim == 1:
+            gamma_r = jnp.broadcast_to(gamma_r[None], (B_l,) + gamma_r.shape)
+        s = u_l + (1.0 + eps) * jnp.einsum("bk,bkm->bm", lam_l, a_l)
         payload = {"u": u_l,
-                   "a": jnp.moveaxis(a_bcast, 1, 0)}          # (K, B_l, m1_l)
+                   "a": jnp.moveaxis(a_l, 1, 0)}              # (K, B_l, m1_l)
         vals, idx, sel = distributed_top_k(s, m2, item_axis, payload=payload)
-        utility = sel["u"] @ gamma_r                          # (B_l,)
-        exposure = jnp.einsum("kbm,m->bk", sel["a"], gamma_r)
+        utility = jnp.einsum("bm,bm->b", sel["u"], gamma_r)
+        exposure = jnp.einsum("kbm,bm->bk", sel["a"], gamma_r)
         compliant = jnp.all(exposure >= b_r - 1e-6, axis=-1)
         return RankingOutput(perm=idx, utility=utility, exposure=exposure,
                              compliant=compliant, lam=lam_l)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
-        in_specs=(P(batch_axes, item_axis), P(None, item_axis), P(),
-                  P(batch_axes, None), P()),
+        in_specs=(P(batch_axes, item_axis), a_spec, b_spec,
+                  P(batch_axes, None), gamma_spec),
         out_specs=RankingOutput(
             perm=P(batch_axes, None), utility=P(batch_axes),
             exposure=P(batch_axes, None), compliant=P(batch_axes),

@@ -1,0 +1,37 @@
+"""jax API compatibility shims.
+
+The repo targets the current jax API (``jax.shard_map`` with ``check_vma``,
+``jax.set_mesh``); older runtimes (jax <= 0.4.x, as baked into this
+container) expose the same machinery under ``jax.experimental.shard_map``
+(``check_rep``) and the ``Mesh`` context manager. Route every call site
+through these wrappers so the rest of the tree can use the modern
+spelling unconditionally.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map with graceful fallback to jax.experimental.shard_map."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh`: jax.set_mesh / use_mesh / Mesh.__enter__."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # older jax: Mesh is itself a context manager

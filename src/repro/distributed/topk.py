@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 Array = jax.Array
 
 
@@ -110,7 +112,7 @@ def sharded_knn_topk(
         neg_v, idx = distributed_top_k(-d2, k, shard_axis)
         return -neg_v, idx
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(xq, xdb)
@@ -133,7 +135,7 @@ def sharded_score_topk(
     def body(s_l):
         return distributed_top_k(s_l, k, shard_axis)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(scores)

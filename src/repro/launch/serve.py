@@ -2,12 +2,15 @@
 
 The deployment shape of the paper's system: train (or load) a retrieval
 backbone, run Algorithm 1's offline stage (batched dual solve on a user
-sample + KNN predictor fit), then serve batched requests through the
-integrated online path and report latency percentiles + compliance.
+sample + KNN predictor fit), then serve a STREAM of heterogeneous
+requests through the shape-bucketed micro-batching engine
+(repro.serving) and report per-request latency percentiles, compliance,
+and jit-cache behaviour (steady state must not recompile).
 
-Runs real inference on the available devices (reduced configs on CPU;
-the same code path pjit-shards on a pod — the compiled counterpart is
-the dry-run's retrieval_cand / serve_online cells).
+Backbone scoring runs as one fixed-shape jit program per arrival chunk;
+each user then becomes an individual RankRequest whose candidate count
+is jittered (live retrieval returns varying candidate sets), exercising
+the engine's bucket lattice the way live traffic would.
 
   PYTHONPATH=src python -m repro.launch.serve --arch sasrec --requests 256
 """
@@ -16,20 +19,20 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+
+import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.core.constraints import dcg_discount
 from repro.core.dual_solver import solve_dual_batch
 from repro.core.predictors import KNNLambdaPredictor
-from repro.core.ranking import rank_given_lambda
 from repro.data.batches import make_deepfm_batch, make_seqrec_batch
 from repro.models.recsys import RECSYS_REGISTRY
 from repro.optim import adam_init
+from repro.serving import RankRequest, ServingEngine
 
 
 def _request_batch(cfg, B, seed):
@@ -47,12 +50,19 @@ def main():
     ap.add_argument("--arch", default="sasrec",
                     choices=["deepfm", "sasrec", "bert4rec", "mind"])
     ap.add_argument("--requests", type=int, default=256)
-    ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--candidates", type=int, default=512)
     ap.add_argument("--m2", type=int, default=50)
     ap.add_argument("--constraints", type=int, default=5)
     ap.add_argument("--train-steps", type=int, default=60)
     ap.add_argument("--offline-users", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="engine micro-batch capacity")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="micro-batch assembly deadline")
+    ap.add_argument("--executor", default="xla", choices=["xla", "fused"])
+    ap.add_argument("--m1-jitter", type=float, default=0.5,
+                    help="per-request candidate-count jitter in "
+                         "[1-jitter, 1] * --candidates")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -82,58 +92,69 @@ def main():
     # --- 2. offline stage: duals + predictor -------------------------------
     n_cand = min(args.candidates, cfg.n_items)
     m2, K = min(args.m2, n_cand), args.constraints
-    gamma = dcg_discount(m2)
+    gamma = np.asarray(dcg_discount(m2), np.float32)
     cand_ids = jnp.arange(n_cand)
-    topics = (jax.random.uniform(jax.random.key(7), (K, n_cand)) < 0.15
-              ).astype(jnp.float32)
-    b = 0.08 * jnp.sum(gamma) * jnp.ones((K,))
+    topics = np.asarray(
+        (jax.random.uniform(jax.random.key(7), (K, n_cand)) < 0.15),
+        np.float32)
+    b = (0.08 * gamma.sum() * np.ones(K, np.float32))
+
+    @jax.jit
+    def score(params, req):
+        """Backbone inference: utilities over the full candidate set +
+        user covariates. Fixed shape -> one compile, amortized."""
+        user_in = req[:, 1:] if cfg.kind == "deepfm" else req
+        u = model.retrieval_scores(params, user_in, cand_ids)
+        X = model.user_covariates(params, req)
+        return u, X
 
     off_req = _request_batch(cfg, args.offline_users, seed=10_000)
-    if cfg.kind == "deepfm":
-        u_off = model.retrieval_scores(params, off_req[:, 1:], cand_ids)
-        X_off = model.user_covariates(params, off_req)
-    else:
-        u_off = model.retrieval_scores(params, off_req, cand_ids)
-        X_off = model.user_covariates(params, off_req)
-    sol = solve_dual_batch(u_off, topics, b, gamma, m2=m2, num_iters=300)
+    u_off, X_off = score(params, off_req)
+    sol = solve_dual_batch(u_off, jnp.asarray(topics), jnp.asarray(b),
+                           jnp.asarray(gamma), m2=m2, num_iters=300)
     knn = KNNLambdaPredictor.fit(X_off, sol.lam, k=10)
 
-    # --- 3. online loop -----------------------------------------------------
-    @jax.jit
-    def serve(params, req):
-        if cfg.kind == "deepfm":
-            u = model.retrieval_scores(params, req[:, 1:], cand_ids)
-            X = model.user_covariates(params, req)
-        else:
-            u = model.retrieval_scores(params, req, cand_ids)
-            X = model.user_covariates(params, req)
-        lam_hat = knn.predict(X)
-        return rank_given_lambda(u, topics, b, lam_hat, gamma, m2=m2)
+    # --- 3. streaming online stage -----------------------------------------
+    engine = ServingEngine(max_batch=args.max_batch,
+                           max_wait_ms=args.max_wait_ms,
+                           executor=args.executor)
+    engine.register_predictor(args.arch, knn, d_cov=int(X_off.shape[1]))
 
-    warm = _request_batch(cfg, args.batch_size, seed=1)
-    jax.block_until_ready(serve(params, warm).perm)
+    # materialize the arrival stream: chunked backbone scoring, then one
+    # RankRequest per user with a jittered candidate-subset size.
+    rng = np.random.default_rng(0)
+    chunk = 64
+    requests = []
+    m1_lo = max(m2, int(n_cand * (1.0 - args.m1_jitter)))
+    for c in range(-(-args.requests // chunk)):
+        req_in = _request_batch(cfg, chunk, seed=20_000 + c)
+        u, X = score(params, req_in)
+        u, X = np.asarray(u), np.asarray(X)
+        for i in range(min(chunk, args.requests - c * chunk)):
+            m1 = int(rng.integers(m1_lo, n_cand + 1))
+            m2_req = min(m2, m1)
+            requests.append(RankRequest(
+                rid=c * chunk + i, u=u[i, :m1], a=topics[:, :m1], b=b,
+                m2=m2_req, X=X[i], tag=args.arch, gamma=gamma[:m2_req]))
 
-    lat, compl = [], []
-    n_batches = max(args.requests // args.batch_size, 1)
-    for i in range(n_batches):
-        req = _request_batch(cfg, args.batch_size, seed=20_000 + i)
-        t0 = time.perf_counter()
-        out = serve(params, req)
-        jax.block_until_ready(out.perm)
-        lat.append((time.perf_counter() - t0) * 1e3)
-        compl.append(float(out.compliant.mean()))
-    lat = np.asarray(lat)
+    warm = engine.warmup(requests)
+    results = engine.serve_stream(requests)
+
+    s = engine.metrics.summary()
     print(json.dumps({
-        "arch": args.arch, "requests": n_batches * args.batch_size,
-        "batch_size": args.batch_size, "n_candidates": n_cand,
-        "m2": m2, "K": K,
+        "arch": args.arch, "requests": len(results),
+        "n_candidates": n_cand, "m2": m2, "K": K,
+        "executor": args.executor,
+        "max_batch": args.max_batch, "max_wait_ms": args.max_wait_ms,
         "offline_compliance": round(float(sol.compliant.mean()), 3),
-        "p50_ms_batch": round(float(np.percentile(lat, 50)), 2),
-        "p99_ms_batch": round(float(np.percentile(lat, 99)), 2),
-        "ms_per_user_p50": round(float(np.percentile(lat, 50))
-                                 / args.batch_size, 4),
-        "online_compliance": round(float(np.mean(compl)), 3),
-        "within_50ms_budget": bool(np.percentile(lat, 99) <= 50.0),
+        "buckets": warm["buckets"],
+        "compiles": s["compiles"],
+        "compiles_post_warmup": s["compiles_post_warmup"],
+        "fill_rate": s["fill_rate"],
+        "latency_ms": s["latency_ms"],
+        "queue_wait_ms": s["queue_wait_ms"],
+        "online_compliance": s["compliance"],
+        "within_50ms_budget": bool(s["latency_ms"]["p99"] <= 50.0),
     }, indent=1))
 
 

@@ -1,0 +1,32 @@
+"""Streaming serving engine: shape-bucketed micro-batching for the
+paper's online constrained-ranking stage (see engine.py for the design).
+"""
+
+from repro.serving.buckets import (
+    Bucket,
+    K_TIERS,
+    MIN_M1,
+    MIN_M2,
+    NEG_FILL,
+    assemble_batch,
+    bucket_for,
+    ceil_pow2,
+    k_tier,
+    unpad_result,
+)
+from repro.serving.engine import (
+    LAM_TAG,
+    RankRequest,
+    RankResult,
+    ServingEngine,
+)
+from repro.serving.metrics import EngineMetrics
+from repro.serving.traffic import DEFAULT_MIX, Scenario, make_request, make_stream
+
+__all__ = [
+    "Bucket", "K_TIERS", "MIN_M1", "MIN_M2", "NEG_FILL",
+    "assemble_batch", "bucket_for", "ceil_pow2", "k_tier", "unpad_result",
+    "LAM_TAG", "RankRequest", "RankResult", "ServingEngine",
+    "EngineMetrics",
+    "DEFAULT_MIX", "Scenario", "make_request", "make_stream",
+]

@@ -1,0 +1,157 @@
+"""Shape-bucket geometry for the streaming serving engine.
+
+A live request stream is shape-heterogeneous: every request carries its
+own candidate count m1, slot count m2 and constraint count K (and mixed
+recommender architectures upstream produce different mixes of all
+three). XLA compiles one executable per distinct input shape, so feeding
+raw shapes to jit would recompile on nearly every request — fatal inside
+a 50 ms budget (a CPU compile is ~100 ms-1 s; a TPU compile worse).
+
+The classic fix (cf. serving stacks like TF-Serving's batching layer and
+inference engines with shape polymorphism) is to quantize shapes into a
+small lattice of buckets and pad every request up to its bucket:
+
+  m1, m2  -> power-of-two ceilings (>= MIN_M1 / MIN_M2 floors)
+  K       -> fixed tiers K_TIERS (constraint counts cluster tightly in
+             practice: the paper runs 5; our scenarios run 3-16)
+  batch   -> one fixed micro-batch capacity per bucket
+
+so the total executable count is bounded by the lattice size, every
+executable is pre-warmable, and steady state never recompiles.
+
+Padding must not change the answer. The scheme (verified exactly in
+tests/test_serving.py against the unpadded path):
+
+  candidates m1 -> m1p : u filled with NEG_FILL (a finite -1e30 — large
+      enough that no padded candidate ever enters a top-m2, finite so
+      0-discount slots contribute exactly 0.0, not NaN, to utility);
+      attribute columns a filled with 0.
+  slots m2 -> m2p      : the per-request discount vector gamma is
+      zero-extended. Utility and exposure are gamma-weighted sums, so
+      phantom slots contribute nothing; the real ranking is the first
+      m2 entries of the padded perm (scores sort descending and padded
+      candidates sort last).
+  constraints K -> Kp  : zero rows in a, zero thresholds in b, zero
+      shadow prices in lam. Exposure of a phantom constraint is 0 >= 0,
+      so compliance is unchanged.
+  batch n -> capacity  : whole phantom rows (NEG_FILL utilities, zero
+      constraints); sliced off before results leave the engine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.constraints import dcg_discount
+
+# Finite "minus infinity" for padded candidate utilities: keeps padded
+# candidates out of every top-m2 while 0.0 * NEG_FILL == 0.0 exactly.
+NEG_FILL = -1.0e30
+
+MIN_M1 = 128       # lane-aligned floor for the candidate axis
+MIN_M2 = 8         # sublane-aligned floor for the slot axis
+K_TIERS = (4, 8, 16, 32)
+
+
+def ceil_pow2(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    n = max(int(n), int(floor))
+    return 1 << (n - 1).bit_length()
+
+
+def k_tier(K: int, tiers=K_TIERS) -> int:
+    """Smallest tier >= K; oversize K falls back to its pow2 ceiling
+    (still a valid bucket — just outside the pre-warmed lattice)."""
+    for t in tiers:
+        if K <= t:
+            return t
+    return ceil_pow2(K)
+
+
+@dataclass(frozen=True, order=True)
+class Bucket:
+    """One compiled-shape equivalence class (and jit-cache key)."""
+
+    tag: str      # executor affinity: predictor/arch tag ('_lam' = raw lam)
+    m1: int       # padded candidate count
+    m2: int       # padded slot count
+    K: int        # padded constraint count
+    batch: int    # micro-batch capacity (requests per executable call)
+
+    @property
+    def name(self) -> str:
+        return f"{self.tag}/m1={self.m1}/m2={self.m2}/K={self.K}/B={self.batch}"
+
+
+def bucket_for(*, m1: int, m2: int, K: int, tag: str, batch: int) -> Bucket:
+    """Map a request geometry to its bucket. m2p is clamped to m1p so a
+    bucket is always a well-posed ranking problem (m2 <= m1 is already
+    required of requests; padding preserves it)."""
+    if m2 > m1:
+        raise ValueError(f"request needs m2 <= m1, got m2={m2} > m1={m1}")
+    m1p = ceil_pow2(m1, MIN_M1)
+    m2p = min(ceil_pow2(m2, MIN_M2), m1p)
+    return Bucket(tag=tag, m1=m1p, m2=m2p, K=k_tier(K), batch=int(batch))
+
+
+# ---------------------------------------------------------------------------
+# Batch assembly (host-side, numpy: cheap writes into pinned staging buffers)
+# ---------------------------------------------------------------------------
+
+def assemble_batch(requests, bucket: Bucket, *, d_cov: int | None = None):
+    """Pack up to `bucket.batch` requests into padded staging arrays.
+
+    Returns dict with u (B, m1), a (B, K, m1), b (B, K), gamma (B, m2)
+    and either lam (B, K) (tag '_lam') or X (B, d_cov). Fresh arrays per
+    batch, so the device buffers they become can be donated to the
+    executable.
+    """
+    B, m1p, m2p, Kp = bucket.batch, bucket.m1, bucket.m2, bucket.K
+    n = len(requests)
+    if n > B:
+        raise ValueError(f"{n} requests > bucket capacity {B}")
+    u = np.full((B, m1p), NEG_FILL, np.float32)
+    a = np.zeros((B, Kp, m1p), np.float32)
+    b = np.zeros((B, Kp), np.float32)
+    gamma = np.zeros((B, m2p), np.float32)
+    lam = np.zeros((B, Kp), np.float32)
+    X = None if d_cov is None else np.zeros((B, d_cov), np.float32)
+    for i, r in enumerate(requests):
+        m1, K, m2 = r.u.shape[0], r.a.shape[0], r.m2
+        u[i, :m1] = r.u
+        a[i, :K, :m1] = r.a
+        b[i, :K] = r.b
+        g = r.gamma if r.gamma is not None else dcg_discount(m2)
+        gamma[i, :m2] = np.asarray(g, np.float32)
+        if r.lam is not None:
+            lam[i, :K] = r.lam
+        if X is not None:
+            X[i] = r.X
+    out = {"u": u, "a": a, "b": b, "gamma": gamma}
+    if X is not None:
+        out["X"] = X
+    else:
+        out["lam"] = lam
+    return out
+
+
+def unpad_result(out, i: int, request):
+    """Slice row `i` of a batched RankingOutput back to the request's
+    real geometry: (perm (m2,), utility, exposure (K,), compliant)."""
+    m2, K = request.m2, request.a.shape[0]
+    perm = np.asarray(out.perm[i, :m2])
+    utility = float(out.utility[i])
+    exposure = np.asarray(out.exposure[i, :K])
+    compliant = bool(out.compliant[i])
+    return perm, utility, exposure, compliant
+
+
+def fill_stats(requests, bucket: Bucket) -> dict:
+    """Padding overhead of a micro-batch: real vs padded (batch x m1)
+    cells — the price paid for the bounded-executable-count guarantee."""
+    real = sum(int(r.u.shape[0]) for r in requests)
+    padded = bucket.batch * bucket.m1
+    return {"real_cells": real, "padded_cells": padded,
+            "fill": real / padded if padded else 0.0}

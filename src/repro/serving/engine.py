@@ -1,0 +1,340 @@
+"""Streaming serving engine: shape-bucketed micro-batching over the
+constrained-ranking online path.
+
+The unit of work is one RankRequest — one user's candidate utilities,
+constraint attributes/thresholds, slot count, and either precomputed
+shadow prices (lam) or the covariate vector X for an attached lambda
+predictor. Requests stream in with heterogeneous geometry (m1, m2, K)
+from heterogeneous upstream recommenders; the engine:
+
+  1. maps each request to a shape Bucket (repro.serving.buckets) and
+     appends it to that bucket's queue;
+  2. flushes a queue when it reaches the bucket's micro-batch capacity
+     (capacity flush) or when its oldest request has waited max_wait_ms
+     (deadline flush, checked by `poll`), or on `drain`;
+  3. executes the flushed batch through ONE cached, pre-warmed jit
+     executable per bucket — the existing online path
+     (core.ranking.rank_given_lambda / kernels.ops.fused_rank /
+     core.serving_dist.rank_distributed when a mesh is present) — with
+     the big staging buffers donated to the runtime;
+  4. unpads each row back to its request's real geometry and stamps
+     per-request latency.
+
+Steady state therefore never recompiles (the jit cache is the bucket
+lattice, populated by `warmup`) and never pays per-request dispatch:
+dispatch cost is amortized over the micro-batch. The engine is
+single-threaded and event-driven — `submit`/`poll` return completed
+results — which keeps it deterministic and testable; async double
+buffering is a ROADMAP follow-on.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ranking import RankingOutput, rank_given_lambda
+from repro.serving.buckets import (
+    Bucket,
+    assemble_batch,
+    bucket_for,
+    fill_stats,
+    unpad_result,
+)
+from repro.serving.metrics import EngineMetrics
+
+LAM_TAG = "_lam"   # requests that carry shadow prices directly
+
+
+@dataclass
+class RankRequest:
+    """One user's ranking problem. Arrays are host (numpy) payloads —
+    the engine owns staging/padding and device transfer."""
+
+    rid: int
+    u: np.ndarray                     # (m1,) candidate utilities
+    a: np.ndarray                     # (K, m1) constraint attributes
+    b: np.ndarray                     # (K,) exposure thresholds
+    m2: int                           # slots to fill (m2 <= m1)
+    lam: np.ndarray | None = None     # (K,) shadow prices, if precomputed
+    X: np.ndarray | None = None      # (d,) covariates for the predictor
+    tag: str = LAM_TAG                # predictor/arch affinity
+    gamma: np.ndarray | None = None  # (m2,) slot discounts; default DCG
+
+    def __post_init__(self):
+        if self.lam is None and self.X is None:
+            raise ValueError(f"request {self.rid}: need lam or X")
+        if self.m2 > self.u.shape[0]:
+            raise ValueError(f"request {self.rid}: m2 > m1")
+
+
+@dataclass
+class RankResult:
+    rid: int
+    perm: np.ndarray                  # (m2,) item indices by slot
+    utility: float
+    exposure: np.ndarray              # (K,)
+    compliant: bool
+    bucket: str
+    latency_ms: float                 # enqueue -> result materialized
+    wait_ms: float                    # enqueue -> batch launch
+
+
+@dataclass
+class _PredictorEntry:
+    predictor: Any                    # pytree with .predict(X) -> (n, K)
+    d_cov: int
+    K: int
+
+
+class ServingEngine:
+    """Shape-bucketed micro-batching executor for ranking requests.
+
+    executor: 'xla'   — rank_given_lambda (default; the jnp hot path)
+              'fused' — kernels.ops.fused_rank (Pallas on TPU,
+                        interpret-mode on CPU)
+              'dist'  — core.serving_dist.rank_distributed on `mesh`
+                        (candidate axis sharded; requires mesh)
+    """
+
+    def __init__(
+        self,
+        *,
+        max_batch: int = 32,
+        max_wait_ms: float = 2.0,
+        eps: float = 1e-4,
+        executor: str = "xla",
+        mesh=None,
+        donate: bool | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if executor not in ("xla", "fused", "dist"):
+            raise ValueError(f"unknown executor {executor!r}")
+        if executor == "dist" and mesh is None:
+            raise ValueError("executor='dist' needs a mesh")
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.eps = float(eps)
+        self.executor = executor
+        self.mesh = mesh
+        if donate is None:  # CPU ignores donation (and warns); skip there
+            donate = jax.default_backend() != "cpu"
+        self.donate = bool(donate)
+        self.clock = clock
+        self.metrics = EngineMetrics()
+        self._predictors: dict[str, _PredictorEntry] = {}
+        self._exec: dict[Bucket, Callable] = {}
+        self._queues: dict[Bucket, list] = {}
+        self._warmed: set[Bucket] = set()
+
+    # -- predictors ---------------------------------------------------------
+
+    def register_predictor(self, tag: str, predictor: Any, *, d_cov: int) -> None:
+        """Attach a fitted lambda predictor under `tag`; requests with
+        X and this tag get lam predicted inside the bucket executable
+        (one dispatch for predict + rank)."""
+        if tag == LAM_TAG:
+            raise ValueError(f"{LAM_TAG!r} is reserved for raw-lam requests")
+        probe = predictor.predict(jnp.zeros((1, d_cov), jnp.float32))
+        self._predictors[tag] = _PredictorEntry(
+            predictor=predictor, d_cov=int(d_cov), K=int(probe.shape[-1]))
+
+    # -- bucketing ----------------------------------------------------------
+
+    def bucket_of(self, req: RankRequest) -> Bucket:
+        tag = LAM_TAG if req.lam is not None else req.tag
+        K = req.a.shape[0]
+        if tag != LAM_TAG:
+            if tag not in self._predictors:
+                raise KeyError(f"no predictor registered for tag {tag!r}")
+            K_pred = self._predictors[tag].K
+            if K > K_pred:
+                # the predictor cannot price constraints it was not fit
+                # for; serving them with lam=0 would silently ignore them.
+                raise ValueError(
+                    f"request {req.rid}: {K} constraints but predictor "
+                    f"{tag!r} emits only {K_pred} shadow prices")
+            # the bucket tier must hold every predicted entry; extra
+            # predicted entries beyond the request's K hit zero a-rows.
+            K = K_pred
+        return bucket_for(m1=req.u.shape[0], m2=req.m2, K=K, tag=tag,
+                          batch=self.max_batch)
+
+    # -- executables --------------------------------------------------------
+
+    def _rank_fn(self, bucket: Bucket):
+        """The bucket's rank body over already-padded device arrays."""
+        m2, eps = bucket.m2, self.eps
+        if self.executor == "dist":
+            mesh = self.mesh
+            from repro.core.serving_dist import rank_distributed
+
+            def rank(u, a, b, lam, gamma):
+                return rank_distributed(mesh, u, a, b, lam, gamma,
+                                        m2=m2, eps=eps)
+        elif self.executor == "fused":
+            from repro.kernels.ops import fused_rank
+
+            def rank(u, a, b, lam, gamma):
+                _, idx = fused_rank(u, a, lam, m2=m2, eps=eps)
+                u_sel = jnp.take_along_axis(u, idx, axis=-1)
+                utility = jnp.einsum("nm,nm->n", u_sel, gamma)
+                a_sel = jnp.take_along_axis(
+                    a, idx[:, None, :].repeat(a.shape[1], axis=1), axis=-1)
+                exposure = jnp.einsum("nkm,nm->nk", a_sel, gamma)
+                compliant = jnp.all(exposure >= b - 1e-6, axis=-1)
+                return RankingOutput(perm=idx, utility=utility,
+                                     exposure=exposure, compliant=compliant,
+                                     lam=lam)
+        else:
+            rank = partial(rank_given_lambda, m2=m2, eps=eps)
+        return rank
+
+    def _build_executor(self, bucket: Bucket) -> Callable:
+        """One fresh jit wrapper per bucket: its compile cache holds
+        exactly one entry, so `jit_cache_sizes` exposes recompiles."""
+        rank = self._rank_fn(bucket)
+        donate = (2, 3) if self.donate else ()
+        if bucket.tag == LAM_TAG:
+
+            def fn(b, gamma, u, a, lam):
+                return rank(u, a, b, lam, gamma)
+
+            return jax.jit(fn, donate_argnums=donate)
+
+        entry = self._predictors[bucket.tag]
+        pad_k = bucket.K - entry.K
+        pred = entry.predictor      # closed over: baked into the executable
+
+        def fn(b, gamma, u, a, X):
+            lam = pred.predict(X)                       # (B, K_pred)
+            lam = jnp.pad(lam, ((0, 0), (0, pad_k)))
+            return rank(u, a, b, lam, gamma)
+
+        return jax.jit(fn, donate_argnums=donate)
+
+    def _executor_for(self, bucket: Bucket) -> Callable:
+        fn = self._exec.get(bucket)
+        if fn is None:
+            fn = self._exec[bucket] = self._build_executor(bucket)
+            self.metrics.on_compile()
+        return fn
+
+    def warmup(self, sample) -> dict:
+        """Compile every bucket reachable from `sample` (RankRequests or
+        Buckets) by executing one phantom batch per bucket. After this,
+        any stream inside the lattice runs with zero recompiles."""
+        buckets = {r if isinstance(r, Bucket) else self.bucket_of(r)
+                   for r in sample}
+        for bucket in sorted(buckets):
+            fn = self._executor_for(bucket)
+            jax.block_until_ready(
+                self._call(fn, bucket, assemble_batch([], bucket,
+                           d_cov=self._dcov(bucket))).perm)
+            self._warmed.add(bucket)
+        self.metrics.warmed = True
+        return {"buckets": [b.name for b in sorted(buckets)],
+                "compiles": self.metrics.compiles}
+
+    def _dcov(self, bucket: Bucket) -> int | None:
+        if bucket.tag == LAM_TAG:
+            return None
+        return self._predictors[bucket.tag].d_cov
+
+    def _call(self, fn, bucket: Bucket, staged: dict) -> RankingOutput:
+        if bucket.tag == LAM_TAG:
+            return fn(staged["b"], staged["gamma"], staged["u"], staged["a"],
+                      staged["lam"])
+        return fn(staged["b"], staged["gamma"], staged["u"], staged["a"],
+                  staged["X"])
+
+    def jit_cache_sizes(self) -> dict[str, int]:
+        """Per-bucket jit compile-cache sizes (1 = exactly the warmed
+        executable; >1 = something retraced). The no-recompile test
+        asserts every value stays 1 across a mixed-shape stream."""
+        return {b.name: fn._cache_size() for b, fn in self._exec.items()}
+
+    # -- queueing / flushing ------------------------------------------------
+
+    def submit(self, req: RankRequest, now: float | None = None):
+        """Enqueue; returns any results completed by a capacity flush."""
+        now = self.clock() if now is None else now
+        bucket = self.bucket_of(req)
+        self.metrics.on_submit(bucket, known=bucket in self._warmed)
+        q = self._queues.setdefault(bucket, [])
+        q.append((req, now))
+        if len(q) >= bucket.batch:
+            return self._flush_bucket(bucket, trigger="capacity")
+        return []
+
+    def poll(self, now: float | None = None):
+        """Deadline check: flush every queue whose oldest request has
+        waited longer than max_wait_ms."""
+        now = self.clock() if now is None else now
+        out = []
+        for bucket in list(self._queues):
+            q = self._queues[bucket]
+            if q and (now - q[0][1]) * 1e3 >= self.max_wait_ms:
+                out += self._flush_bucket(bucket, trigger="deadline")
+        return out
+
+    def drain(self):
+        """Flush everything (stream end)."""
+        out = []
+        for bucket in list(self._queues):
+            if self._queues[bucket]:
+                out += self._flush_bucket(bucket, trigger="drain")
+        return out
+
+    def _flush_bucket(self, bucket: Bucket, *, trigger: str):
+        entries = self._queues[bucket]
+        self._queues[bucket] = []
+        reqs = [r for r, _ in entries]
+        staged = assemble_batch(reqs, bucket, d_cov=self._dcov(bucket))
+        fn = self._executor_for(bucket)
+        t_launch = self.clock()
+        out = self._call(fn, bucket, staged)
+        # one bulk device->host copy per output; per-request unpadding is
+        # then pure numpy (slicing jax arrays row-by-row would dispatch —
+        # and on first touch compile — one tiny program per slice).
+        out = RankingOutput(
+            perm=np.asarray(out.perm), utility=np.asarray(out.utility),
+            exposure=np.asarray(out.exposure),
+            compliant=np.asarray(out.compliant), lam=out.lam)
+        t_done = self.clock()
+        self.metrics.on_batch(bucket, len(reqs), (t_done - t_launch) * 1e3,
+                              trigger, fill_stats(reqs, bucket))
+        results = []
+        for i, (req, t_enq) in enumerate(entries):
+            perm, utility, exposure, compliant = unpad_result(out, i, req)
+            self.metrics.on_result((t_done - t_enq) * 1e3,
+                                   (t_launch - t_enq) * 1e3, compliant)
+            results.append(RankResult(
+                rid=req.rid, perm=perm, utility=utility, exposure=exposure,
+                compliant=compliant, bucket=bucket.name,
+                latency_ms=(t_done - t_enq) * 1e3,
+                wait_ms=(t_launch - t_enq) * 1e3))
+        return results
+
+    # -- convenience driver -------------------------------------------------
+
+    def serve_stream(self, requests, *, warmup: bool = True):
+        """Synchronous driver: submit each request in arrival order,
+        honoring deadlines between arrivals, and drain at stream end.
+        Returns results ordered by completion."""
+        requests = list(requests)
+        if warmup and not self.metrics.warmed:
+            self.warmup(requests)
+        results = []
+        for req in requests:
+            results += self.submit(req)
+            results += self.poll()
+        results += self.drain()
+        return results

@@ -1,0 +1,105 @@
+"""Serving-engine observability: latency percentiles, compliance,
+bucket hit / compile counters.
+
+The compile counters are the contract the engine is built around: after
+`warmup()`, `compiles_post_warmup` must stay 0 across any request stream
+whose geometries fall inside the warmed bucket lattice (asserted in
+tests/test_serving.py via these counters AND the underlying jit cache
+sizes).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class EngineMetrics:
+    requests: int = 0
+    results: int = 0
+    batches: int = 0
+    # shape-lattice behaviour
+    bucket_hits: dict = field(default_factory=lambda: defaultdict(int))
+    compiles: int = 0                 # executables built, ever
+    compiles_post_warmup: int = 0     # executables built after warmup()
+    warmed: bool = False
+    oversize_requests: int = 0        # fell outside the warmed lattice
+    # flush triggers
+    capacity_flushes: int = 0
+    deadline_flushes: int = 0
+    drain_flushes: int = 0
+    # padding overhead
+    real_cells: int = 0
+    padded_cells: int = 0
+    # quality / latency
+    compliant_sum: float = 0.0
+    latencies_ms: list = field(default_factory=list)
+    queue_wait_ms: list = field(default_factory=list)
+    exec_ms: list = field(default_factory=list)
+
+    # -- recording ----------------------------------------------------------
+
+    def on_submit(self, bucket, known: bool) -> None:
+        self.requests += 1
+        self.bucket_hits[bucket.name] += 1
+        if self.warmed and not known:
+            self.oversize_requests += 1
+
+    def on_compile(self) -> None:
+        self.compiles += 1
+        if self.warmed:
+            self.compiles_post_warmup += 1
+
+    def on_batch(self, bucket, n_real: int, exec_ms: float, trigger: str,
+                 fill: dict) -> None:
+        self.batches += 1
+        self.exec_ms.append(exec_ms)
+        if trigger == "capacity":
+            self.capacity_flushes += 1
+        elif trigger == "deadline":
+            self.deadline_flushes += 1
+        else:
+            self.drain_flushes += 1
+        self.real_cells += fill["real_cells"]
+        self.padded_cells += fill["padded_cells"]
+
+    def on_result(self, latency_ms: float, wait_ms: float,
+                  compliant: bool) -> None:
+        self.results += 1
+        self.latencies_ms.append(latency_ms)
+        self.queue_wait_ms.append(wait_ms)
+        self.compliant_sum += float(compliant)
+
+    # -- reporting ----------------------------------------------------------
+
+    @staticmethod
+    def _pct(xs, qs=(50, 95, 99)):
+        if not xs:
+            return {f"p{q}": float("nan") for q in qs}
+        arr = np.asarray(xs)
+        return {f"p{q}": round(float(np.percentile(arr, q)), 3) for q in qs}
+
+    def summary(self) -> dict:
+        lat = self._pct(self.latencies_ms)
+        return {
+            "requests": self.requests,
+            "results": self.results,
+            "batches": self.batches,
+            "buckets_used": len(self.bucket_hits),
+            "compiles": self.compiles,
+            "compiles_post_warmup": self.compiles_post_warmup,
+            "oversize_requests": self.oversize_requests,
+            "flushes": {"capacity": self.capacity_flushes,
+                        "deadline": self.deadline_flushes,
+                        "drain": self.drain_flushes},
+            "fill_rate": round(self.real_cells / self.padded_cells, 3)
+                         if self.padded_cells else float("nan"),
+            "latency_ms": lat,
+            "queue_wait_ms": self._pct(self.queue_wait_ms),
+            "exec_ms_per_batch": self._pct(self.exec_ms),
+            "compliance": round(self.compliant_sum / self.results, 3)
+                          if self.results else float("nan"),
+        }

@@ -1,0 +1,85 @@
+"""Scenario-mix request generator: realistic mixed-arch traffic for the
+serving engine.
+
+A live fleet multiplexes surfaces — a home feed with ~500 candidates and
+50 slots, a related-items strip with ~1k candidates and 20 slots, a
+notification ranker with tiny slates, a retrieval head with 10^5+
+candidates — each behind a different recommender architecture with its
+own constraint system. A Scenario captures one such surface's geometry
+distribution; `make_stream` interleaves scenarios by weight into a
+single request sequence the engine can be driven with.
+
+Payloads are synthetic (utilities ~ U[1, 5], sparse topic attributes,
+thresholds as a fraction of the total slot discount — the same
+conventions as benchmarks/ and the dual-solver tests) but every request
+is a well-posed instance of the paper's online problem, so compliance
+numbers are meaningful, not decorative. Plugging real backbone scores in
+instead is a one-line swap (see repro.launch.serve).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.constraints import dcg_discount
+from repro.serving.engine import LAM_TAG, RankRequest
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One traffic surface: a geometry distribution + arrival weight."""
+
+    name: str
+    m1: int                    # nominal candidate count
+    m2: int                    # nominal slot count
+    K: int                     # constraint count
+    weight: float = 1.0        # relative arrival rate
+    tag: str = LAM_TAG         # predictor tag ('_lam' = request carries lam)
+    d_cov: int = 20            # covariate dim (used when tag != '_lam')
+    m1_jitter: float = 0.5     # m1 sampled from [m1*(1-jitter), m1]
+    topic_rate: float = 0.15   # sparsity of the constraint attributes
+    b_frac: float = 0.06       # threshold as fraction of sum(gamma)
+
+
+# A default mix spanning >= 3 geometries and 2 "archs" (surfaces): the
+# shapes mirror the repo's recsys configs (sasrec feed, bert4rec strip,
+# mind notifications, deepfm retrieval).
+DEFAULT_MIX = (
+    Scenario("feed_sasrec", m1=500, m2=50, K=5, weight=4.0),
+    Scenario("strip_bert4rec", m1=1000, m2=20, K=5, weight=2.0),
+    Scenario("notif_mind", m1=120, m2=8, K=3, weight=1.0),
+    Scenario("retrieval_deepfm", m1=4000, m2=50, K=8, weight=1.0),
+)
+
+
+def make_request(rng: np.random.Generator, scenario: Scenario,
+                 rid: int) -> RankRequest:
+    """One synthetic request drawn from the scenario's distribution."""
+    lo = max(scenario.m2, int(scenario.m1 * (1.0 - scenario.m1_jitter)))
+    m1 = int(rng.integers(lo, scenario.m1 + 1))
+    m2, K = scenario.m2, scenario.K
+    u = rng.uniform(1.0, 5.0, m1).astype(np.float32)
+    a = (rng.random((K, m1)) < scenario.topic_rate).astype(np.float32)
+    gamma = np.asarray(dcg_discount(m2), np.float32)
+    b = (scenario.b_frac * float(gamma.sum())
+         * np.ones(K, np.float32))
+    lam = X = None
+    if scenario.tag == LAM_TAG:
+        lam = rng.exponential(0.5, K).astype(np.float32)
+    else:
+        X = rng.normal(size=scenario.d_cov).astype(np.float32)
+    return RankRequest(rid=rid, u=u, a=a, b=b, m2=m2, lam=lam, X=X,
+                       tag=scenario.tag, gamma=gamma)
+
+
+def make_stream(scenarios=DEFAULT_MIX, *, n_requests: int = 256,
+                seed: int = 0) -> list[RankRequest]:
+    """Weighted interleaving of the scenarios into one request stream."""
+    rng = np.random.default_rng(seed)
+    w = np.asarray([s.weight for s in scenarios], np.float64)
+    w = w / w.sum()
+    picks = rng.choice(len(scenarios), size=n_requests, p=w)
+    return [make_request(rng, scenarios[int(i)], rid)
+            for rid, i in enumerate(picks)]

@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.batches import make_csr_graph, make_lm_batch, make_seqrec_batch

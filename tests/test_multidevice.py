@@ -53,7 +53,8 @@ _PROG = textwrap.dedent("""
     from repro.optim.compression import compressed_psum
     x = jax.random.normal(jax.random.fold_in(key, 3), (8, 128))
     x_sh = jax.device_put(x, NamedSharding(mesh, P("data", None)))
-    out = jax.shard_map(
+    from repro.distributed.compat import shard_map
+    out = shard_map(
         lambda xs: compressed_psum(xs, "data"),
         mesh=mesh, in_specs=P("data", None), out_specs=P("data", None),
         check_vma=False)(x_sh)
@@ -110,6 +111,24 @@ _PROG = textwrap.dedent("""
     np.testing.assert_array_equal(np.asarray(dist.compliant),
                                   np.asarray(dense.compliant))
     print("distributed serving equivalence OK")
+
+    # ---- serving engine with the distributed bucket executor --------------
+    from repro.serving import ServingEngine, make_stream, Scenario
+    eng_dist = ServingEngine(max_batch=8, max_wait_ms=1.0, executor="dist",
+                             mesh=mesh, donate=False)
+    eng_loc = ServingEngine(max_batch=8, max_wait_ms=1.0, donate=False)
+    mix = (Scenario("feed", m1=200, m2=16, K=3, weight=2.0),
+           Scenario("strip", m1=400, m2=8, K=5, weight=1.0))
+    reqs = make_stream(mix, n_requests=32, seed=4)
+    res_d = {r.rid: r for r in eng_dist.serve_stream(reqs)}
+    res_l = {r.rid: r for r in eng_loc.serve_stream(reqs)}
+    assert eng_dist.metrics.summary()["compiles_post_warmup"] == 0
+    for rid in res_l:
+        np.testing.assert_array_equal(res_d[rid].perm, res_l[rid].perm)
+        np.testing.assert_allclose(res_d[rid].exposure, res_l[rid].exposure,
+                                   rtol=1e-5, atol=1e-6)
+        assert res_d[rid].compliant == res_l[rid].compliant
+    print("engine dist executor OK")
 
     # ---- shard_map EP MoE == dense MoE (§Perf variant B), fwd + grads -----
     from dataclasses import replace
@@ -168,6 +187,7 @@ def test_multidevice_semantics():
                    "compressed_psum OK", "dryrun cell OK",
                    "paper serve SPMD OK",
                    "distributed serving equivalence OK",
+                   "engine dist executor OK",
                    "shmap MoE grad equivalence OK",
                    "elastic reshard OK"):
         assert marker in r.stdout

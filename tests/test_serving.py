@@ -1,0 +1,255 @@
+"""Streaming serving engine: bucket geometry, padding equivalence, and
+the no-recompile contract.
+
+The heart of the subsystem is an exactness claim — padding a request
+into its shape bucket must not change perm/utility/exposure/compliance
+— and a performance claim — a mixed-shape stream compiles nothing after
+warmup. Both are asserted here; the recompile assertion goes through
+the engine's per-bucket jit cache sizes (1 == exactly the warmed
+executable).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.constraints import dcg_discount
+from repro.core.predictors import KNNLambdaPredictor, MeanLambdaPredictor
+from repro.core.ranking import rank_given_lambda
+from repro.serving import (
+    LAM_TAG,
+    RankRequest,
+    Scenario,
+    ServingEngine,
+    bucket_for,
+    ceil_pow2,
+    k_tier,
+    make_stream,
+)
+
+# ---------------------------------------------------------------------------
+# Bucket geometry
+# ---------------------------------------------------------------------------
+
+
+def test_ceil_pow2_boundaries():
+    assert ceil_pow2(128, 128) == 128       # exact boundary: no inflation
+    assert ceil_pow2(129, 128) == 256       # one past: next power of two
+    assert ceil_pow2(1, 128) == 128         # floor applies
+    assert ceil_pow2(1024, 128) == 1024
+
+
+def test_k_tier_and_oversize_fallback():
+    assert k_tier(3) == 4
+    assert k_tier(4) == 4                   # exact tier boundary
+    assert k_tier(5) == 8
+    assert k_tier(32) == 32
+    assert k_tier(40) == 64                 # oversize: pow2 fallback
+
+
+def test_bucket_for_clamps_and_validates():
+    b = bucket_for(m1=100, m2=100, K=2, tag=LAM_TAG, batch=8)
+    assert b.m1 == 128 and b.m2 == 128      # m2 ceiling clamped to m1 ceiling
+    with pytest.raises(ValueError):
+        bucket_for(m1=50, m2=51, K=2, tag=LAM_TAG, batch=8)
+    b2 = bucket_for(m1=500, m2=50, K=5, tag="x", batch=16)
+    assert (b2.m1, b2.m2, b2.K, b2.batch) == (512, 64, 8, 16)
+
+
+# ---------------------------------------------------------------------------
+# Padding equivalence: engine result == direct unpadded hot path
+# ---------------------------------------------------------------------------
+
+
+def _direct(req, lam):
+    """Unbatched, unpadded reference through the core online path."""
+    return rank_given_lambda(
+        jnp.asarray(req.u)[None], jnp.asarray(req.a)[None],
+        jnp.asarray(req.b)[None], jnp.asarray(lam)[None],
+        jnp.asarray(req.gamma), m2=req.m2, eps=1e-4)
+
+
+def _check_match(result, ref):
+    np.testing.assert_array_equal(result.perm, np.asarray(ref.perm[0]))
+    np.testing.assert_allclose(result.utility, float(ref.utility[0]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(result.exposure, np.asarray(ref.exposure[0]),
+                               rtol=1e-5, atol=1e-6)
+    assert result.compliant == bool(ref.compliant[0])
+
+
+def test_pad_unpad_roundtrip_matches_unbatched():
+    reqs = make_stream(n_requests=24, seed=11)   # all carry lam directly
+    eng = ServingEngine(max_batch=8, max_wait_ms=1.0)
+    by_rid = {r.rid: r for r in eng.serve_stream(reqs)}
+    assert len(by_rid) == len(reqs)
+    for req in reqs:
+        _check_match(by_rid[req.rid], _direct(req, req.lam))
+
+
+def test_pad_unpad_roundtrip_predictor_path():
+    rng = np.random.default_rng(3)
+    d, K = 12, 5
+    X_db = rng.normal(size=(100, d)).astype(np.float32)
+    lam_db = np.abs(rng.normal(size=(100, K))).astype(np.float32)
+    knn = KNNLambdaPredictor.fit(X_db, lam_db, k=5)
+    eng = ServingEngine(max_batch=4, max_wait_ms=1.0)
+    eng.register_predictor("arch", knn, d_cov=d)
+    mix = (Scenario("s", m1=300, m2=30, K=K, tag="arch", d_cov=d),)
+    reqs = make_stream(mix, n_requests=12, seed=5)
+    by_rid = {r.rid: r for r in eng.serve_stream(reqs)}
+    for req in reqs:
+        lam = np.asarray(knn.predict(jnp.asarray(req.X)[None]))[0]
+        _check_match(by_rid[req.rid], _direct(req, lam))
+
+
+def test_fused_executor_matches_xla_executor():
+    reqs = make_stream(n_requests=8, seed=7)
+    res_x = {r.rid: r for r in ServingEngine(
+        max_batch=4, max_wait_ms=1.0, executor="xla").serve_stream(reqs)}
+    res_f = {r.rid: r for r in ServingEngine(
+        max_batch=4, max_wait_ms=1.0, executor="fused").serve_stream(reqs)}
+    for rid in res_x:
+        np.testing.assert_array_equal(res_f[rid].perm, res_x[rid].perm)
+        np.testing.assert_allclose(res_f[rid].exposure, res_x[rid].exposure,
+                                   rtol=1e-5, atol=1e-6)
+        assert res_f[rid].compliant == res_x[rid].compliant
+
+
+# ---------------------------------------------------------------------------
+# Flush triggers
+# ---------------------------------------------------------------------------
+
+
+def _tiny_request(rid, m1=64, m2=8, K=2):
+    rng = np.random.default_rng(rid)
+    return RankRequest(
+        rid=rid, u=rng.uniform(1, 5, m1).astype(np.float32),
+        a=(rng.random((K, m1)) < 0.3).astype(np.float32),
+        b=np.zeros(K, np.float32), m2=m2,
+        lam=np.zeros(K, np.float32),
+        gamma=np.asarray(dcg_discount(m2), np.float32))
+
+
+def test_capacity_flush_fires_on_full_batch():
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9)
+    out = []
+    for i in range(4):
+        out += eng.submit(_tiny_request(i), now=0.0)
+    assert sorted(r.rid for r in out) == [0, 1, 2, 3]
+    assert eng.metrics.capacity_flushes == 1
+
+
+def test_deadline_flush_fires_on_max_wait():
+    eng = ServingEngine(max_batch=4, max_wait_ms=2.0)
+    assert eng.submit(_tiny_request(0), now=0.0) == []
+    assert eng.poll(now=0.001) == []            # 1 ms: under deadline
+    out = eng.poll(now=0.003)                   # 3 ms: over deadline
+    assert [r.rid for r in out] == [0]
+    assert eng.metrics.deadline_flushes == 1
+    assert out[0].wait_ms > 0
+
+
+def test_drain_flushes_everything():
+    eng = ServingEngine(max_batch=8, max_wait_ms=1e9)
+    for i in range(3):
+        eng.submit(_tiny_request(i))
+    out = eng.drain()
+    assert len(out) == 3 and eng.metrics.drain_flushes == 1
+
+
+# ---------------------------------------------------------------------------
+# The no-recompile contract (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_stream_no_recompiles_after_warmup():
+    """>= 256 requests, >= 2 archs, >= 3 (m1, m2) geometries: after
+    warmup, zero recompilations — via the engine counter AND the
+    per-bucket jit cache sizes."""
+    rng = np.random.default_rng(0)
+    d = 16
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(64, d)).astype(np.float32),
+        np.abs(rng.normal(size=(64, 5))).astype(np.float32), k=5)
+    mean = MeanLambdaPredictor.fit(
+        np.zeros((4, d), np.float32),
+        np.abs(rng.normal(size=(4, 3))).astype(np.float32))
+    eng = ServingEngine(max_batch=16, max_wait_ms=2.0)
+    eng.register_predictor("sasrec", knn, d_cov=d)
+    eng.register_predictor("deepfm", mean, d_cov=d)
+    mix = (
+        Scenario("feed", m1=500, m2=50, K=5, weight=3.0,
+                 tag="sasrec", d_cov=d),
+        Scenario("strip", m1=1000, m2=20, K=3, weight=2.0,
+                 tag="deepfm", d_cov=d),
+        Scenario("notif", m1=120, m2=8, K=3, weight=1.0),     # raw-lam arch
+        Scenario("retrieval", m1=2000, m2=50, K=8, weight=1.0),
+    )
+    reqs = make_stream(mix, n_requests=256, seed=9)
+    assert len({(eng.bucket_of(r).m1, eng.bucket_of(r).m2)
+                for r in reqs}) >= 3
+    assert len({eng.bucket_of(r).tag for r in reqs}) >= 2
+
+    eng.warmup(reqs)
+    compiles_at_warmup = eng.metrics.compiles
+    results = []
+    for r in reqs:
+        results += eng.submit(r)
+        results += eng.poll()
+    results += eng.drain()
+
+    assert len(results) == 256
+    assert eng.metrics.compiles == compiles_at_warmup
+    assert eng.metrics.compiles_post_warmup == 0
+    assert eng.metrics.oversize_requests == 0
+    # jit cache stats: exactly the one warmed executable per bucket
+    sizes = eng.jit_cache_sizes()
+    assert sizes and all(v == 1 for v in sizes.values()), sizes
+
+
+def test_oversize_request_is_served_and_counted():
+    """A geometry outside the warmed lattice still gets served (new
+    bucket compiled on demand) and is visible in the metrics."""
+    eng = ServingEngine(max_batch=4, max_wait_ms=1.0)
+    small = [_tiny_request(i) for i in range(8)]
+    eng.warmup(small)
+    for r in small:
+        eng.submit(r)
+    eng.drain()
+    assert eng.metrics.compiles_post_warmup == 0
+    big = _tiny_request(99, m1=5000, m2=64, K=40)   # oversize K -> pow2 tier
+    eng.submit(big)
+    out = eng.drain()
+    assert [r.rid for r in out] == [99]
+    assert eng.metrics.oversize_requests == 1
+    assert eng.metrics.compiles_post_warmup == 1
+    _check_match(out[0], _direct(big, big.lam))
+
+
+def test_predictor_with_too_few_outputs_is_rejected():
+    """A predictor cannot price constraints it was not fit for; serving
+    them with lam=0 must be an error, not silence."""
+    rng = np.random.default_rng(1)
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(16, 4)).astype(np.float32),
+        np.abs(rng.normal(size=(16, 2))).astype(np.float32), k=3)
+    eng = ServingEngine(max_batch=4)
+    eng.register_predictor("arch", knn, d_cov=4)
+    req = _tiny_request(0, K=5)
+    req = RankRequest(rid=0, u=req.u, a=req.a, b=req.b, m2=req.m2,
+                      X=np.zeros(4, np.float32), tag="arch", gamma=req.gamma)
+    with pytest.raises(ValueError, match="shadow prices"):
+        eng.submit(req)
+
+
+def test_metrics_summary_shape():
+    eng = ServingEngine(max_batch=8, max_wait_ms=1.0)
+    eng.serve_stream(make_stream(n_requests=32, seed=2))
+    s = eng.metrics.summary()
+    assert s["results"] == 32
+    assert 0.0 < s["fill_rate"] <= 1.0
+    for q in ("p50", "p95", "p99"):
+        assert np.isfinite(s["latency_ms"][q])
+    assert 0.0 <= s["compliance"] <= 1.0
