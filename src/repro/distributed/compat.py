@@ -6,6 +6,19 @@ container) expose the same machinery under ``jax.experimental.shard_map``
 (``check_rep``) and the ``Mesh`` context manager. Route every call site
 through these wrappers so the rest of the tree can use the modern
 spelling unconditionally.
+
+Lifecycle — when these shims can be dropped (also tracked in ROADMAP):
+each wrapper probes the modern API first, so nothing here has to change
+as the container's jax moves forward; the shims just become dead
+fallback branches. Delete this module (and inline the two ``jax.*``
+calls at the call sites) once the container image ships a jax that has
+BOTH top-level ``jax.shard_map`` accepting ``check_vma`` (jax >= 0.6)
+and ``jax.set_mesh`` (jax >= 0.6.2). Call sites to update then:
+``core/serving_dist.py`` (both shard_map entry points),
+``distributed/topk.py``, ``distributed/runner.py``, and the
+multi-device tests. Until that jax lands, every new shard_map/set_mesh
+use MUST go through this module — mixing spellings is how the seed's
+two test failures happened.
 """
 
 from __future__ import annotations

@@ -3,9 +3,11 @@
 The deployment shape of the paper's system: train (or load) a retrieval
 backbone, run Algorithm 1's offline stage (batched dual solve on a user
 sample + KNN predictor fit), then serve a STREAM of heterogeneous
-requests through the shape-bucketed micro-batching engine
-(repro.serving) and report per-request latency percentiles, compliance,
-and jit-cache behaviour (steady state must not recompile).
+requests through the shape-bucketed, async double-buffered
+micro-batching engine (repro.serving) and report per-request latency
+percentiles, compliance, pipeline overlap, and jit-cache behaviour
+(steady state must not recompile). --pipeline-depth 0 serves
+synchronously (the pre-pipeline engine) for A/B comparison.
 
 Backbone scoring runs as one fixed-shape jit program per arrival chunk;
 each user then becomes an individual RankRequest whose candidate count
@@ -60,6 +62,9 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="micro-batch assembly deadline")
     ap.add_argument("--executor", default="xla", choices=["xla", "fused"])
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="in-flight micro-batch window; 1 = double "
+                         "buffering, 0 = synchronous engine")
     ap.add_argument("--m1-jitter", type=float, default=0.5,
                     help="per-request candidate-count jitter in "
                          "[1-jitter, 1] * --candidates")
@@ -117,7 +122,8 @@ def main():
     # --- 3. streaming online stage -----------------------------------------
     engine = ServingEngine(max_batch=args.max_batch,
                            max_wait_ms=args.max_wait_ms,
-                           executor=args.executor)
+                           executor=args.executor,
+                           pipeline_depth=args.pipeline_depth)
     engine.register_predictor(args.arch, knn, d_cov=int(X_off.shape[1]))
 
     # materialize the arrival stream: chunked backbone scoring, then one
@@ -139,6 +145,7 @@ def main():
 
     warm = engine.warmup(requests)
     results = engine.serve_stream(requests)
+    engine.close()
 
     s = engine.metrics.summary()
     print(json.dumps({
@@ -146,6 +153,7 @@ def main():
         "n_candidates": n_cand, "m2": m2, "K": K,
         "executor": args.executor,
         "max_batch": args.max_batch, "max_wait_ms": args.max_wait_ms,
+        "pipeline_depth": args.pipeline_depth,
         "offline_compliance": round(float(sol.compliant.mean()), 3),
         "buckets": warm["buckets"],
         "compiles": s["compiles"],
@@ -153,6 +161,7 @@ def main():
         "fill_rate": s["fill_rate"],
         "latency_ms": s["latency_ms"],
         "queue_wait_ms": s["queue_wait_ms"],
+        "pipeline": s["pipeline"],
         "online_compliance": s["compliance"],
         "within_50ms_budget": bool(s["latency_ms"]["p99"] <= 50.0),
     }, indent=1))

@@ -1,5 +1,7 @@
-"""Streaming serving engine: shape-bucketed micro-batching for the
-paper's online constrained-ranking stage (see engine.py for the design).
+"""Streaming serving engine: shape-bucketed micro-batching with async
+double-buffered execution for the paper's online constrained-ranking
+stage (see engine.py and pipeline.py for the design; docs/serving.md
+for the full semantics).
 """
 
 from repro.serving.buckets import (
@@ -8,9 +10,11 @@ from repro.serving.buckets import (
     MIN_M1,
     MIN_M2,
     NEG_FILL,
+    alloc_staging,
     assemble_batch,
     bucket_for,
     ceil_pow2,
+    fill_staging,
     k_tier,
     unpad_result,
 )
@@ -21,12 +25,20 @@ from repro.serving.engine import (
     ServingEngine,
 )
 from repro.serving.metrics import EngineMetrics
+from repro.serving.pipeline import (
+    ExecutionPipeline,
+    PendingBatch,
+    RankFuture,
+    StagingRing,
+)
 from repro.serving.traffic import DEFAULT_MIX, Scenario, make_request, make_stream
 
 __all__ = [
     "Bucket", "K_TIERS", "MIN_M1", "MIN_M2", "NEG_FILL",
-    "assemble_batch", "bucket_for", "ceil_pow2", "k_tier", "unpad_result",
+    "alloc_staging", "assemble_batch", "bucket_for", "ceil_pow2",
+    "fill_staging", "k_tier", "unpad_result",
     "LAM_TAG", "RankRequest", "RankResult", "ServingEngine",
     "EngineMetrics",
+    "ExecutionPipeline", "PendingBatch", "RankFuture", "StagingRing",
     "DEFAULT_MIX", "Scenario", "make_request", "make_stream",
 ]

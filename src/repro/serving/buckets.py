@@ -97,44 +97,70 @@ def bucket_for(*, m1: int, m2: int, K: int, tag: str, batch: int) -> Bucket:
 
 
 # ---------------------------------------------------------------------------
-# Batch assembly (host-side, numpy: cheap writes into pinned staging buffers)
+# Batch assembly (host-side, numpy: cheap writes into reusable staging buffers)
 # ---------------------------------------------------------------------------
 
-def assemble_batch(requests, bucket: Bucket, *, d_cov: int | None = None):
-    """Pack up to `bucket.batch` requests into padded staging arrays.
+def alloc_staging(bucket: Bucket, *, d_cov: int | None = None) -> dict:
+    """Allocate one set of host staging buffers for `bucket`.
 
     Returns dict with u (B, m1), a (B, K, m1), b (B, K), gamma (B, m2)
-    and either lam (B, K) (tag '_lam') or X (B, d_cov). Fresh arrays per
-    batch, so the device buffers they become can be donated to the
-    executable.
+    and either lam (B, K) (tag '_lam') or X (B, d_cov). These are plain
+    host arrays; `fill_staging` resets and packs them per micro-batch,
+    and `repro.serving.pipeline.StagingRing` recycles a fixed set of
+    them so steady state allocates nothing on the submission path.
     """
     B, m1p, m2p, Kp = bucket.batch, bucket.m1, bucket.m2, bucket.K
+    staged = {
+        "u": np.empty((B, m1p), np.float32),
+        "a": np.empty((B, Kp, m1p), np.float32),
+        "b": np.empty((B, Kp), np.float32),
+        "gamma": np.empty((B, m2p), np.float32),
+    }
+    if d_cov is None:
+        staged["lam"] = np.empty((B, Kp), np.float32)
+    else:
+        staged["X"] = np.empty((B, d_cov), np.float32)
+    return staged
+
+
+def fill_staging(staged: dict, requests, bucket: Bucket) -> dict:
+    """Reset `staged` to the padding identity and pack `requests` in.
+
+    In-place: the arrays in `staged` are reused across micro-batches
+    (their previous contents are fully overwritten — phantom rows
+    included — so recycling a buffer can never leak a stale request).
+    """
     n = len(requests)
-    if n > B:
-        raise ValueError(f"{n} requests > bucket capacity {B}")
-    u = np.full((B, m1p), NEG_FILL, np.float32)
-    a = np.zeros((B, Kp, m1p), np.float32)
-    b = np.zeros((B, Kp), np.float32)
-    gamma = np.zeros((B, m2p), np.float32)
-    lam = np.zeros((B, Kp), np.float32)
-    X = None if d_cov is None else np.zeros((B, d_cov), np.float32)
+    if n > bucket.batch:
+        raise ValueError(f"{n} requests > bucket capacity {bucket.batch}")
+    staged["u"].fill(NEG_FILL)
+    staged["a"].fill(0.0)
+    staged["b"].fill(0.0)
+    staged["gamma"].fill(0.0)
+    if "lam" in staged:
+        staged["lam"].fill(0.0)
+    else:
+        staged["X"].fill(0.0)
     for i, r in enumerate(requests):
         m1, K, m2 = r.u.shape[0], r.a.shape[0], r.m2
-        u[i, :m1] = r.u
-        a[i, :K, :m1] = r.a
-        b[i, :K] = r.b
+        staged["u"][i, :m1] = r.u
+        staged["a"][i, :K, :m1] = r.a
+        staged["b"][i, :K] = r.b
         g = r.gamma if r.gamma is not None else dcg_discount(m2)
-        gamma[i, :m2] = np.asarray(g, np.float32)
+        staged["gamma"][i, :m2] = np.asarray(g, np.float32)
         if r.lam is not None:
-            lam[i, :K] = r.lam
-        if X is not None:
-            X[i] = r.X
-    out = {"u": u, "a": a, "b": b, "gamma": gamma}
-    if X is not None:
-        out["X"] = X
-    else:
-        out["lam"] = lam
-    return out
+            staged["lam"][i, :K] = r.lam
+        if "X" in staged:
+            staged["X"][i] = r.X
+    return staged
+
+
+def assemble_batch(requests, bucket: Bucket, *, d_cov: int | None = None):
+    """Pack up to `bucket.batch` requests into fresh padded staging
+    arrays (alloc_staging + fill_staging). The engine's hot path goes
+    through a StagingRing instead so buffers are recycled; this
+    fresh-allocation form is used by warmup and by tests."""
+    return fill_staging(alloc_staging(bucket, d_cov=d_cov), requests, bucket)
 
 
 def unpad_result(out, i: int, request):

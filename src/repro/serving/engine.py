@@ -1,5 +1,5 @@
 """Streaming serving engine: shape-bucketed micro-batching over the
-constrained-ranking online path.
+constrained-ranking online path, with async double-buffered execution.
 
 The unit of work is one RankRequest — one user's candidate utilities,
 constraint attributes/thresholds, slot count, and either precomputed
@@ -7,25 +7,43 @@ shadow prices (lam) or the covariate vector X for an attached lambda
 predictor. Requests stream in with heterogeneous geometry (m1, m2, K)
 from heterogeneous upstream recommenders; the engine:
 
-  1. maps each request to a shape Bucket (repro.serving.buckets) and
-     appends it to that bucket's queue;
+  1. maps each request to a shape Bucket (repro.serving.buckets),
+     mints its RankFuture, and appends it to that bucket's queue;
   2. flushes a queue when it reaches the bucket's micro-batch capacity
      (capacity flush) or when its oldest request has waited max_wait_ms
      (deadline flush, checked by `poll`), or on `drain`;
-  3. executes the flushed batch through ONE cached, pre-warmed jit
-     executable per bucket — the existing online path
-     (core.ranking.rank_given_lambda / kernels.ops.fused_rank /
-     core.serving_dist.rank_distributed when a mesh is present) — with
-     the big staging buffers donated to the runtime;
-  4. unpads each row back to its request's real geometry and stamps
-     per-request latency.
+  3. SUBMISSION SIDE (the caller's thread): assembles the flushed batch
+     into a recycled StagingRing host buffer and dispatches it through
+     ONE cached, pre-warmed jit executable per bucket — the existing
+     online path (core.ranking.rank_given_lambda /
+     kernels.ops.fused_rank / core.serving_dist.rank_distributed when
+     a mesh is present) — with the big staging buffers donated to the
+     runtime. Dispatch is asynchronous: the jit call returns device
+     futures immediately and the submission side moves on to the next
+     batch;
+  4. COMPLETION SIDE (the pipeline worker thread): while the device
+     executes batch N+1, the worker blocks on batch N's device→host
+     transfer (GIL released), stamps completion, recycles N's staging
+     buffers, and marks each of N's RankFutures done. Per-row
+     unpadding to the request's real geometry is Python work, so it
+     runs lazily on the consuming thread — future.result() or the
+     collect path behind submit/poll/drain — never on the worker.
 
 Steady state therefore never recompiles (the jit cache is the bucket
-lattice, populated by `warmup`) and never pays per-request dispatch:
-dispatch cost is amortized over the micro-batch. The engine is
-single-threaded and event-driven — `submit`/`poll` return completed
-results — which keeps it deterministic and testable; async double
-buffering is a ROADMAP follow-on.
+lattice, populated by `warmup` — the only place `block_until_ready`
+survives), never pays per-request dispatch (amortized over the
+micro-batch), and never serializes host assembly against device
+execution (the sole job of the old blocking `rank()` call, retired in
+favor of futures). `pipeline_depth` bounds the in-flight window —
+depth 1 (the default) is classic double buffering: one batch
+materializing while the next is assembled and dispatched; depth 0
+recovers the synchronous single-threaded engine (same results, no
+overlap), which is what the sync column of
+benchmarks/latency_serve.py measures and what the equivalence tests
+in tests/test_serving_pipeline.py compare against.
+
+See docs/serving.md for timelines and backpressure semantics, and
+docs/api.md for the public API.
 """
 
 from __future__ import annotations
@@ -45,10 +63,17 @@ from repro.serving.buckets import (
     Bucket,
     assemble_batch,
     bucket_for,
+    fill_staging,
     fill_stats,
     unpad_result,
 )
 from repro.serving.metrics import EngineMetrics
+from repro.serving.pipeline import (
+    ExecutionPipeline,
+    PendingBatch,
+    RankFuture,
+    StagingRing,
+)
 
 LAM_TAG = "_lam"   # requests that carry shadow prices directly
 
@@ -102,6 +127,17 @@ class ServingEngine:
                         interpret-mode on CPU)
               'dist'  — core.serving_dist.rank_distributed on `mesh`
                         (candidate axis sharded; requires mesh)
+
+    pipeline_depth: how many micro-batches the submission side may run
+    ahead of the one currently materializing. 1 (default) is classic
+    double buffering — batch N+1 is assembled and dispatched while
+    batch N's outputs transfer back — and measures best on CPU, where
+    deeper windows make XLA execute batches concurrently and thrash
+    the cores; on an accelerator backend a deeper window can hide
+    longer transfer tails. The submission side blocks (backpressure)
+    once the window is full. 0 disables the pipeline: every flush
+    dispatches, materializes, and resolves inline on the calling
+    thread — bitwise the same results, strictly serial timing.
     """
 
     def __init__(
@@ -113,12 +149,16 @@ class ServingEngine:
         executor: str = "xla",
         mesh=None,
         donate: bool | None = None,
+        pipeline_depth: int = 1,
         clock: Callable[[], float] = time.perf_counter,
     ):
         if executor not in ("xla", "fused", "dist"):
             raise ValueError(f"unknown executor {executor!r}")
         if executor == "dist" and mesh is None:
             raise ValueError("executor='dist' needs a mesh")
+        if pipeline_depth < 0:
+            raise ValueError(f"pipeline_depth must be >= 0, got "
+                             f"{pipeline_depth}")
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
         self.eps = float(eps)
@@ -127,12 +167,18 @@ class ServingEngine:
         if donate is None:  # CPU ignores donation (and warns); skip there
             donate = jax.default_backend() != "cpu"
         self.donate = bool(donate)
+        self.pipeline_depth = int(pipeline_depth)
         self.clock = clock
         self.metrics = EngineMetrics()
         self._predictors: dict[str, _PredictorEntry] = {}
         self._exec: dict[Bucket, Callable] = {}
         self._queues: dict[Bucket, list] = {}
+        self._rings: dict[Bucket, StagingRing] = {}
         self._warmed: set[Bucket] = set()
+        self._in_warmup = False           # re-warm compiles aren't violations
+        self._retired_sync: list = []     # sync-mode batches awaiting collect
+        self._pipeline = (ExecutionPipeline(depth=self.pipeline_depth)
+                          if self.pipeline_depth > 0 else None)
 
     # -- predictors ---------------------------------------------------------
 
@@ -224,21 +270,26 @@ class ServingEngine:
         fn = self._exec.get(bucket)
         if fn is None:
             fn = self._exec[bucket] = self._build_executor(bucket)
-            self.metrics.on_compile()
+            self.metrics.on_compile(in_warmup=self._in_warmup)
         return fn
 
     def warmup(self, sample) -> dict:
         """Compile every bucket reachable from `sample` (RankRequests or
         Buckets) by executing one phantom batch per bucket. After this,
-        any stream inside the lattice runs with zero recompiles."""
+        any stream inside the lattice runs with zero recompiles. This
+        is the only place the engine blocks on the device directly."""
         buckets = {r if isinstance(r, Bucket) else self.bucket_of(r)
                    for r in sample}
-        for bucket in sorted(buckets):
-            fn = self._executor_for(bucket)
-            jax.block_until_ready(
-                self._call(fn, bucket, assemble_batch([], bucket,
-                           d_cov=self._dcov(bucket))).perm)
-            self._warmed.add(bucket)
+        self._in_warmup = True
+        try:
+            for bucket in sorted(buckets):
+                fn = self._executor_for(bucket)
+                jax.block_until_ready(
+                    self._call(fn, bucket, assemble_batch([], bucket,
+                               d_cov=self._dcov(bucket))).perm)
+                self._warmed.add(bucket)
+        finally:
+            self._in_warmup = False
         self.metrics.warmed = True
         return {"buckets": [b.name for b in sorted(buckets)],
                 "compiles": self.metrics.compiles}
@@ -261,74 +312,169 @@ class ServingEngine:
         asserts every value stays 1 across a mixed-shape stream."""
         return {b.name: fn._cache_size() for b, fn in self._exec.items()}
 
-    # -- queueing / flushing ------------------------------------------------
+    # -- submission side: queueing / flushing -------------------------------
 
     def submit(self, req: RankRequest, now: float | None = None):
-        """Enqueue; returns any results completed by a capacity flush."""
+        """Enqueue; returns whatever results have retired so far (the
+        capacity-flushed batch itself, when the pipeline is enabled,
+        retires asynchronously — collect it from later submit/poll
+        calls or from `drain`)."""
+        self._enqueue(req, now)
+        return self._collect()
+
+    def submit_future(self, req: RankRequest,
+                      now: float | None = None) -> RankFuture:
+        """Enqueue and return this request's RankFuture. The future
+        resolves when the request's micro-batch retires; completed
+        results also keep flowing through submit/poll/drain, so mixing
+        the two styles is safe (same underlying results objects)."""
+        return self._enqueue(req, now)
+
+    def _enqueue(self, req: RankRequest, now: float | None) -> RankFuture:
         now = self.clock() if now is None else now
         bucket = self.bucket_of(req)
         self.metrics.on_submit(bucket, known=bucket in self._warmed)
+        fut = RankFuture(req.rid, bucket.name)
         q = self._queues.setdefault(bucket, [])
-        q.append((req, now))
+        q.append((req, now, fut))
         if len(q) >= bucket.batch:
-            return self._flush_bucket(bucket, trigger="capacity")
-        return []
+            self._flush_bucket(bucket, trigger="capacity")
+        return fut
 
     def poll(self, now: float | None = None):
         """Deadline check: flush every queue whose oldest request has
-        waited longer than max_wait_ms."""
+        waited longer than max_wait_ms; returns results retired so far."""
         now = self.clock() if now is None else now
-        out = []
         for bucket in list(self._queues):
             q = self._queues[bucket]
             if q and (now - q[0][1]) * 1e3 >= self.max_wait_ms:
-                out += self._flush_bucket(bucket, trigger="deadline")
-        return out
+                self._flush_bucket(bucket, trigger="deadline")
+        return self._collect()
 
     def drain(self):
-        """Flush everything (stream end)."""
-        out = []
+        """Flush every queue and wait for all in-flight batches to
+        retire (stream end / graceful shutdown barrier). Returns every
+        result not yet collected."""
         for bucket in list(self._queues):
             if self._queues[bucket]:
-                out += self._flush_bucket(bucket, trigger="drain")
-        return out
+                self._flush_bucket(bucket, trigger="drain")
+        if self._pipeline is not None:
+            results = []
+            for pending in self._pipeline.flush():
+                results += pending.results()
+            return results
+        return self._collect()
 
-    def _flush_bucket(self, bucket: Bucket, *, trigger: str):
+    def close(self) -> None:
+        """Graceful shutdown: drain in-flight work and stop the
+        pipeline worker. The engine rejects flushes afterwards."""
+        if self._pipeline is not None:
+            self._pipeline.flush()
+            self._pipeline.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _collect(self):
+        """Build results for every batch retired since the last call.
+        Runs on the caller's thread — the Python-heavy unpadding
+        deliberately lives here, not on the pipeline worker, so it
+        overlaps device execution instead of starving it via the GIL."""
+        if self._pipeline is not None:
+            batches = self._pipeline.collect()
+        else:
+            batches, self._retired_sync = self._retired_sync, []
+        results = []
+        for pending in batches:
+            results += pending.results()
+        return results
+
+    def _ring_for(self, bucket: Bucket) -> StagingRing:
+        ring = self._rings.get(bucket)
+        if ring is None:
+            # the in-flight window holds pipeline_depth queued batches
+            # plus the one materializing; one more slot keeps assembly
+            # of the next batch from ever waiting on a buffer.
+            ring = self._rings[bucket] = StagingRing(
+                bucket, d_cov=self._dcov(bucket),
+                depth=self.pipeline_depth + 2)
+        return ring
+
+    def _flush_bucket(self, bucket: Bucket, *, trigger: str) -> None:
         entries = self._queues[bucket]
         self._queues[bucket] = []
-        reqs = [r for r, _ in entries]
-        staged = assemble_batch(reqs, bucket, d_cov=self._dcov(bucket))
+        reqs = [r for r, _, _ in entries]
+        ring = self._ring_for(bucket)
         fn = self._executor_for(bucket)
+        t0 = self.clock()
+        staged = fill_staging(ring.acquire(), reqs, bucket)
         t_launch = self.clock()
-        out = self._call(fn, bucket, staged)
-        # one bulk device->host copy per output; per-request unpadding is
-        # then pure numpy (slicing jax arrays row-by-row would dispatch —
-        # and on first touch compile — one tiny program per slice).
-        out = RankingOutput(
+        out = self._call(fn, bucket, staged)    # async dispatch: no block
+        t1 = self.clock()
+        pending = PendingBatch(
+            bucket=bucket, entries=[(r, t) for r, t, _ in entries],
+            futures=[f for _, _, f in entries], out=out, staged=staged,
+            ring=ring, t_launch=t_launch, trigger=trigger,
+            materialize=self._materialize_batch, build=self._build_result,
+            assembly_ms=(t_launch - t0) * 1e3,
+            dispatch_ms=(t1 - t_launch) * 1e3)
+        if self._pipeline is not None:
+            self._pipeline.submit(pending)      # may block: backpressure
+        else:
+            pending.finish()
+            self._retired_sync.append(pending)
+        self.metrics.on_dispatch(
+            bucket, len(reqs), trigger, fill_stats(reqs, bucket),
+            assembly_ms=pending.assembly_ms, dispatch_ms=pending.dispatch_ms,
+            depth=pending.depth_at_dispatch, t_now=t_launch)
+
+    # -- completion side ----------------------------------------------------
+
+    def _materialize_batch(self, pending: PendingBatch) -> None:
+        """Block until one batch's outputs reach the host. Runs on the
+        pipeline worker (async mode) or inline (sync mode); this is the
+        ONLY blocking step on the completion side — the GIL is released
+        while waiting, so the submission thread keeps assembling.
+
+        One bulk device->host copy per output; per-request unpadding is
+        then pure numpy (slicing jax arrays row-by-row would dispatch —
+        and on first touch compile — one tiny program per slice)."""
+        out = pending.out
+        pending.out = RankingOutput(
             perm=np.asarray(out.perm), utility=np.asarray(out.utility),
             exposure=np.asarray(out.exposure),
             compliant=np.asarray(out.compliant), lam=out.lam)
-        t_done = self.clock()
-        self.metrics.on_batch(bucket, len(reqs), (t_done - t_launch) * 1e3,
-                              trigger, fill_stats(reqs, bucket))
-        results = []
-        for i, (req, t_enq) in enumerate(entries):
-            perm, utility, exposure, compliant = unpad_result(out, i, req)
-            self.metrics.on_result((t_done - t_enq) * 1e3,
-                                   (t_launch - t_enq) * 1e3, compliant)
-            results.append(RankResult(
-                rid=req.rid, perm=perm, utility=utility, exposure=exposure,
-                compliant=compliant, bucket=bucket.name,
-                latency_ms=(t_done - t_enq) * 1e3,
-                wait_ms=(t_launch - t_enq) * 1e3))
-        return results
+        pending.t_done = self.clock()
+        self.metrics.on_retire((pending.t_done - pending.t_launch) * 1e3,
+                               pending.t_done)
+        if pending.ring is not None:            # inputs consumed: recycle
+            pending.ring.release(pending.staged)
+            pending.staged = None
+
+    def _build_result(self, pending: PendingBatch, i: int) -> RankResult:
+        """Unpad row `i` into its RankResult. Runs lazily, exactly once
+        per row (memoized by the row's RankFuture), on whichever
+        consumer thread first asks — the engine's collect path or a
+        direct future.result() call."""
+        req, t_enq = pending.entries[i]
+        perm, utility, exposure, compliant = unpad_result(pending.out, i, req)
+        self.metrics.on_result((pending.t_done - t_enq) * 1e3,
+                               (pending.t_launch - t_enq) * 1e3, compliant)
+        return RankResult(
+            rid=req.rid, perm=perm, utility=utility, exposure=exposure,
+            compliant=compliant, bucket=pending.bucket.name,
+            latency_ms=(pending.t_done - t_enq) * 1e3,
+            wait_ms=(pending.t_launch - t_enq) * 1e3)
 
     # -- convenience driver -------------------------------------------------
 
     def serve_stream(self, requests, *, warmup: bool = True):
         """Synchronous driver: submit each request in arrival order,
         honoring deadlines between arrivals, and drain at stream end.
-        Returns results ordered by completion."""
+        Returns results ordered by completion (retirement order)."""
         requests = list(requests)
         if warmup and not self.metrics.warmed:
             self.warmup(requests)

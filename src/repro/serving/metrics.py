@@ -1,15 +1,23 @@
 """Serving-engine observability: latency percentiles, compliance,
-bucket hit / compile counters.
+bucket hit / compile counters, and pipeline stage timelines.
 
 The compile counters are the contract the engine is built around: after
 `warmup()`, `compiles_post_warmup` must stay 0 across any request stream
 whose geometries fall inside the warmed bucket lattice (asserted in
 tests/test_serving.py via these counters AND the underlying jit cache
 sizes).
+
+With the async pipeline, recording is split the same way the engine is:
+`on_dispatch` fires on the submission thread when a micro-batch is
+assembled and launched; `on_retire` / `on_result` fire on the
+completion side when its outputs materialize. Everything here is
+either a scalar add or a list append under the GIL, so the two sides
+can record concurrently without a lock.
 """
 
 from __future__ import annotations
 
+import threading
 from collections import defaultdict
 from dataclasses import dataclass, field
 
@@ -34,11 +42,23 @@ class EngineMetrics:
     # padding overhead
     real_cells: int = 0
     padded_cells: int = 0
+    # pipeline stage timelines (per micro-batch, ms)
+    assembly_ms: list = field(default_factory=list)   # host packing
+    dispatch_ms: list = field(default_factory=list)   # jit call -> futures
+    exec_ms: list = field(default_factory=list)       # launch -> outputs home
+    queue_depth: list = field(default_factory=list)   # in-flight at dispatch
+    # serving window (for the overlap ratio): first dispatch, last retire
+    t_first_dispatch: float | None = None
+    t_last_retire: float | None = None
     # quality / latency
     compliant_sum: float = 0.0
     latencies_ms: list = field(default_factory=list)
     queue_wait_ms: list = field(default_factory=list)
-    exec_ms: list = field(default_factory=list)
+    # on_result runs on whichever consumer thread builds a result
+    # (future.result() is a public API), so unlike the submission/
+    # completion pair its read-modify-writes need a real lock.
+    _result_lock: threading.Lock = field(default_factory=threading.Lock,
+                                         repr=False)
 
     # -- recording ----------------------------------------------------------
 
@@ -48,15 +68,23 @@ class EngineMetrics:
         if self.warmed and not known:
             self.oversize_requests += 1
 
-    def on_compile(self) -> None:
+    def on_compile(self, in_warmup: bool = False) -> None:
+        """A bucket executable was built. Compiles inside `warmup` —
+        including a later re-warm extending the lattice — never count
+        against the post-warmup contract; only compiles forced by
+        traffic (an unwarmed bucket hit by a live request) do."""
         self.compiles += 1
-        if self.warmed:
+        if self.warmed and not in_warmup:
             self.compiles_post_warmup += 1
 
-    def on_batch(self, bucket, n_real: int, exec_ms: float, trigger: str,
-                 fill: dict) -> None:
+    def on_dispatch(self, bucket, n_real: int, trigger: str, fill: dict,
+                    *, assembly_ms: float, dispatch_ms: float,
+                    depth: int, t_now: float) -> None:
+        """Submission side: a micro-batch was assembled and launched."""
         self.batches += 1
-        self.exec_ms.append(exec_ms)
+        self.assembly_ms.append(assembly_ms)
+        self.dispatch_ms.append(dispatch_ms)
+        self.queue_depth.append(depth)
         if trigger == "capacity":
             self.capacity_flushes += 1
         elif trigger == "deadline":
@@ -65,13 +93,21 @@ class EngineMetrics:
             self.drain_flushes += 1
         self.real_cells += fill["real_cells"]
         self.padded_cells += fill["padded_cells"]
+        if self.t_first_dispatch is None:
+            self.t_first_dispatch = t_now
+
+    def on_retire(self, exec_ms: float, t_now: float) -> None:
+        """Completion side: a micro-batch's outputs reached the host."""
+        self.exec_ms.append(exec_ms)
+        self.t_last_retire = t_now
 
     def on_result(self, latency_ms: float, wait_ms: float,
                   compliant: bool) -> None:
-        self.results += 1
-        self.latencies_ms.append(latency_ms)
-        self.queue_wait_ms.append(wait_ms)
-        self.compliant_sum += float(compliant)
+        with self._result_lock:
+            self.results += 1
+            self.latencies_ms.append(latency_ms)
+            self.queue_wait_ms.append(wait_ms)
+            self.compliant_sum += float(compliant)
 
     # -- reporting ----------------------------------------------------------
 
@@ -81,6 +117,25 @@ class EngineMetrics:
             return {f"p{q}": float("nan") for q in qs}
         arr = np.asarray(xs)
         return {f"p{q}": round(float(np.percentile(arr, q)), 3) for q in qs}
+
+    def overlap_ratio(self) -> float:
+        """How much pipelining compressed the serving window.
+
+        serial = what the stages would cost laid end to end
+        (Σ assembly + Σ dispatch + Σ execute/transfer); wall = first
+        dispatch → last retire. 0 means fully serialized (the sync
+        engine), values toward 1 mean host assembly ran almost entirely
+        under device execution. Only meaningful for back-to-back
+        streams — arrival gaps inflate the wall and deflate the ratio.
+        """
+        if self.t_first_dispatch is None or self.t_last_retire is None:
+            return 0.0
+        serial = (sum(self.assembly_ms) + sum(self.dispatch_ms)
+                  + sum(self.exec_ms))
+        wall = (self.t_last_retire - self.t_first_dispatch) * 1e3
+        if serial <= 0.0 or wall <= 0.0:
+            return 0.0
+        return max(0.0, min(1.0, 1.0 - wall / serial))
 
     def summary(self) -> dict:
         lat = self._pct(self.latencies_ms)
@@ -99,7 +154,15 @@ class EngineMetrics:
                          if self.padded_cells else float("nan"),
             "latency_ms": lat,
             "queue_wait_ms": self._pct(self.queue_wait_ms),
-            "exec_ms_per_batch": self._pct(self.exec_ms),
+            "pipeline": {
+                "assembly_ms_per_batch": self._pct(self.assembly_ms),
+                "dispatch_ms_per_batch": self._pct(self.dispatch_ms),
+                "exec_ms_per_batch": self._pct(self.exec_ms),
+                "queue_depth_max": max(self.queue_depth, default=0),
+                "queue_depth_mean": round(float(np.mean(self.queue_depth)), 3)
+                                    if self.queue_depth else 0.0,
+                "overlap_ratio": round(self.overlap_ratio(), 3),
+            },
             "compliance": round(self.compliant_sum / self.results, 3)
                           if self.results else float("nan"),
         }

@@ -1,0 +1,118 @@
+"""Documentation health: relative links resolve, anchors exist, and the
+docs/api.md code snippets actually run against the current tree.
+
+This is what the CI docs job executes; it doubles as a local check
+(`pytest tests/test_docs.py`). Snippet execution is doctest-style: all
+```python blocks in docs/api.md run in order in one shared namespace,
+so later snippets can build on earlier ones exactly as a reader would.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(
+    [REPO / "README.md", REPO / "EXPERIMENTS.md", REPO / "ROADMAP.md"]
+    + list((REPO / "docs").glob("*.md")))
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+CODE_FENCE_RE = re.compile(r"^```", re.M)
+
+
+def _strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks so example links aren't link-checked."""
+    out, keep = [], True
+    for line in text.splitlines():
+        if line.startswith("```"):
+            keep = not keep
+            continue
+        if keep:
+            out.append(line)
+    return "\n".join(out)
+
+
+def _heading_anchors(text: str) -> set:
+    """GitHub-style anchors for every markdown heading: lowercase,
+    drop everything but word chars / spaces / hyphens, then map each
+    space to a hyphen (runs of spaces produce runs of hyphens, exactly
+    like GitHub's slugger)."""
+    anchors = set()
+    for line in _strip_code_blocks(text).splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if not m:
+            continue
+        slug = m.group(1).strip().lower()
+        slug = re.sub(r"[^\w\s-]", "", slug, flags=re.UNICODE)
+        anchors.add(slug.replace(" ", "-"))
+    return anchors
+
+
+def _links_of(path: Path):
+    return LINK_RE.findall(_strip_code_blocks(path.read_text()))
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_relative_links_resolve(doc):
+    """Every relative link in README/EXPERIMENTS/ROADMAP/docs/ points
+    at a file that exists; fragment links point at a real heading."""
+    broken = []
+    for link in _links_of(doc):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, fragment = link.partition("#")
+        target_path = (doc.parent / target).resolve() if target else doc
+        if not target_path.exists():
+            broken.append(f"{link} -> missing file {target_path}")
+            continue
+        if fragment and target_path.suffix == ".md":
+            anchors = _heading_anchors(target_path.read_text())
+            if fragment not in anchors:
+                broken.append(f"{link} -> missing anchor #{fragment} "
+                              f"(have: {sorted(anchors)})")
+    assert not broken, f"{doc.name}: broken links:\n" + "\n".join(broken)
+
+
+def test_readme_links_docs_tree():
+    """README must link every page of the docs/ tree."""
+    readme = (REPO / "README.md").read_text()
+    for page in ("architecture", "serving", "benchmarks", "api"):
+        assert f"docs/{page}.md" in readme, f"README missing docs/{page}.md"
+
+
+def test_experiments_pipeline_section_cross_linked():
+    """EXPERIMENTS §Pipeline and docs/benchmarks.md reference each
+    other (satellite: every EXPERIMENTS section is reachable from the
+    benchmarks doc)."""
+    experiments = (REPO / "EXPERIMENTS.md").read_text()
+    benchdoc = (REPO / "docs" / "benchmarks.md").read_text()
+    assert "Pipeline" in experiments
+    assert "EXPERIMENTS.md#" in benchdoc
+
+
+def _python_snippets(path: Path):
+    blocks, in_block, buf = [], False, []
+    for line in path.read_text().splitlines():
+        if line.strip().startswith("```python"):
+            in_block, buf = True, []
+        elif line.strip() == "```" and in_block:
+            in_block = False
+            blocks.append("\n".join(buf))
+        elif in_block:
+            buf.append(line)
+    return blocks
+
+
+def test_api_doc_snippets_run():
+    """Execute every ```python block in docs/api.md, in order, in one
+    namespace — the documented API must actually work as written."""
+    blocks = _python_snippets(REPO / "docs" / "api.md")
+    assert len(blocks) >= 8, "docs/api.md lost its runnable snippets?"
+    ns = {}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"docs/api.md#block{i}", "exec"), ns)
+        except Exception as e:
+            pytest.fail(f"docs/api.md snippet #{i} failed: {e!r}\n"
+                        f"---\n{block}\n---")

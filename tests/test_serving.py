@@ -118,7 +118,8 @@ def test_fused_executor_matches_xla_executor():
 
 
 # ---------------------------------------------------------------------------
-# Flush triggers
+# Flush triggers (sync engine: pipeline_depth=0 makes submit/poll return
+# the flushed batch inline, so the trigger -> result mapping is exact)
 # ---------------------------------------------------------------------------
 
 
@@ -133,7 +134,7 @@ def _tiny_request(rid, m1=64, m2=8, K=2):
 
 
 def test_capacity_flush_fires_on_full_batch():
-    eng = ServingEngine(max_batch=4, max_wait_ms=1e9)
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=0)
     out = []
     for i in range(4):
         out += eng.submit(_tiny_request(i), now=0.0)
@@ -141,8 +142,20 @@ def test_capacity_flush_fires_on_full_batch():
     assert eng.metrics.capacity_flushes == 1
 
 
+def test_capacity_flush_retires_async_with_pipeline():
+    """Same stream through the pipelined engine: the capacity flush
+    dispatches without blocking and the batch retires by drain time."""
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=2)
+    out = []
+    for i in range(4):
+        out += eng.submit(_tiny_request(i), now=0.0)
+    out += eng.drain()
+    assert sorted(r.rid for r in out) == [0, 1, 2, 3]
+    assert eng.metrics.capacity_flushes == 1
+
+
 def test_deadline_flush_fires_on_max_wait():
-    eng = ServingEngine(max_batch=4, max_wait_ms=2.0)
+    eng = ServingEngine(max_batch=4, max_wait_ms=2.0, pipeline_depth=0)
     assert eng.submit(_tiny_request(0), now=0.0) == []
     assert eng.poll(now=0.001) == []            # 1 ms: under deadline
     out = eng.poll(now=0.003)                   # 3 ms: over deadline
@@ -152,7 +165,7 @@ def test_deadline_flush_fires_on_max_wait():
 
 
 def test_drain_flushes_everything():
-    eng = ServingEngine(max_batch=8, max_wait_ms=1e9)
+    eng = ServingEngine(max_batch=8, max_wait_ms=1e9, pipeline_depth=0)
     for i in range(3):
         eng.submit(_tiny_request(i))
     out = eng.drain()

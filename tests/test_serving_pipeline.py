@@ -1,0 +1,256 @@
+"""Async double-buffered pipeline: sync/async result equivalence,
+future-to-request association, backpressure, and graceful shutdown.
+
+The pipeline must be a pure scheduling change: for any stream, the
+pipelined engine (pipeline_depth >= 1) returns bitwise the same
+perm/utility/exposure/compliance per rid as the synchronous engine
+(pipeline_depth=0), differing only in when results materialize.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.constraints import dcg_discount
+from repro.core.predictors import KNNLambdaPredictor
+from repro.serving import (
+    ExecutionPipeline,
+    RankRequest,
+    Scenario,
+    ServingEngine,
+    StagingRing,
+    bucket_for,
+    make_stream,
+)
+
+
+def _tiny_request(rid, m1=64, m2=8, K=2):
+    rng = np.random.default_rng(rid)
+    return RankRequest(
+        rid=rid, u=rng.uniform(1, 5, m1).astype(np.float32),
+        a=(rng.random((K, m1)) < 0.3).astype(np.float32),
+        b=np.zeros(K, np.float32), m2=m2,
+        lam=np.zeros(K, np.float32),
+        gamma=np.asarray(dcg_discount(m2), np.float32))
+
+
+def _mixed_stream(n=256, seed=4, d=12, K=5):
+    """>= 2 archs, >= 3 geometries, predictor + raw-lam paths mixed."""
+    rng = np.random.default_rng(seed)
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(64, d)).astype(np.float32),
+        np.abs(rng.normal(size=(64, K))).astype(np.float32), k=5)
+    mix = (
+        Scenario("feed", m1=500, m2=50, K=K, weight=3.0, tag="knn", d_cov=d),
+        Scenario("strip", m1=1000, m2=20, K=3, weight=2.0),
+        Scenario("notif", m1=120, m2=8, K=3, weight=1.0),
+    )
+    return make_stream(mix, n_requests=n, seed=seed), ("knn", knn, d)
+
+
+def _engine(depth, max_batch=16, max_wait_ms=2.0, predictor=None):
+    eng = ServingEngine(max_batch=max_batch, max_wait_ms=max_wait_ms,
+                        pipeline_depth=depth)
+    if predictor is not None:
+        tag, pred, d = predictor
+        eng.register_predictor(tag, pred, d_cov=d)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# Sync/async equivalence on a mixed 256-request stream
+# ---------------------------------------------------------------------------
+
+
+def test_sync_async_equivalence_mixed_256_stream():
+    reqs, predictor = _mixed_stream(256)
+    ref = {r.rid: r
+           for r in _engine(0, predictor=predictor).serve_stream(reqs)}
+    for depth in (1, 2, 4):
+        got = {r.rid: r
+               for r in _engine(depth, predictor=predictor).serve_stream(reqs)}
+        assert sorted(got) == sorted(ref) == list(range(256))
+        for rid in ref:
+            np.testing.assert_array_equal(got[rid].perm, ref[rid].perm)
+            np.testing.assert_array_equal(got[rid].exposure,
+                                          ref[rid].exposure)
+            assert got[rid].utility == ref[rid].utility
+            assert got[rid].compliant == ref[rid].compliant
+            assert got[rid].bucket == ref[rid].bucket
+
+
+def test_async_stream_preserves_no_recompile_contract():
+    reqs, predictor = _mixed_stream(128)
+    eng = _engine(2, predictor=predictor)
+    eng.warmup(reqs)
+    eng.serve_stream(reqs)
+    assert eng.metrics.compiles_post_warmup == 0
+    sizes = eng.jit_cache_sizes()
+    assert sizes and all(v == 1 for v in sizes.values()), sizes
+
+
+# ---------------------------------------------------------------------------
+# Futures: association, ordering, callbacks
+# ---------------------------------------------------------------------------
+
+
+def test_futures_resolve_to_their_own_request():
+    """Every future resolves to a result carrying its own rid, and the
+    payload matches what the sync engine computes for that rid."""
+    reqs, predictor = _mixed_stream(64)
+    ref = {r.rid: r
+           for r in _engine(0, predictor=predictor).serve_stream(reqs)}
+    eng = _engine(2, predictor=predictor)
+    eng.warmup(reqs)
+    futures = [eng.submit_future(r) for r in reqs]
+    eng.drain()
+    assert all(f.done() for f in futures)
+    for req, fut in zip(reqs, futures):
+        res = fut.result(timeout=5.0)
+        assert fut.rid == req.rid == res.rid
+        np.testing.assert_array_equal(res.perm, ref[req.rid].perm)
+        assert res.bucket == fut.bucket_name
+
+
+def test_futures_within_bucket_resolve_in_dispatch_order():
+    """One bucket, several capacity flushes: completion callbacks fire
+    batch by batch in dispatch order (the single completion worker
+    retires FIFO)."""
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=2)
+    order = []
+    futures = []
+    for i in range(12):
+        fut = eng.submit_future(_tiny_request(i))
+        fut.add_done_callback(lambda f: order.append(f.rid))
+        futures.append(fut)
+    eng.drain()
+    assert order == list(range(12))
+
+
+def test_future_result_blocks_until_drain_releases():
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=2)
+    fut = eng.submit_future(_tiny_request(0))
+    assert not fut.done()                       # queued, not even flushed
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.01)
+    eng.drain()
+    assert fut.result(timeout=5.0).rid == 0
+
+
+def test_callback_after_done_fires_immediately():
+    eng = ServingEngine(max_batch=1, max_wait_ms=1e9, pipeline_depth=1)
+    fut = eng.submit_future(_tiny_request(0))   # max_batch=1: flushes now
+    eng.drain()
+    fired = []
+    fut.add_done_callback(lambda f: fired.append(f.rid))
+    assert fired == [0]
+
+
+# ---------------------------------------------------------------------------
+# Graceful drain / shutdown with in-flight batches
+# ---------------------------------------------------------------------------
+
+
+def test_drain_retires_all_inflight_batches():
+    """Submit enough for several capacity flushes to be in flight, then
+    drain: every result must come back exactly once."""
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=2)
+    collected = []
+    for i in range(19):                         # 4 full flushes + 3 queued
+        collected += eng.submit(_tiny_request(i))
+    collected += eng.drain()
+    assert sorted(r.rid for r in collected) == list(range(19))
+    assert eng.metrics.capacity_flushes == 4
+    assert eng.metrics.drain_flushes == 1
+
+
+def test_close_is_graceful_and_idempotent():
+    with ServingEngine(max_batch=4, max_wait_ms=1e9,
+                       pipeline_depth=2) as eng:
+        futures = [eng.submit_future(_tiny_request(i)) for i in range(8)]
+    # context exit closed the engine: in-flight batches were retired
+    # (two capacity flushes cover all 8 requests; nothing was queued).
+    assert all(f.done() for f in futures)
+    eng.close()                                 # second close: no-op
+    with pytest.raises(RuntimeError):
+        eng._pipeline.submit(None)              # closed pipeline rejects
+
+
+def test_engine_reusable_after_drain():
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=2)
+    first = [eng.submit(_tiny_request(i)) for i in range(4)]
+    out1 = sum(first, []) + eng.drain()
+    out2 = []
+    for i in range(4, 8):
+        out2 += eng.submit(_tiny_request(i))
+    out2 += eng.drain()
+    assert sorted(r.rid for r in out1) == [0, 1, 2, 3]
+    assert sorted(r.rid for r in out2) == [4, 5, 6, 7]
+
+
+def test_retire_error_fails_futures_and_surfaces_on_flush():
+    boom = RuntimeError("retire exploded")
+
+    def bad_materialize(pending):
+        raise boom
+
+    bucket = bucket_for(m1=64, m2=8, K=2, tag="_lam", batch=4)
+    ring = StagingRing(bucket, d_cov=None, depth=1)
+    staged = ring.acquire()
+    pipe = ExecutionPipeline(depth=1)
+    from repro.serving.pipeline import PendingBatch, RankFuture
+    fut = RankFuture(0, "b")
+    pipe.submit(PendingBatch(bucket=bucket, entries=[], futures=[fut],
+                             out=None, staged=staged, ring=ring,
+                             t_launch=0.0, trigger="drain",
+                             materialize=bad_materialize, build=None))
+    with pytest.raises(RuntimeError, match="retire exploded"):
+        pipe.flush()
+    with pytest.raises(RuntimeError, match="retire exploded"):
+        fut.result(timeout=5.0)
+    # the failed batch's staging buffers were recycled, not leaked —
+    # acquire() would deadlock otherwise (ring depth is 1).
+    assert ring.acquire() is staged
+    pipe.close()
+
+
+# ---------------------------------------------------------------------------
+# Staging ring: backpressure + buffer safety
+# ---------------------------------------------------------------------------
+
+
+def test_staging_ring_blocks_when_exhausted_and_recycles():
+    bucket = bucket_for(m1=64, m2=8, K=2, tag="_lam", batch=4)
+    ring = StagingRing(bucket, d_cov=None, depth=2)
+    b1, b2 = ring.acquire(), ring.acquire()
+    assert b1 is not b2
+    grabbed = []
+    t = threading.Thread(target=lambda: grabbed.append(ring.acquire()))
+    t.start()
+    t.join(timeout=0.05)
+    assert t.is_alive() and not grabbed         # exhausted: acquire blocks
+    ring.release(b1)
+    t.join(timeout=5.0)
+    assert grabbed == [b1]                      # recycled, not reallocated
+
+
+def test_staging_buffers_are_not_rewritten_while_in_flight():
+    """Two consecutive flushes of one bucket with depth 2 must use
+    distinct staging buffers (rewriting the first would race its
+    in-flight transfer)."""
+    seen = []
+    orig_materialize = ServingEngine._materialize_batch
+
+    def spy(self, pending):
+        seen.append(id(pending.staged["u"]))
+        return orig_materialize(self, pending)
+
+    eng = ServingEngine(max_batch=2, max_wait_ms=1e9, pipeline_depth=2)
+    eng._materialize_batch = spy.__get__(eng)
+    for i in range(8):                          # 4 back-to-back flushes
+        eng.submit(_tiny_request(i))
+    eng.drain()
+    assert len(seen) == 4
+    assert len(set(seen[:2])) == 2              # adjacent flushes differ
+    assert len(set(seen)) <= eng.pipeline_depth + 2   # bounded ring: recycled
