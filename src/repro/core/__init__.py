@@ -25,9 +25,11 @@ from repro.core.predictors import (
     knn_predict,
 )
 from repro.core.ranking import (
+    AUDIT_TOL,
     EPS_GRID,
     RankingOutput,
     RankingPipeline,
+    audit_selected,
     fit_pipeline,
     rank_given_lambda,
     rank_with_strategy,

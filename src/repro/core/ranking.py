@@ -42,7 +42,13 @@ from repro.core.predictors import (
 Array = jax.Array
 
 # Paper footnote 3: eps candidate grid {0} U {i*10^-j | i in 1:9, j in 1:4}.
-EPS_GRID = tuple([0.0] + [i * 10.0 ** (-j) for j in range(1, 5) for i in range(1, 10)])
+# Kept in ascending order for readability; tune_eps sorts whatever grid it
+# is given, so the "ties -> smaller eps" rule never depends on grid order.
+EPS_GRID = tuple([0.0] + [i * 10.0 ** (-j) for j in range(4, 0, -1) for i in range(1, 10)])
+
+# Compliance slack: exposure >= b - AUDIT_TOL counts as satisfied. Shared by
+# every audit path (jnp, kernel flush, distributed merge).
+AUDIT_TOL = 1e-6
 
 
 @jax.tree_util.register_dataclass
@@ -92,9 +98,15 @@ def tune_eps(
     grid=EPS_GRID,
 ) -> float:
     """Pick eps minimizing train-set constraint-violation probability
-    (ties -> smaller eps), per paper footnote 3."""
+    (ties -> smaller eps), per paper footnote 3.
+
+    The strict-improvement comparison keeps the FIRST grid point reaching
+    the minimum, so the grid is iterated in ascending order regardless of
+    how the caller's `grid` is arranged — a descending (or interleaved,
+    like the i*10^-j enumeration) sweep would keep a larger eps on ties.
+    """
     best_eps, best_viol = 0.0, np.inf
-    for eps in grid:
+    for eps in sorted(float(e) for e in grid):
         out = rank_given_lambda(u, a, b, lam, gamma, m2=m2, eps=float(eps))
         viol = float(jnp.mean(1.0 - out.compliant.astype(jnp.float32)))
         if viol < best_viol - 1e-12:
@@ -138,7 +150,31 @@ def fit_pipeline(
 # Online stage
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("m2", "eps"))
+def audit_selected(
+    u_sel: Array,       # (..., m2) selected items' raw utilities
+    a_sel: Array,       # (..., K, m2) selected items' attribute values
+    gamma: Array,       # (..., m2) slot discounts
+    b: Array,           # (..., K) exposure thresholds
+    *,
+    tol: float = AUDIT_TOL,
+):
+    """The audit epilogue on already-SELECTED per-slot values: utility,
+    per-constraint exposure, and compliance. This is the single source of
+    truth for the audit math — used by the jnp path (rank_given_lambda),
+    the distributed merge (core.serving_dist), the XLA fallback oracle
+    (kernels.ref.rank_audited_ref); the Pallas rank+audit kernel's flush
+    step mirrors it op-for-op in VMEM so outputs stay bitwise identical.
+
+    Written as multiply + last-axis reductions (not einsum) so the jnp
+    and in-kernel lowerings accumulate in the same order.
+    """
+    utility = jnp.sum(u_sel * gamma, axis=-1)                    # (...,)
+    exposure = jnp.sum(a_sel * gamma[..., None, :], axis=-1)     # (..., K)
+    compliant = jnp.all(exposure >= b - tol, axis=-1)            # (...,)
+    return utility, exposure, compliant
+
+
+@partial(jax.jit, static_argnames=("m2", "eps", "backend"))
 def rank_given_lambda(
     u: Array,           # (n, m1)
     a: Array,           # (n, K, m1) or (K, m1)
@@ -148,17 +184,28 @@ def rank_given_lambda(
     *,
     m2: int,
     eps: float = 1e-4,
+    backend: str = "xla",
 ) -> RankingOutput:
     """The hot path, batched: s = u + (1+eps) lam @ a; top-m2 by s.
 
-    Pure jnp reference; the Pallas `fused_rank` kernel computes the same
-    quantity with the adjusted scores never leaving VMEM.
+    ``backend='xla'`` is the pure-jnp reference. ``backend='kernel'``
+    routes through the fused Pallas rank+audit kernel
+    (repro.kernels.ops.rank_audited): selection AND the audit epilogue
+    happen inside one VMEM sweep — no post-kernel reads of ``u``/``a``
+    (it degrades to this XLA path itself when the kernel's static
+    constraints don't hold, e.g. m2 > MAX_KERNEL_M2).
 
     ``gamma`` may be per-request (n, m2): shape-bucketed serving pads
     requests with fewer real slots by zeroing their trailing discounts,
     which leaves utility/exposure/compliance identical to the unpadded
     problem (repro.serving.buckets).
     """
+    if backend == "kernel":
+        from repro.kernels.ops import rank_audited  # deferred: no cycle
+
+        return rank_audited(u, a, b, lam, gamma, m2=m2, eps=eps)
+    if backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}")
     if a.ndim == 2:
         a = jnp.broadcast_to(a, (u.shape[0],) + a.shape)
     if b.ndim == 1:
@@ -168,12 +215,10 @@ def rank_given_lambda(
     s = u + (1.0 + eps) * jnp.einsum("nk,nkm->nm", lam, a)
     perm = rank_by_sort(s, m2)                                   # (n, m2)
     u_sel = jnp.take_along_axis(u, perm, axis=-1)                # (n, m2)
-    utility = jnp.einsum("nm,nm->n", u_sel, gamma)
-    a_sel = jnp.take_along_axis(
-        a, perm[:, None, :].repeat(a.shape[1], axis=1), axis=-1
-    )                                                            # (n, K, m2)
-    exposure = jnp.einsum("nkm,nm->nk", a_sel, gamma)
-    compliant = jnp.all(exposure >= b - 1e-6, axis=-1)
+    # broadcast gather: perm (n, 1, m2) indexes every constraint row
+    # without materializing an (n, K, m2) index tensor
+    a_sel = jnp.take_along_axis(a, perm[:, None, :], axis=-1)    # (n, K, m2)
+    utility, exposure, compliant = audit_selected(u_sel, a_sel, gamma, b)
     return RankingOutput(
         perm=perm, utility=utility, exposure=exposure,
         compliant=compliant, lam=lam,

@@ -99,7 +99,10 @@ def rank_distributed(
     scores computed per item shard, local top-m2 per shard, merge of
     m2*shards candidates. Raw utilities AND the K constraint-attribute
     rows ride the merge as payloads, so utility / exposure / compliance
-    need no second gather — the outputs match rank_given_lambda exactly.
+    need no second gather: the merged payloads feed the shared audit
+    epilogue (core.ranking.audit_selected — the same math the Pallas
+    rank+audit kernel runs in VMEM) and the outputs match
+    rank_given_lambda exactly.
 
     Accepts the same shared-vs-per-request broadcast forms as
     rank_given_lambda (per-request a/b/gamma is what the shape-bucketed
@@ -107,7 +110,7 @@ def rank_distributed(
 
     Returns a RankingOutput.
     """
-    from repro.core.ranking import RankingOutput
+    from repro.core.ranking import RankingOutput, audit_selected
 
     batch_axes = tuple(ax for ax in batch_axes if ax in mesh.axis_names)
     a_spec = (P(batch_axes, None, item_axis) if a.ndim == 3
@@ -125,9 +128,8 @@ def rank_distributed(
         payload = {"u": u_l,
                    "a": jnp.moveaxis(a_l, 1, 0)}              # (K, B_l, m1_l)
         vals, idx, sel = distributed_top_k(s, m2, item_axis, payload=payload)
-        utility = jnp.einsum("bm,bm->b", sel["u"], gamma_r)
-        exposure = jnp.einsum("kbm,bm->bk", sel["a"], gamma_r)
-        compliant = jnp.all(exposure >= b_r - 1e-6, axis=-1)
+        utility, exposure, compliant = audit_selected(
+            sel["u"], jnp.moveaxis(sel["a"], 0, 1), gamma_r, b_r)
         return RankingOutput(perm=idx, utility=utility, exposure=exposure,
                              compliant=compliant, lam=lam_l)
 

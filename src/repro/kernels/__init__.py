@@ -1,8 +1,18 @@
 # Pallas TPU kernels for the compute hot-spots the paper optimizes:
 #   fused_rank    — adjusted-score ranking (the <50 ms online hot path)
+#   rank_audited  — rank + in-VMEM audit: one kernel emits the complete
+#                   RankingOutput (perm/utility/exposure/compliance) with
+#                   zero post-kernel reads of u/a
 #   knn_topk      — lambda-predictor KNN over the train-user database
 #   embedding_bag — recsys sparse-lookup substrate
 # Each has a pure-jnp oracle in ref.py; ops.py wraps with padding +
-# XLA fallbacks. Validated with interpret=True on CPU (tests/test_kernels.py).
+# XLA fallbacks. Validated with interpret=True on CPU (tests/test_kernels.py,
+# tests/test_rank_audited.py).
 from repro.kernels import ref
-from repro.kernels.ops import embedding_bag, fused_rank, knn_predict_kernel, knn_topk
+from repro.kernels.ops import (
+    embedding_bag,
+    fused_rank,
+    knn_predict_kernel,
+    knn_topk,
+    rank_audited,
+)

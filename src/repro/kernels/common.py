@@ -10,6 +10,15 @@ Ties break toward the candidate that comes FIRST in the concatenated
 order. Because the running buffer (earlier tiles) precedes the fresh tile
 and within a tile iota order is ascending, global tie-breaking is 'lowest
 index wins' — matching the jnp stable-argsort oracle in ref.py.
+
+The merge optionally carries PAYLOAD columns: a pytree of arrays whose
+last axis is the candidate axis (running (B, ..., k), tile (B, ..., T)).
+Each selected winner drags its payload slots along, so a kernel can keep
+per-candidate side data (raw utilities, constraint-attribute columns)
+resident in VMEM across the whole streaming sweep and never re-gather
+them from HBM afterwards — the mechanism behind the rank+audit kernel
+(fused_rank.rank_audited_pallas) and the in-VMEM twin of the payload
+ride-along in repro.distributed.topk.distributed_top_k.
 """
 
 from __future__ import annotations
@@ -29,25 +38,56 @@ def first_argmax(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.min(masked, axis=-1)
 
 
+def _select_one(p: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Extract the single onehot-marked candidate column of a payload.
+
+    p (B, ..., C), onehot (B, C) with exactly one True per row ->
+    (B, ...). Sum-of-masked is exact (x + 0.0 == x in IEEE), works for
+    any signed payload, and is a pure lane reduction."""
+    oh = onehot.reshape(onehot.shape[:1] + (1,) * (p.ndim - 2)
+                        + onehot.shape[-1:])
+    return jnp.sum(jnp.where(oh, p, jnp.zeros_like(p)), axis=-1)
+
+
+def _write_col(out: jnp.ndarray, val: jnp.ndarray, col: jnp.ndarray):
+    """Write val (B, ...) into the col-marked last-axis slot of
+    out (B, ..., k); col is a (B, k) onehot column mask."""
+    cb = col.reshape(col.shape[:1] + (1,) * (out.ndim - 2) + col.shape[-1:])
+    return jnp.where(cb, val[..., None], out)
+
+
 def topk_merge(
     run_vals: jnp.ndarray,   # (B, k) running top values (descending-ish)
     run_idx: jnp.ndarray,    # (B, k) their global indices
     tile_vals: jnp.ndarray,  # (B, T) fresh candidate values
     tile_idx: jnp.ndarray,   # (B, T) their global indices
     k: int,
+    run_payload=None,        # pytree of (B, ..., k) per-slot side data
+    tile_payload=None,       # matching pytree of (B, ..., T)
 ):
-    """Return new (run_vals, run_idx): top-k of the union, descending,
-    ties to lower concat position (running buffer first)."""
+    """Return new (run_vals, run_idx[, run_payload]): top-k of the union,
+    descending, ties to lower concat position (running buffer first).
+    When payloads ride along, each winner's payload slots are selected by
+    the same onehot that selects its value — (vals, idx, payload)."""
     B = run_vals.shape[0]
+    has_payload = run_payload is not None
     cand_v = jnp.concatenate([run_vals, tile_vals], axis=-1)   # (B, k+T)
     cand_i = jnp.concatenate([run_idx, tile_idx], axis=-1)
+    cand_p = None
+    if has_payload:
+        cand_p = jax.tree.map(
+            lambda rp, tp: jnp.concatenate([rp, tp], axis=-1),
+            run_payload, tile_payload)
     iota = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, dimension=1)
 
     out_v = jnp.full((B, k), NEG_INF, cand_v.dtype)
     out_i = jnp.zeros((B, k), jnp.int32)
+    out_p = (jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-1] + (k,), p.dtype), cand_p)
+        if has_payload else None)
 
     def body(j, carry):
-        cand_v, out_v, out_i = carry
+        cand_v, out_v, out_i, out_p = carry
         sel = first_argmax(cand_v)                             # (B,)
         onehot = iota == sel[:, None]                          # (B, k+T)
         v = jnp.max(jnp.where(onehot, cand_v, NEG_INF), axis=-1)
@@ -56,8 +96,15 @@ def topk_merge(
         col = jax.lax.broadcasted_iota(jnp.int32, (B, k), dimension=1) == j
         out_v = jnp.where(col, v[:, None], out_v)
         out_i = jnp.where(col, gi[:, None], out_i)
+        if has_payload:
+            out_p = jax.tree.map(
+                lambda op, cp: _write_col(op, _select_one(cp, onehot), col),
+                out_p, cand_p)
         cand_v = jnp.where(onehot, NEG_INF, cand_v)
-        return cand_v, out_v, out_i
+        return cand_v, out_v, out_i, out_p
 
-    _, out_v, out_i = jax.lax.fori_loop(0, k, body, (cand_v, out_v, out_i))
+    _, out_v, out_i, out_p = jax.lax.fori_loop(
+        0, k, body, (cand_v, out_v, out_i, out_p))
+    if has_payload:
+        return out_v, out_i, out_p
     return out_v, out_i

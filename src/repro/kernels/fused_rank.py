@@ -24,6 +24,20 @@ Alignment: Tm is a multiple of 128 (lanes); Bn a multiple of 8
 (sublanes, f32). m2 <= MAX_KERNEL_M2 keeps the merge cheap; bigger m2
 falls back to the XLA path in ops.py (a full sort is the right tool
 once m2 ~ m1).
+
+rank+audit (`rank_audited_pallas`) extends the same sweep into the full
+serving contract: the streaming merge carries each winner's raw utility
+and K constraint-attribute values as VMEM payload columns
+(common.topk_merge's payload ride-along), and the flush step computes
+utility = sum(u_sel * gamma), exposure_k = sum(a_sel_k * gamma), and
+compliant = all(exposure >= b - tol) before anything leaves the kernel.
+The post-rank XLA epilogue (gather u/a by the emitted indices, einsum
+against gamma) is gone: its HBM cost — an O((K+1)·m2) random gather
+back into the (n, K, m1) attribute tensor plus a materialized
+(n, K, m2) int32 index tensor — collapses to the (K+1)·m2 payload
+values already resident in VMEM scratch. Audit math mirrors
+core.ranking.audit_selected op-for-op so the outputs are bitwise
+identical to the rank_given_lambda oracle (tests/test_rank_audited.py).
 """
 
 from __future__ import annotations
@@ -121,3 +135,125 @@ def fused_rank_pallas(
         interpret=interpret,
     )(lam, u, a)
     return vals, idx
+
+
+# ---------------------------------------------------------------------------
+# rank + audit: selection AND utility/exposure/compliance in one sweep
+# ---------------------------------------------------------------------------
+
+def _rank_audited_kernel(
+    lam_ref, b_ref, gamma_ref, u_ref, a_ref,        # inputs
+    vals_ref, idx_ref, util_ref, expo_ref, comp_ref,  # outputs
+    run_v, run_i, run_u, run_a,                     # VMEM scratch
+    *, eps: float, m2: int, tile_m: int, num_k: int, tol: float,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        run_v[...] = jnp.full_like(run_v, NEG_INF)
+        run_i[...] = jnp.zeros_like(run_i)
+        run_u[...] = jnp.zeros_like(run_u)
+        run_a[...] = jnp.zeros_like(run_a)
+
+    u = u_ref[...].astype(jnp.float32)                   # (Bn, Tm)
+    a = a_ref[...].astype(jnp.float32)                   # (Bn, K, Tm)
+    lam = lam_ref[...].astype(jnp.float32)               # (Bn, K)
+    s = u
+    for k in range(num_k):
+        s = s + (1.0 + eps) * lam[:, k][:, None] * a[:, k, :]
+
+    base = t * tile_m
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, dimension=1)
+    new_v, new_i, new_p = topk_merge(
+        run_v[...], run_i[...], s, gidx, m2,
+        run_payload={"u": run_u[...], "a": run_a[...]},
+        tile_payload={"u": u, "a": a})
+    run_v[...] = new_v
+    run_i[...] = new_i
+    run_u[...] = new_p["u"]
+    run_a[...] = new_p["a"]
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _flush():
+        # The audit epilogue, entirely on VMEM residents: mirrors
+        # core.ranking.audit_selected op-for-op (bitwise parity).
+        gamma = gamma_ref[...].astype(jnp.float32)       # (Bn, m2)
+        b = b_ref[...].astype(jnp.float32)               # (Bn, K)
+        u_sel = run_u[...]                               # (Bn, m2)
+        a_sel = run_a[...]                               # (Bn, K, m2)
+        expo = jnp.sum(a_sel * gamma[:, None, :], axis=-1)   # (Bn, K)
+        vals_ref[...] = run_v[...]
+        idx_ref[...] = run_i[...]
+        util_ref[...] = jnp.sum(u_sel * gamma, axis=-1, keepdims=True)
+        expo_ref[...] = expo
+        comp_ref[...] = jnp.all(
+            expo >= b - tol, axis=-1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m2", "eps", "tol", "tile_b", "tile_m", "interpret"))
+def rank_audited_pallas(
+    u: jax.Array,        # (n, m1)
+    a: jax.Array,        # (n, K, m1)
+    b: jax.Array,        # (n, K)
+    lam: jax.Array,      # (n, K)
+    gamma: jax.Array,    # (n, m2)
+    *,
+    m2: int,
+    eps: float = 1e-4,
+    tol: float = 1e-6,
+    tile_b: int = 8,
+    tile_m: int = 512,
+    interpret: bool = False,
+):
+    """Fused rank+audit: returns (vals (n, m2) f32 desc, idx (n, m2) i32,
+    utility (n, 1) f32, exposure (n, K) f32, compliant (n, 1) i32).
+
+    The (K+1) payload columns per winner live in VMEM scratch for the
+    whole m1 sweep; u/a are read exactly once and never re-gathered."""
+    n, m1 = u.shape
+    K = a.shape[1]
+    if m2 > MAX_KERNEL_M2:
+        raise ValueError(f"kernel path supports m2 <= {MAX_KERNEL_M2}; "
+                         f"use repro.kernels.ops.rank_audited (XLA fallback)")
+    if n % tile_b or m1 % tile_m:
+        raise ValueError(f"(n={n}, m1={m1}) must tile by ({tile_b}, {tile_m})")
+
+    grid = (n // tile_b, m1 // tile_m)
+    kernel = functools.partial(
+        _rank_audited_kernel, eps=eps, m2=m2, tile_m=tile_m, num_k=K, tol=tol)
+    vals, idx, util, expo, comp = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, K), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, K), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, m2), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, tile_m), lambda bi, t: (bi, t)),
+            pl.BlockSpec((tile_b, K, tile_m), lambda bi, t: (bi, 0, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, m2), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, m2), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, 1), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, K), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, 1), lambda bi, t: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m2), jnp.float32),
+            jax.ShapeDtypeStruct((n, m2), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, K), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_b, m2), jnp.float32),
+            pltpu.VMEM((tile_b, m2), jnp.int32),
+            pltpu.VMEM((tile_b, m2), jnp.float32),
+            pltpu.VMEM((tile_b, K, m2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lam, b, gamma, u, a)
+    return vals, idx, util, expo, comp

@@ -18,8 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.common import NEG_INF
 from repro.kernels.embedding_bag import embedding_bag_pallas
-from repro.kernels.fused_rank import MAX_KERNEL_M2, fused_rank_pallas
+from repro.kernels.fused_rank import (
+    MAX_KERNEL_M2,
+    fused_rank_pallas,
+    rank_audited_pallas,
+)
 from repro.kernels.knn_topk import knn_topk_pallas
 
 Array = jax.Array
@@ -63,6 +68,73 @@ def fused_rank(
         u_p, a_p, lam_p, m2=m2, eps=eps, tile_b=tile_b, tile_m=tile_m,
         interpret=interpret)
     return vals[:n], idx[:n]
+
+
+# ---------------------------------------------------------------------------
+# rank_audited
+# ---------------------------------------------------------------------------
+
+def rank_audited(
+    u: Array,            # (n, m1)
+    a: Array,            # (n, K, m1) or (K, m1)
+    b: Array,            # (n, K) or (K,)
+    lam: Array,          # (n, K)
+    gamma: Array,        # (m2,) or (n, m2)
+    *,
+    m2: int,
+    eps: float = 1e-4,
+    tol: float | None = None,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    tile_b: int = 8,
+    tile_m: int = 512,
+):
+    """Fused rank+audit dispatcher: one kernel emits the complete
+    RankingOutput (perm, utility, exposure, compliant, lam) with zero
+    post-kernel reads of ``u``/``a`` — the audit runs on the (K+1)·m2
+    payload values the streaming top-m2 merge kept in VMEM.
+
+    Accepts the same shared-vs-per-request broadcast forms as
+    core.ranking.rank_given_lambda. ``tol`` defaults to the shared
+    core.ranking.AUDIT_TOL so the compliance slack can never drift
+    between the jnp and kernel paths. Falls back to the XLA oracle
+    (ref.rank_audited_ref — broadcast gathers, no materialized index
+    tensor) when m2 > MAX_KERNEL_M2 or ``use_kernel=False``; runs
+    interpret=True off-TPU by default.
+    """
+    from repro.core.ranking import AUDIT_TOL, RankingOutput  # deferred: no cycle
+
+    if tol is None:
+        tol = AUDIT_TOL
+    n = u.shape[0]
+    if a.ndim == 2:
+        a = jnp.broadcast_to(a, (n,) + a.shape)
+    if b.ndim == 1:
+        b = jnp.broadcast_to(b, (n,) + b.shape)
+    if gamma.ndim == 1:
+        gamma = jnp.broadcast_to(gamma, (n,) + gamma.shape)
+    if use_kernel is None:
+        use_kernel = m2 <= MAX_KERNEL_M2
+    if not use_kernel:
+        _, idx, utility, exposure, compliant = ref.rank_audited_ref(
+            u, a, b, lam, gamma, m2, eps, tol)
+        return RankingOutput(perm=idx, utility=utility, exposure=exposure,
+                             compliant=compliant, lam=lam)
+    if interpret is None:
+        interpret = not _on_tpu()
+    # NEG_INF (finite -1e30) keeps candidate padding out of every top-m2
+    # while 0-discount slots still contribute exactly 0.0 to utility.
+    u_p = _pad_to(_pad_to(u, 0, tile_b, 0.0), 1, tile_m, NEG_INF)
+    a_p = _pad_to(_pad_to(a, 0, tile_b, 0.0), 2, tile_m, 0.0)
+    b_p = _pad_to(b, 0, tile_b, 0.0)
+    lam_p = _pad_to(lam, 0, tile_b, 0.0)
+    gamma_p = _pad_to(gamma, 0, tile_b, 0.0)
+    _, idx, util, expo, comp = rank_audited_pallas(
+        u_p, a_p, b_p, lam_p, gamma_p, m2=m2, eps=eps, tol=tol,
+        tile_b=tile_b, tile_m=tile_m, interpret=interpret)
+    return RankingOutput(
+        perm=idx[:n], utility=util[:n, 0], exposure=expo[:n],
+        compliant=comp[:n, 0].astype(bool), lam=lam)
 
 
 # ---------------------------------------------------------------------------

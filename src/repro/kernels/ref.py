@@ -48,6 +48,41 @@ def fused_rank_ref(
     return jnp.take_along_axis(s, order, axis=-1), order
 
 
+def rank_audited_ref(
+    u: Array,      # (n, m1)
+    a: Array,      # (n, K, m1)
+    b: Array,      # (n, K)
+    lam: Array,    # (n, K)
+    gamma: Array,  # (n, m2)
+    m2: int,
+    eps: float = 1e-4,
+    tol: float | None = None,
+):
+    """Rank + audit in one contract: fused_rank_ref's selection followed
+    by the shared audit epilogue on the selected values.
+
+    Returns (vals (n, m2) desc f32, idx (n, m2), utility (n,),
+    exposure (n, K), compliant (n,) bool). This is both the semantics
+    oracle for the Pallas rank+audit kernel and the XLA fallback body in
+    ops.rank_audited — note the gathers use a broadcast index
+    (idx (n, 1, m2) against a (n, K, m1)), not a materialized
+    (n, K, m2) index tensor. ``tol=None`` resolves to the shared
+    core.ranking.AUDIT_TOL.
+    """
+    from repro.core.ranking import AUDIT_TOL, audit_selected  # deferred: no cycle
+
+    if tol is None:
+        tol = AUDIT_TOL
+    vals, idx = fused_rank_ref(u, a, lam, m2, eps)
+    af = a.astype(jnp.float32)
+    u_sel = jnp.take_along_axis(u.astype(jnp.float32), idx, axis=-1)
+    a_sel = jnp.take_along_axis(af, idx[:, None, :], axis=-1)   # (n, K, m2)
+    utility, exposure, compliant = audit_selected(
+        u_sel, a_sel, gamma.astype(jnp.float32), b.astype(jnp.float32),
+        tol=tol)
+    return vals, idx, utility, exposure, compliant
+
+
 def embedding_bag_ref(
     table: Array, indices: Array, weights: Array | None = None
 ) -> Array:

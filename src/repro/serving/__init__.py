@@ -31,7 +31,14 @@ from repro.serving.pipeline import (
     RankFuture,
     StagingRing,
 )
-from repro.serving.traffic import DEFAULT_MIX, Scenario, make_request, make_stream
+from repro.serving.traffic import (
+    DEFAULT_MIX,
+    Scenario,
+    make_request,
+    make_stream,
+    poisson_arrivals,
+    serve_open_loop,
+)
 
 __all__ = [
     "Bucket", "K_TIERS", "MIN_M1", "MIN_M2", "NEG_FILL",
@@ -41,4 +48,5 @@ __all__ = [
     "EngineMetrics",
     "ExecutionPipeline", "PendingBatch", "RankFuture", "StagingRing",
     "DEFAULT_MIX", "Scenario", "make_request", "make_stream",
+    "poisson_arrivals", "serve_open_loop",
 ]

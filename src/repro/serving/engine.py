@@ -226,19 +226,13 @@ class ServingEngine:
                 return rank_distributed(mesh, u, a, b, lam, gamma,
                                         m2=m2, eps=eps)
         elif self.executor == "fused":
-            from repro.kernels.ops import fused_rank
+            # One fused rank+audit kernel: utility/exposure/compliance are
+            # computed in VMEM at the flush step — no post-kernel gather
+            # or einsum ever reads u/a again (kernels/fused_rank.py).
+            from repro.kernels.ops import rank_audited
 
             def rank(u, a, b, lam, gamma):
-                _, idx = fused_rank(u, a, lam, m2=m2, eps=eps)
-                u_sel = jnp.take_along_axis(u, idx, axis=-1)
-                utility = jnp.einsum("nm,nm->n", u_sel, gamma)
-                a_sel = jnp.take_along_axis(
-                    a, idx[:, None, :].repeat(a.shape[1], axis=1), axis=-1)
-                exposure = jnp.einsum("nkm,nm->nk", a_sel, gamma)
-                compliant = jnp.all(exposure >= b - 1e-6, axis=-1)
-                return RankingOutput(perm=idx, utility=utility,
-                                     exposure=exposure, compliant=compliant,
-                                     lam=lam)
+                return rank_audited(u, a, b, lam, gamma, m2=m2, eps=eps)
         else:
             rank = partial(rank_given_lambda, m2=m2, eps=eps)
         return rank

@@ -111,9 +111,12 @@ def test_fused_executor_matches_xla_executor():
     res_f = {r.rid: r for r in ServingEngine(
         max_batch=4, max_wait_ms=1.0, executor="fused").serve_stream(reqs)}
     for rid in res_x:
+        # the fused executor's rank+audit kernel mirrors the XLA audit
+        # op-for-op, so equality is bitwise, not just allclose
         np.testing.assert_array_equal(res_f[rid].perm, res_x[rid].perm)
-        np.testing.assert_allclose(res_f[rid].exposure, res_x[rid].exposure,
-                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(res_f[rid].exposure,
+                                      res_x[rid].exposure)
+        assert res_f[rid].utility == res_x[rid].utility
         assert res_f[rid].compliant == res_x[rid].compliant
 
 
@@ -266,3 +269,60 @@ def test_metrics_summary_shape():
     for q in ("p50", "p95", "p99"):
         assert np.isfinite(s["latency_ms"][q])
     assert 0.0 <= s["compliance"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Paced open-loop load generation (serving.traffic)
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_arrivals_statistics():
+    from repro.serving import poisson_arrivals
+
+    arr = poisson_arrivals(4096, qps=100.0, seed=3)
+    assert arr.shape == (4096,)
+    assert np.all(np.diff(arr) > 0)                 # strictly increasing
+    gaps = np.diff(np.concatenate([[0.0], arr]))
+    assert abs(gaps.mean() - 0.01) < 0.001          # mean gap ~ 1/qps
+    with pytest.raises(ValueError):
+        poisson_arrivals(8, qps=0.0)
+
+
+def test_serve_open_loop_virtual_clock():
+    """Open-loop pacing under a deterministic virtual clock: every
+    request is submitted at (never before) its scheduled arrival, all
+    results come back, and the lag profile is reported."""
+    from repro.serving import poisson_arrivals, serve_open_loop
+
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    def sleep(dt):
+        t[0] += dt
+
+    reqs = [_tiny_request(rid) for rid in range(24)]
+    arrivals = poisson_arrivals(len(reqs), qps=2000.0, seed=1)
+    eng = ServingEngine(max_batch=4, max_wait_ms=0.5, pipeline_depth=0,
+                        clock=clock)
+    eng.warmup(reqs)
+    results, stats = serve_open_loop(eng, reqs, arrivals,
+                                     clock=clock, sleep=sleep)
+    assert sorted(r.rid for r in results) == list(range(24))
+    assert stats["wall_s"] >= float(arrivals[-1])   # pacing was honored
+    assert stats["lag_ms"]["max"] >= 0.0
+    assert set(stats["lag_ms"]) == {"mean", "p50", "p99", "max", "last"}
+    # the virtual clock only advances via sleep(), so submissions can
+    # never run ahead of schedule
+    assert stats["lag_ms"]["mean"] >= 0.0
+
+
+def test_serve_open_loop_length_mismatch_rejected():
+    from repro.serving import serve_open_loop
+
+    eng = ServingEngine(max_batch=4, pipeline_depth=0)
+    with pytest.raises(ValueError, match="arrival times"):
+        serve_open_loop(eng, [_tiny_request(0)], np.asarray([0.0, 1.0]))
+    with pytest.raises(ValueError, match="empty request stream"):
+        serve_open_loop(eng, [], np.asarray([]))
