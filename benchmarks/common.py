@@ -36,6 +36,35 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def write_bench_json(out: str, name: str, records, *, meta: dict | None = None) -> str:
+    """Machine-readable benchmark artifact: BENCH_<name>.json.
+
+    `out` is either a directory (the file is named BENCH_<name>.json
+    inside it — the CI-artifact convention) or an explicit *.json path.
+    The payload carries the backend + jax version alongside every
+    Record (medians in us_per_call, geometry in name/derived) so the
+    perf trajectory is comparable across PRs and hosts.
+    """
+    payload = {
+        "bench": name,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "device_count": jax.device_count(),
+        "records": [asdict(r) for r in records],
+        **(meta or {}),
+    }
+    if out.endswith(".json"):
+        path = out
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    else:
+        os.makedirs(out, exist_ok=True)
+        path = os.path.join(out, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path}")
+    return path
+
+
 def save_json(name: str, payload) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

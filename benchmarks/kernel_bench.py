@@ -26,11 +26,25 @@ between the corresponding XLA programs (two dispatches + index
 materialization vs one fused program with a broadcast gather) are
 reported.
 
+The predict+rank section does the same for the λ-predictor handoff the
+single-sweep dispatcher (kernels.ops.predict_rank_audited) deletes:
+
+  baseline  TWO device programs — a predict executable whose λ̂ (and,
+            for KNN, whose (B, n_train) distance matrix) round-trips
+            HBM, then a separate rank+audit executable that reads λ̂
+            back;
+  fused     ONE program: affine predictors fold into the rank kernel's
+            VMEM prologue, KNN fuses its weighting into the db sweep's
+            flush step, and λ̂ never exists between programs.
+
 `python -m benchmarks.kernel_bench --quick` is the CI smoke: small
-shapes, plus `check_rank_audited` — a hard gate that fails the build if
-interpret-mode parity with the rank_given_lambda oracle breaks, if the
-dispatcher stops engaging the kernel for kernel-eligible shapes, or if
-the m2 > MAX_KERNEL_M2 fallback stops engaging.
+shapes, plus `check_rank_audited` and `check_predict_rank` — hard
+gates that fail the build if interpret-mode parity with the
+predict-then-rank oracle breaks, if the dispatchers stop engaging the
+kernels for kernel-eligible shapes, or if the m2 > MAX_KERNEL_M2
+fallbacks stop engaging. `--json OUT` writes a machine-readable
+BENCH_kernel_bench.json (medians, geometry, backend) for the
+cross-PR perf trajectory; CI uploads it as an artifact.
 """
 
 from __future__ import annotations
@@ -41,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Record, timed
+from benchmarks.common import Record, timed, write_bench_json
 from repro.core.ranking import AUDIT_TOL
 from repro.kernels import ref
 
@@ -144,6 +158,82 @@ def run_rank_audit(n, m1, K, m2, *, iters=7):
     }
 
 
+def _fit_predictors(K, d, n_db, seed=11):
+    from repro.core.predictors import KNNLambdaPredictor, LinearLambdaPredictor
+
+    ks = jax.random.split(jax.random.key(seed), 2)
+    X_tr = jax.random.uniform(ks[0], (n_db, d))
+    lam_tr = jnp.abs(jax.random.normal(ks[1], (n_db, K)))
+    return {"linear": LinearLambdaPredictor.fit(X_tr, lam_tr),
+            "knn": KNNLambdaPredictor.fit(X_tr, lam_tr, k=10)}
+
+
+def _predict_traffic_model(family: str, B: int, N: int, D: int,
+                           K: int) -> dict:
+    """Per-batch HBM bytes of the predict stage + λ̂ handoff alone
+    (rank+audit traffic is identical on both sides).
+
+      two-dispatch: the predict program's own traffic, plus λ̂ written
+      out by program 1 and read back by program 2 (2·B·K floats). For
+      KNN the predict program also materializes the (B, N) distance
+      matrix (write + read around the top-k) — the paper-scale killer.
+
+      fused: λ̂ never exists in HBM. Affine families re-read X/W (they
+      were reading them anyway); the KNN kernel re-streams the db once
+      per resident query tile (tile_q = 32 when the batch allows) and
+      keeps distances, weights, and λ̂ in VMEM.
+    """
+    if family == "linear":
+        xla = (B * D + K * D + 2 * B * K) * 4
+        fused = (B * D + K * D) * 4
+    else:
+        from repro.kernels.ops import knn_lambda_tile_q
+
+        sweeps = -(-B // knn_lambda_tile_q(B))
+        xla = (N * D + 2 * B * N + 2 * B * K) * 4
+        fused = sweeps * N * D * 4
+    return {"predict_xla_bytes": xla, "predict_fused_bytes": fused,
+            "predict_ratio_xla_over_fused": round(xla / fused, 3)}
+
+
+def run_predict_rank(n, m1, K, m2, *, d=20, n_db=8192, iters=7):
+    """predict+rank+audit at one problem shape, per predictor family.
+
+    Measured (CPU XLA stand-ins): the two-dispatch baseline — a jit'd
+    predict program, then a jit'd rank+audit program reading λ̂ back —
+    vs the single fused program. Both sides share the dominant
+    rank work, so the wall delta isolates the dispatch + λ̂ (and KNN
+    d2-matrix) round-trip the fusion deletes. The analytic per-batch
+    traffic model for the predict stage rides along.
+    """
+    u, a, b, _, gamma = _rank_audit_problem(n, m1, K, m2)
+    X = jax.random.normal(jax.random.key(23), (n, d))
+    rows = []
+    for family, pred in _fit_predictors(K, d, n_db).items():
+        predict_j = jax.jit(pred.predict)
+        rank_j = jax.jit(
+            lambda u, a, b, lam, gamma: ref.rank_audited_ref(
+                u, a, b, lam, gamma, m2)[2])
+        fused_j = jax.jit(
+            lambda X, u, a, b, gamma: ref.predict_rank_audited_ref(
+                X, pred, u, a, b, gamma, m2)[2])
+        two_us = timed(lambda: rank_j(u, a, b, predict_j(X), gamma),
+                       iters=iters)
+        one_us = timed(lambda: fused_j(X, u, a, b, gamma), iters=iters)
+        model = _predict_traffic_model(family, n, n_db, d, K)
+        rows.append({
+            "name": f"predict_rank/{family}/m1={m1}/K={K}/m2={m2}"
+                    f"/n={n}/n_db={n_db}",
+            "us": one_us,
+            "derived": {
+                **model,
+                "us_two_dispatch": round(two_us, 1),
+                "wall_two_over_one": round(two_us / one_us, 3),
+            },
+        })
+    return rows
+
+
 def run(quick: bool = False):
     rows = []
     key = jax.random.key(0)
@@ -169,6 +259,15 @@ def run(quick: bool = False):
               else [(64, 100_000, 5, 50), (256, 2048, 8, 128)])
     for n_ra, m1_ra, K_ra, m2_ra in shapes:
         rows.append(run_rank_audit(n_ra, m1_ra, K_ra, m2_ra))
+
+    # predict+rank+audit: two-dispatch predict->rank vs one fused
+    # program, at an engine micro-batch shape (covariate traffic)
+    pr_shapes = ([(32, 2048, 5, 32, 20, 4096)] if quick
+                 else [(32, 2048, 5, 32, 20, 16384),
+                       (64, 8192, 8, 50, 20, 65536)])
+    for n_pr, m1_pr, K_pr, m2_pr, d_pr, ndb_pr in pr_shapes:
+        rows += run_predict_rank(n_pr, m1_pr, K_pr, m2_pr,
+                                 d=d_pr, n_db=ndb_pr)
 
     # knn_topk: oracle materializes the (B, N) distance matrix
     B, N, D, k = (256, 65536, 20, 10) if not quick else (64, 8192, 20, 10)
@@ -254,6 +353,112 @@ def check_rank_audited() -> None:
           "fallback parity bitwise -> PASS")
 
 
+def check_predict_rank() -> None:
+    """Predict+rank+audit health gate (CI smoke): raises on regression.
+
+    1. interpret-mode parity: ops.predict_rank_audited matches
+       predictor.predict(X) -> rank_given_lambda for every family —
+       BITWISE for the affine prologue (linear/mean) and the
+       in-executable MLP; λ̂ to tight tolerance for the fused KNN
+       weighting (selection/audit still exact on this problem).
+    2. dispatch: kernel-eligible shapes actually engage the fused
+       kernels (the affine-prologue kernel for linear/mean; the KNN λ
+       kernel chained into the rank+audit kernel for knn).
+    3. fallback: m2 > MAX_KERNEL_M2 engages no kernel and matches the
+       two-stage XLA oracle.
+    """
+    import repro.kernels.ops as ops_mod
+    from repro.core.predictors import (
+        KNNLambdaPredictor,
+        LinearLambdaPredictor,
+        MeanLambdaPredictor,
+        MLPLambdaPredictor,
+    )
+    from repro.core.ranking import rank_given_lambda
+
+    n, m1, K, m2, d = 8, 640, 4, 16, 12
+    ks = jax.random.split(jax.random.key(17), 7)
+    u = jax.random.uniform(ks[0], (n, m1), minval=1.0, maxval=5.0)
+    a = (jax.random.uniform(ks[1], (n, K, m1)) < 0.15).astype(jnp.float32)
+    b = jnp.abs(jax.random.normal(ks[2], (n, K)))
+    gamma = jnp.abs(jax.random.normal(ks[3], (n, m2)))
+    X = jax.random.normal(ks[4], (n, d))
+    X_tr = jax.random.uniform(ks[5], (48, d))
+    lam_tr = jnp.abs(jax.random.normal(ks[6], (48, K)))
+    families = {
+        "linear": LinearLambdaPredictor.fit(X_tr, lam_tr),
+        "mean": MeanLambdaPredictor.fit(X_tr, lam_tr),
+        "knn": KNNLambdaPredictor.fit(X_tr, lam_tr, k=5),
+        "mlp": MLPLambdaPredictor.fit(X_tr, lam_tr, num_steps=20),
+    }
+
+    calls = {"linear": 0, "knn_lambda": 0, "rank": 0}
+    real_lin = ops_mod.linear_rank_audited_pallas
+    real_knn = ops_mod.knn_lambda_pallas
+    real_rank = ops_mod.rank_audited_pallas
+
+    def c_lin(*a_, **k_):
+        calls["linear"] += 1
+        return real_lin(*a_, **k_)
+
+    def c_knn(*a_, **k_):
+        calls["knn_lambda"] += 1
+        return real_knn(*a_, **k_)
+
+    def c_rank(*a_, **k_):
+        calls["rank"] += 1
+        return real_rank(*a_, **k_)
+
+    ops_mod.linear_rank_audited_pallas = c_lin
+    ops_mod.knn_lambda_pallas = c_knn
+    ops_mod.rank_audited_pallas = c_rank
+    try:
+        got = {name: ops_mod.predict_rank_audited(
+                   X, pred, u, a, b, gamma, m2=m2)
+               for name, pred in families.items()}
+        gamma_big = jnp.abs(jax.random.normal(ks[3], (n, 256)))
+        big = ops_mod.predict_rank_audited(
+            X, families["linear"], u, a, b, gamma_big, m2=256)
+    finally:
+        ops_mod.linear_rank_audited_pallas = real_lin
+        ops_mod.knn_lambda_pallas = real_knn
+        ops_mod.rank_audited_pallas = real_rank
+
+    want_calls = {"linear": 2, "knn_lambda": 1, "rank": 2}  # knn+mlp rank
+    if calls != want_calls:
+        raise AssertionError(
+            f"predict+rank dispatch regression: kernel engagement "
+            f"{calls}, expected {want_calls} (fallback must engage none)")
+
+    for name, pred in families.items():
+        want = rank_given_lambda(u, a, b, pred.predict(X), gamma, m2=m2)
+        for field in ("perm", "utility", "exposure", "compliant"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got[name], field)),
+                np.asarray(getattr(want, field)),
+                err_msg=f"predict+rank parity broke on {field} [{name}]")
+        if name == "knn":
+            np.testing.assert_allclose(
+                np.asarray(got[name].lam), np.asarray(want.lam),
+                rtol=1e-5, atol=1e-6,
+                err_msg="fused KNN λ̂ drifted")
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(got[name].lam), np.asarray(want.lam),
+                err_msg=f"λ̂ parity broke [{name}]")
+
+    _, idx_w, util_w, expo_w, comp_w, _ = ref.predict_rank_audited_ref(
+        X, families["linear"], u, a, b, gamma_big, 256)
+    for field, want_f in (("perm", idx_w), ("utility", util_w),
+                          ("exposure", expo_w), ("compliant", comp_w)):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(big, field)), np.asarray(want_f),
+            err_msg=f"predict+rank XLA fallback parity broke on {field}")
+    print("# predict+rank health: kernels engaged per family, affine "
+          "prologue bitwise, KNN λ̂ within tolerance, fallback parity "
+          "-> PASS")
+
+
 def records(rows):
     return [Record(name=f"kernel/{r['name']}", us_per_call=r["us"],
                    derived=r["derived"]) for r in rows]
@@ -262,13 +467,21 @@ def records(rows):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="CI-sized shapes + the rank+audit health gate")
+                    help="CI-sized shapes + the kernel health gates")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write BENCH_kernel_bench.json to OUT (a "
+                         "directory, or an explicit *.json path)")
     args = ap.parse_args()
 
-    check_rank_audited()                    # hard gate: raises on regression
+    check_rank_audited()                    # hard gates: raise on regression
+    check_predict_rank()
     rows = run(quick=args.quick)
-    for rec in records(rows):
+    recs = records(rows)
+    for rec in recs:
         print(rec.csv())
+    if args.json:
+        write_bench_json(args.json, "kernel_bench", recs,
+                         meta={"quick": args.quick})
     ras = [r for r in rows if r["name"].startswith("rank_audit/")]
     if any(r["derived"]["audit_ratio_xla_over_fused"] <= 1.0 for r in ras):
         raise SystemExit("# rank+audit acceptance: FAIL — audit traffic "
@@ -284,6 +497,20 @@ def main():
         # shared host is measurement jitter, not a dataflow change.
         print(f"# rank+audit acceptance: WARN — traffic model holds but "
               f"measured audit-step wall win {best:.2f}x < 1.0x "
+              f"(noisy host?)")
+    prs = [r for r in rows if r["name"].startswith("predict_rank/")]
+    if any(r["derived"]["predict_ratio_xla_over_fused"] <= 1.0 for r in prs):
+        raise SystemExit("# predict+rank acceptance: FAIL — predict "
+                         "traffic model does not favor the fused path")
+    best_pr = max(r["derived"]["wall_two_over_one"] for r in prs)
+    if best_pr >= 1.0:
+        print(f"# predict+rank acceptance: PASS — predict traffic ratio up "
+              f"to "
+              f"{max(r['derived']['predict_ratio_xla_over_fused'] for r in prs)}"
+              f"x, two-dispatch/fused wall up to {best_pr:.2f}x")
+    else:
+        print(f"# predict+rank acceptance: WARN — traffic model holds but "
+              f"measured two-dispatch/fused wall {best_pr:.2f}x < 1.0x "
               f"(noisy host?)")
 
 

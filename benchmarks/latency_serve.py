@@ -49,6 +49,12 @@ Usage:
 
   python -m benchmarks.latency_serve [--quick] [--frontier]
                                      [--only direct|engine|frontier]
+                                     [--json OUT]
+
+`--json OUT` additionally writes a machine-readable
+BENCH_latency_serve.json (medians, geometry, backend — see
+benchmarks.common.write_bench_json) so the serving-latency trajectory
+is trackable across PRs; CI uploads it as an artifact.
 """
 
 from __future__ import annotations
@@ -66,7 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Record, save_json, timed
+from benchmarks.common import Record, save_json, timed, write_bench_json
 from repro.core.constraints import dcg_discount
 from repro.core.predictors import knn_predict
 from repro.core.ranking import rank_given_lambda
@@ -392,6 +398,9 @@ def main():
                          "Poisson arrivals below/around saturation)")
     ap.add_argument("--trials", type=int, default=None,
                     help="paired throughput trials (default 7; quick 3)")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write BENCH_latency_serve.json to OUT (a "
+                         "directory, or an explicit *.json path)")
     ap.add_argument("--engine-child", metavar="OUT_JSON",
                     help=argparse.SUPPRESS)     # internal: subprocess mode
     ap.add_argument("--engine-config", metavar="JSON",
@@ -408,23 +417,33 @@ def main():
             json.dump(rows, f)
         return
 
+    all_recs = []
     if args.only in ("all", "direct"):
         kw = (dict(sizes=((1000, 5, 50), (10000, 8, 50)), batches=(1, 64),
                    n_db=2000) if args.quick else {})
         for rec in records(run(**kw)):
+            all_recs.append(rec)
             print(rec.csv())
     if args.frontier or args.only == "frontier":
         fkw = (dict(n_requests=192, load_fracs=(0.5, 0.85, 2.0))
                if args.quick else {})
         for rec in records_frontier(run_frontier(**fkw)):
+            all_recs.append(rec)
             print(rec.csv())
+    engine_rows = None
     if args.only in ("all", "engine"):
         ekw = (dict(n_requests=320, trials=3) if args.quick else {})
         if args.trials is not None:
             ekw["trials"] = args.trials
-        rows = run_engine(**ekw)
-        for rec in records_engine(rows):
+        engine_rows = run_engine(**ekw)
+        for rec in records_engine(engine_rows):
+            all_recs.append(rec)
             print(rec.csv())
+    if args.json:           # artifact lands even if acceptance exits 1
+        write_bench_json(args.json, "latency_serve", all_recs,
+                         meta={"quick": args.quick, "only": args.only})
+    if engine_rows is not None:
+        rows = engine_rows
         piped = [r for r in rows if r["pipeline_depth"] > 0]
         correct = (all(r["perms_match_baseline"] for r in rows)
                    and all(r["compiles_post_warmup"] == 0 for r in rows))

@@ -233,8 +233,25 @@ def serve(
     b: Array,            # (n, K) or (K,)
     *,
     predictor: str = "knn",
+    backend: str = "xla",
 ) -> RankingOutput:
-    """Online serving: predict lam_hat from covariates, then rank."""
+    """Online serving: predict lam_hat from covariates, then rank.
+
+    ``backend='kernel'`` collapses the whole online stage into ONE
+    device program via kernels.ops.predict_rank_audited — the affine
+    predictor families fold λ̂ into the rank kernel's VMEM prologue,
+    KNN fuses its inverse-distance weighting into the database sweep,
+    and the MLP joins the same executable — instead of a predict
+    program whose λ̂ round-trips HBM ahead of a rank program.
+    """
+    if backend == "kernel":
+        from repro.kernels.ops import predict_rank_audited  # no cycle
+
+        return predict_rank_audited(
+            X, pipe.predictors[predictor], u, a, b, pipe.gamma,
+            m2=pipe.m2, eps=pipe.eps)
+    if backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}")
     lam_hat = pipe.predictors[predictor].predict(X)
     return rank_given_lambda(
         u, a, b, lam_hat, pipe.gamma, m2=pipe.m2, eps=pipe.eps

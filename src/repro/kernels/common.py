@@ -14,11 +14,19 @@ index wins' — matching the jnp stable-argsort oracle in ref.py.
 The merge optionally carries PAYLOAD columns: a pytree of arrays whose
 last axis is the candidate axis (running (B, ..., k), tile (B, ..., T)).
 Each selected winner drags its payload slots along, so a kernel can keep
-per-candidate side data (raw utilities, constraint-attribute columns)
-resident in VMEM across the whole streaming sweep and never re-gather
-them from HBM afterwards — the mechanism behind the rank+audit kernel
-(fused_rank.rank_audited_pallas) and the in-VMEM twin of the payload
-ride-along in repro.distributed.topk.distributed_top_k.
+per-candidate side data resident in VMEM across the whole streaming
+sweep and never re-gather it from HBM afterwards. Three kernels build
+on it:
+  * fused_rank.rank_audited_pallas — raw utilities + K attribute
+    columns ride along so the audit runs at the flush step;
+  * fused_rank.linear_rank_audited_pallas — same sweep, with the
+    affine λ-predictor folded into the prologue (λ̂ itself lives in a
+    VMEM scratch, not a payload — it is per-row, not per-candidate);
+  * knn_topk.knn_lambda_pallas — each neighbour's λ row + |x_n|^2 ride
+    along so the inverse-distance weighting runs at the flush step and
+    the kernel emits λ̂ directly, no d2/idx pairs in HBM.
+It is also the in-VMEM twin of the payload ride-along in
+repro.distributed.topk.distributed_top_k.
 """
 
 from __future__ import annotations

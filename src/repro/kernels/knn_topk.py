@@ -14,6 +14,17 @@ sweep. VMEM working set per step:
 
 Grid: (query_tiles, db_tiles), db minor so scratch persists. Alignment:
 D and Tn multiples of 128 for the MXU; Bq multiple of 8.
+
+`knn_lambda_pallas` extends the same sweep into the paper's full
+predictor: the merge carries each neighbour's λ row (K values) and its
+|x_n|^2 as VMEM payload columns (common.topk_merge ride-along), and the
+flush step computes the inverse-distance weights — exact-match override
+included — and emits λ̂ (B, K) directly. The (B, k) d2/idx pairs that
+XLA would otherwise write out, re-read, and re-gather against the λ
+database never exist in HBM; neither does the (B, n_train) distance
+matrix the brute-force XLA path materializes. This is the KNN half of
+the single-sweep predict+rank+audit dispatcher
+(repro.kernels.ops.predict_rank_audited).
 """
 
 from __future__ import annotations
@@ -25,6 +36,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.core.predictors import _idw_lambda
 from repro.kernels.common import NEG_INF, topk_merge
 
 
@@ -101,3 +113,106 @@ def knn_topk_pallas(
         interpret=interpret,
     )(xq, xdb)
     return d2, idx
+
+
+# ---------------------------------------------------------------------------
+# knn_lambda: distances + top-k + inverse-distance weighting in one sweep
+# ---------------------------------------------------------------------------
+
+def _knn_lambda_kernel(
+    q_ref, db_ref, lamdb_ref,      # inputs
+    lam_ref,                       # output: lam_hat (Bq, K)
+    run_v, run_i, run_lam, run_y2,  # scratch
+    *, k: int, tile_n: int, num_k: int,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        run_v[...] = jnp.full_like(run_v, NEG_INF)
+        run_i[...] = jnp.zeros_like(run_i)
+        run_lam[...] = jnp.zeros_like(run_lam)
+        run_y2[...] = jnp.zeros_like(run_y2)
+
+    q = q_ref[...].astype(jnp.float32)                       # (Bq, D)
+    db = db_ref[...].astype(jnp.float32)                     # (Tn, D)
+    lamdb = lamdb_ref[...].astype(jnp.float32)               # (Tn, K)
+    bq = q.shape[0]
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)              # (Bq, 1)
+    db2 = jnp.sum(db * db, axis=-1)                          # (Tn,)
+    cross = jnp.dot(q, db.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(q2 - 2.0 * cross + db2[None, :], 0.0)   # (Bq, Tn)
+
+    base = t * tile_n
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, d2.shape, dimension=1)
+    # each candidate's payload: its λ row (constraint-major) and |x_n|^2
+    tile_lam = jnp.broadcast_to(lamdb.T[None], (bq, num_k, tile_n))
+    tile_y2 = jnp.broadcast_to(db2[None, :], (bq, tile_n))
+    new_v, new_i, new_p = topk_merge(
+        run_v[...], run_i[...], -d2, gidx, k,
+        run_payload={"lam": run_lam[...], "y2": run_y2[...]},
+        tile_payload={"lam": tile_lam, "y2": tile_y2})
+    run_v[...] = new_v
+    run_i[...] = new_i
+    run_lam[...] = new_p["lam"]
+    run_y2[...] = new_p["y2"]
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _flush():
+        # Inverse-distance weighting on the VMEM-resident neighbours:
+        # the predictor's own _idw_lambda (one source of truth for the
+        # weights, exact-match override, and normalization), applied to
+        # payload columns instead of HBM gathers — the payload is
+        # constraint-major (Bq, K, k), so transpose to its (b, k, C)
+        # neighbour-major convention.
+        lam_ref[...] = _idw_lambda(
+            -run_v[...], q2, run_y2[...],
+            run_lam[...].transpose(0, 2, 1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tile_q", "tile_n", "interpret"))
+def knn_lambda_pallas(
+    xq: jax.Array,      # (B, D) queries
+    xdb: jax.Array,     # (N, D) train database
+    lam_db: jax.Array,  # (N, K) train shadow prices
+    *,
+    k: int = 10,
+    tile_q: int = 8,
+    tile_n: int = 512,
+    interpret: bool = False,
+):
+    """Returns lam_hat (B, K): the inverse-distance-weighted KNN λ
+    prediction, with the d2/idx intermediates and the (B, N) distance
+    matrix never leaving VMEM. Requires N >= k real database rows (the
+    KNN contract) so far-away padding rows can never enter a top-k."""
+    B, D = xq.shape
+    N, K = lam_db.shape
+    if xdb.shape != (N, D):
+        raise ValueError(f"xdb {xdb.shape} vs lam_db {lam_db.shape}: "
+                         f"row counts must match")
+    if B % tile_q or N % tile_n:
+        raise ValueError(f"(B={B}, N={N}) must tile by ({tile_q}, {tile_n})")
+
+    grid = (B // tile_q, N // tile_n)
+    kernel = functools.partial(_knn_lambda_kernel, k=k, tile_n=tile_n,
+                               num_k=K)
+    lam = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, D), lambda b, t: (b, 0)),
+            pl.BlockSpec((tile_n, D), lambda b, t: (t, 0)),
+            pl.BlockSpec((tile_n, K), lambda b, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, K), lambda b, t: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, k), jnp.float32),
+            pltpu.VMEM((tile_q, k), jnp.int32),
+            pltpu.VMEM((tile_q, K, k), jnp.float32),
+            pltpu.VMEM((tile_q, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xq, xdb, lam_db)
+    return lam

@@ -23,9 +23,10 @@ from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fused_rank import (
     MAX_KERNEL_M2,
     fused_rank_pallas,
+    linear_rank_audited_pallas,
     rank_audited_pallas,
 )
-from repro.kernels.knn_topk import knn_topk_pallas
+from repro.kernels.knn_topk import knn_lambda_pallas, knn_topk_pallas
 
 Array = jax.Array
 
@@ -138,6 +139,133 @@ def rank_audited(
 
 
 # ---------------------------------------------------------------------------
+# predict_rank_audited: λ-predictor + rank + audit, one device program
+# ---------------------------------------------------------------------------
+
+def predict_rank_audited(
+    X,                   # (n, d) covariates
+    predictor,           # fitted λ predictor pytree (core.predictors)
+    u: Array,            # (n, m1)
+    a: Array,            # (n, K, m1) or (K, m1)
+    b: Array,            # (n, K) or (K,)
+    gamma: Array,        # (m2,) or (n, m2)
+    *,
+    m2: int,
+    eps: float = 1e-4,
+    tol: float | None = None,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    tile_b: int = 8,
+    tile_m: int = 512,
+):
+    """The paper's ENTIRE online stage — predict λ̂ = f(X), rank, audit
+    — as one dispatcher that lowers to a single device program, routed
+    by predictor family:
+
+      linear / mean   λ̂ = max(W x + c, 0) folds into the prologue of
+                      the rank+audit kernel (linear_rank_audited_pallas)
+                      — λ̂ is computed per batch tile into VMEM scratch
+                      and never exists in HBM between predict and rank;
+                      the mean predictor is the W = 0, no-clamp case.
+                      Bitwise-identical to predict-then-rank.
+      knn             knn_lambda_pallas streams the train database once
+                      and emits λ̂ (n, K) straight from its flush step
+                      (inverse-distance weighting fused in-kernel; no
+                      (n, n_train) distance matrix, no d2/idx pairs in
+                      HBM), then chains into rank_audited_pallas inside
+                      the same traced program — under the serving
+                      engine's per-bucket jit both kernels live in one
+                      executable and XLA owns the tiny λ̂ handoff
+                      buffer.
+      mlp / other     λ̂ = predictor.predict(X) stays XLA (matmuls are
+                      already MXU-shaped) and joins the same jit
+                      executable ahead of the rank+audit kernel.
+
+    Extra constraint rows in ``a`` beyond the predictor's output width
+    (bucket-padded K) get zero shadow prices — exactly the serving
+    engine's padding scheme. Falls back to the two-stage XLA oracle
+    (ref.predict_rank_audited_ref) when m2 > MAX_KERNEL_M2 or
+    ``use_kernel=False``; interpret=True off-TPU by default. Returns a
+    complete RankingOutput whose ``lam`` is the λ̂ actually used.
+    """
+    from repro.core.predictors import (  # deferred: keep import DAG flat
+        KNNLambdaPredictor,
+        LinearLambdaPredictor,
+        MeanLambdaPredictor,
+    )
+    from repro.core.ranking import AUDIT_TOL, RankingOutput
+
+    if tol is None:
+        tol = AUDIT_TOL
+    n = u.shape[0]
+    if X.shape[0] != n:
+        # the kernel path pads X rows for tiling; a row-count mismatch
+        # must be a loud caller error, never silently intercept-served
+        raise ValueError(f"X carries {X.shape[0]} covariate rows but the "
+                         f"problem has {n} users")
+    if a.ndim == 2:
+        a = jnp.broadcast_to(a, (n,) + a.shape)
+    if b.ndim == 1:
+        b = jnp.broadcast_to(b, (n,) + b.shape)
+    if gamma.ndim == 1:
+        gamma = jnp.broadcast_to(gamma, (n,) + gamma.shape)
+    Kp = a.shape[1]
+    if use_kernel is None:
+        use_kernel = m2 <= MAX_KERNEL_M2
+    if not use_kernel:
+        _, idx, utility, exposure, compliant, lam = (
+            ref.predict_rank_audited_ref(X, predictor, u, a, b, gamma,
+                                         m2, eps, tol))
+        return RankingOutput(perm=idx, utility=utility, exposure=exposure,
+                             compliant=compliant, lam=lam)
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    if isinstance(predictor, (LinearLambdaPredictor, MeanLambdaPredictor)):
+        if isinstance(predictor, LinearLambdaPredictor):
+            W, c, relu = predictor.W, predictor.c, True
+        else:
+            # mean λ is affine with zero weights; no clamp (predict()
+            # broadcasts mean_lam verbatim, clamped or not)
+            W = jnp.zeros((predictor.mean_lam.shape[0], X.shape[1]),
+                          jnp.float32)
+            c, relu = predictor.mean_lam, False
+        k_pred = W.shape[0]
+        ref.check_pred_width(k_pred, Kp)
+        # zero rows/intercepts for bucket-padded constraints: the
+        # prologue emits exactly the 0.0 λ̂ the padding scheme wants.
+        # (On TPU, d additionally wants lane alignment; zero-padding d
+        # changes the dot's reduction length, so it is left to the
+        # real-accelerator tuning pass — interpret mode has no
+        # alignment constraint.)
+        W_p = jnp.pad(W.astype(jnp.float32), ((0, Kp - k_pred), (0, 0)))
+        c_p = jnp.pad(c.astype(jnp.float32), (0, Kp - k_pred))[None, :]
+        u_p = _pad_to(_pad_to(u, 0, tile_b, 0.0), 1, tile_m, NEG_INF)
+        a_p = _pad_to(_pad_to(a, 0, tile_b, 0.0), 2, tile_m, 0.0)
+        b_p = _pad_to(b, 0, tile_b, 0.0)
+        gamma_p = _pad_to(gamma, 0, tile_b, 0.0)
+        X_p = _pad_to(jnp.asarray(X, jnp.float32), 0, tile_b, 0.0)
+        _, idx, util, expo, comp, lam = linear_rank_audited_pallas(
+            u_p, a_p, b_p, X_p, W_p, c_p, gamma_p, m2=m2, eps=eps, tol=tol,
+            relu=relu, tile_b=tile_b, tile_m=tile_m, interpret=interpret)
+        return RankingOutput(
+            perm=idx[:n], utility=util[:n, 0], exposure=expo[:n],
+            compliant=comp[:n, 0].astype(bool), lam=lam[:n])
+
+    if isinstance(predictor, KNNLambdaPredictor):
+        lam = knn_lambda(X, predictor.X_db, predictor.lam_db,
+                         k=predictor.k, interpret=interpret)
+        ref.check_pred_width(lam.shape[-1], Kp)
+        lam = jnp.pad(lam, ((0, 0), (0, Kp - lam.shape[-1])))
+    else:
+        lam = predictor.predict(X).astype(jnp.float32)
+        ref.check_pred_width(lam.shape[-1], Kp)
+        lam = jnp.pad(lam, ((0, 0), (0, Kp - lam.shape[-1])))
+    return rank_audited(u, a, b, lam, gamma, m2=m2, eps=eps, tol=tol,
+                        interpret=interpret, tile_b=tile_b, tile_m=tile_m)
+
+
+# ---------------------------------------------------------------------------
 # knn_topk
 # ---------------------------------------------------------------------------
 
@@ -159,6 +287,46 @@ def knn_topk(
     d2, idx = knn_topk_pallas(
         xq_p, xdb_p, k=k, tile_q=tile_q, tile_n=tile_n, interpret=interpret)
     return d2[:B], idx[:B]
+
+
+def knn_lambda_tile_q(batch: int) -> int:
+    """Default resident-query-tile width for the fused KNN λ kernel: a
+    wider tile divides the per-request db-streaming cost (one sweep per
+    tile) — 32 when the batch fills it, the top-k kernel's 8 otherwise.
+    Shared with benchmarks/kernel_bench's traffic model so the modeled
+    sweep count always matches the kernel configuration that runs."""
+    return 32 if batch >= 32 else 8
+
+
+def knn_lambda(
+    X: Array, X_db: Array, lam_db: Array, *, k: int = 10,
+    use_kernel: bool = True, interpret: bool | None = None,
+    tile_q: int | None = None, tile_n: int = 512,
+) -> Array:
+    """λ̂ (B, K) from the fused KNN kernel (knn_lambda_pallas): one db
+    sweep per query tile, weighting at the flush step, no d2/idx or
+    distance-matrix HBM traffic. tile_q defaults to 32 when the batch
+    allows it — a bigger resident query tile divides the db-streaming
+    cost by 4 vs the top-k kernel's default of 8."""
+    if X_db.shape[0] < k:
+        # same contract every other KNN path enforces — without it the
+        # far-away db padding rows would silently enter the top-k
+        raise ValueError(f"n_train={X_db.shape[0]} < k={k}")
+    if not use_kernel:
+        return ref.knn_lambda_ref(X, X_db, lam_db, k)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if tile_q is None:
+        tile_q = knn_lambda_tile_q(X.shape[0])
+    B = X.shape[0]
+    Xq_p = _pad_to(jnp.asarray(X, jnp.float32), 0, tile_q, 0.0)
+    # far-away padding rows can never enter a top-k (requires the KNN
+    # contract N >= k real rows); their λ rows are zeroed for hygiene
+    xdb_p = _pad_to(X_db, 0, tile_n, 1e15)
+    lamdb_p = _pad_to(lam_db, 0, tile_n, 0.0)
+    lam = knn_lambda_pallas(Xq_p, xdb_p, lamdb_p, k=k, tile_q=tile_q,
+                            tile_n=tile_n, interpret=interpret)
+    return lam[:B]
 
 
 def knn_predict_kernel(

@@ -83,6 +83,67 @@ def rank_audited_ref(
     return vals, idx, utility, exposure, compliant
 
 
+def knn_lambda_ref(xq: Array, xdb: Array, lam_db: Array, k: int) -> Array:
+    """Inverse-distance-weighted KNN λ regression on knn_topk_ref's
+    neighbours — the semantics oracle for knn_lambda_pallas. The
+    weighting tail is the predictor's own _idw_lambda (one source of
+    truth: weights, exact-match override, normalization), so the only
+    difference from core.predictors.knn_predict is the stable-argsort
+    neighbour selection shared with knn_topk_ref.
+    """
+    from repro.core.predictors import _idw_lambda  # deferred: no cycle
+
+    xq = xq.astype(jnp.float32)
+    d2, idx = knn_topk_ref(xq, xdb, k)
+    x2 = jnp.sum(xq * xq, axis=-1, keepdims=True)
+    y2 = jnp.sum(xdb.astype(jnp.float32) ** 2, axis=-1)[idx]
+    return _idw_lambda(d2, x2, y2, lam_db.astype(jnp.float32)[idx])
+
+
+def check_pred_width(k_pred: int, k_bucket: int) -> None:
+    """The one place the predictor-width contract is enforced: a
+    predictor may emit FEWER shadow prices than the problem has
+    constraint rows (the extras get lam = 0, the bucket-padding
+    scheme), never more. Shared by the kernel dispatcher and this
+    fallback so the two paths reject identically."""
+    if k_pred > k_bucket:
+        raise ValueError(
+            f"predictor emits {k_pred} shadow prices but the problem "
+            f"carries only {k_bucket} constraint rows; serving a "
+            f"constraint the predictor was not fit for needs lam, not X")
+
+
+def predict_rank_audited_ref(
+    X: Array,      # (n, d) covariates
+    predictor,     # fitted λ predictor pytree (predict(X) -> (n, K_pred))
+    u: Array,      # (n, m1)
+    a: Array,      # (n, K, m1)
+    b: Array,      # (n, K)
+    gamma: Array,  # (n, m2)
+    m2: int,
+    eps: float = 1e-4,
+    tol: float | None = None,
+):
+    """Predict-then-rank+audit as two explicit XLA stages — the
+    semantics oracle (and fallback body) for the single-sweep
+    ops.predict_rank_audited dispatcher. λ̂ comes from the predictor's
+    own predict(); extra constraint columns in `a` beyond the
+    predictor's output (bucket-padded K) get zero shadow prices,
+    matching the serving engine's padding scheme.
+
+    Returns (vals, idx, utility, exposure, compliant, lam) — the
+    rank_audited_ref tuple plus the (n, K) λ̂ actually used.
+    """
+    lam = predictor.predict(X).astype(jnp.float32)
+    check_pred_width(lam.shape[-1], a.shape[1])
+    pad_k = a.shape[1] - lam.shape[-1]
+    if pad_k:
+        lam = jnp.pad(lam, ((0, 0), (0, pad_k)))
+    vals, idx, utility, exposure, compliant = rank_audited_ref(
+        u, a, b, lam, gamma, m2, eps, tol)
+    return vals, idx, utility, exposure, compliant, lam
+
+
 def embedding_bag_ref(
     table: Array, indices: Array, weights: Array | None = None
 ) -> Array:

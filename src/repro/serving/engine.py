@@ -250,13 +250,36 @@ class ServingEngine:
             return jax.jit(fn, donate_argnums=donate)
 
         entry = self._predictors[bucket.tag]
-        pad_k = bucket.K - entry.K
         pred = entry.predictor      # closed over: baked into the executable
+        if self.executor == "dist":
+            # the mesh-sharded rank body keeps its own predict stage
+            # (still inside this one jit executable)
+            pad_k = bucket.K - entry.K
+
+            def fn(b, gamma, u, a, X):
+                lam = pred.predict(X)                   # (B, K_pred)
+                lam = jnp.pad(lam, ((0, 0), (0, pad_k)))
+                return rank(u, a, b, lam, gamma)
+
+            return jax.jit(fn, donate_argnums=donate)
+
+        # Predictor-tagged buckets route through the single-sweep
+        # dispatcher (kernels.ops.predict_rank_audited): predict + rank
+        # + audit lower to ONE device program per flushed batch — for
+        # the fused executor the affine families fold λ̂ into the rank
+        # kernel's VMEM prologue and KNN fuses its weighting into the
+        # db sweep; the xla executor runs the same dispatcher's
+        # two-stage XLA body (use_kernel=False), still one executable.
+        # metrics.executable_calls counts the contract.
+        from repro.kernels.ops import predict_rank_audited
+
+        m2, eps = bucket.m2, self.eps
+        use_kernel = None if self.executor == "fused" else False
 
         def fn(b, gamma, u, a, X):
-            lam = pred.predict(X)                       # (B, K_pred)
-            lam = jnp.pad(lam, ((0, 0), (0, pad_k)))
-            return rank(u, a, b, lam, gamma)
+            return predict_rank_audited(X, pred, u, a, b, gamma,
+                                        m2=m2, eps=eps,
+                                        use_kernel=use_kernel)
 
         return jax.jit(fn, donate_argnums=donate)
 
@@ -408,6 +431,10 @@ class ServingEngine:
         t_launch = self.clock()
         out = self._call(fn, bucket, staged)    # async dispatch: no block
         t1 = self.clock()
+        # the single-dispatch contract: this _call was the batch's ONE
+        # executable invocation — predictor buckets included (λ̂ is
+        # predicted inside the executable, never as a separate program)
+        self.metrics.on_executable_call()
         pending = PendingBatch(
             bucket=bucket, entries=[(r, t) for r, t, _ in entries],
             futures=[f for _, _, f in entries], out=out, staged=staged,

@@ -29,6 +29,18 @@ class EngineMetrics:
     requests: int = 0
     results: int = 0
     batches: int = 0
+    # accounting for the single-dispatch contract: bucket-executable
+    # invocations outside warmup, i.e. device programs the ENGINE
+    # launches. One per flushed micro-batch, covariate streams included
+    # — λ̂ prediction happens inside the bucket executable
+    # (kernels.ops.predict_rank_audited), never as a second program.
+    # NOTE this counter is incremented at the engine's one dispatch
+    # site, so it reports the contract rather than proving it; the
+    # proving assertions live in tests/test_serving.py (per-bucket jit
+    # cache sizes stay 1, and a predictor's Python predict() is never
+    # re-entered after warmup — a second per-batch program would
+    # re-enter it or retrace).
+    executable_calls: int = 0
     # shape-lattice behaviour
     bucket_hits: dict = field(default_factory=lambda: defaultdict(int))
     compiles: int = 0                 # executables built, ever
@@ -76,6 +88,11 @@ class EngineMetrics:
         self.compiles += 1
         if self.warmed and not in_warmup:
             self.compiles_post_warmup += 1
+
+    def on_executable_call(self) -> None:
+        """Submission side: one bucket executable was invoked (the
+        whole predict+rank+audit program for its micro-batch)."""
+        self.executable_calls += 1
 
     def on_dispatch(self, bucket, n_real: int, trigger: str, fill: dict,
                     *, assembly_ms: float, dispatch_ms: float,
@@ -143,6 +160,10 @@ class EngineMetrics:
             "requests": self.requests,
             "results": self.results,
             "batches": self.batches,
+            "executable_calls": self.executable_calls,
+            "dispatches_per_batch": round(
+                self.executable_calls / self.batches, 3)
+                if self.batches else float("nan"),
             "buckets_used": len(self.bucket_hits),
             "compiles": self.compiles,
             "compiles_post_warmup": self.compiles_post_warmup,

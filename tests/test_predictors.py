@@ -5,13 +5,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.core.predictors as predictors_mod
 from repro.core.predictors import (
     KNNLambdaPredictor,
     LinearLambdaPredictor,
     MeanLambdaPredictor,
     MLPLambdaPredictor,
     knn_predict,
+    knn_predict_chunked,
 )
+from repro.optim import adam_init, adam_update
 
 
 def _data(seed=0, n=200, d=6, K=3):
@@ -77,6 +80,106 @@ def test_mlp_trains():
     base = float(jnp.mean((lam - jnp.mean(lam, 0)) ** 2))
     assert float(jnp.mean((pred - lam) ** 2)) < 0.5 * base
     assert bool(jnp.all(pred >= 0))  # softplus head: dual feasible
+
+
+def test_mlp_scan_fit_matches_python_loop():
+    """The lax.scan training loop (one jit dispatch) must reproduce the
+    old per-step-jit Python loop exactly — same init, same Adam, same
+    order of operations, so the fitted params are unchanged bitwise."""
+    X, lam = _data(seed=4, n=150)
+    steps, lr = 40, 1e-2
+    p_scan, losses = MLPLambdaPredictor.fit(
+        X, lam, num_steps=steps, d_hidden=32, return_trace=True)
+
+    params = MLPLambdaPredictor.init_params(
+        jax.random.key(0), X.shape[1], 32, lam.shape[1])
+    opt = adam_init(params)
+
+    def loss_fn(p):
+        return jnp.mean((MLPLambdaPredictor.apply(p, X) - lam) ** 2)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, o = adam_update(g, o, p, lr=lr)
+        return p, o, loss
+
+    loop_losses = []
+    for _ in range(steps):
+        params, opt, l = step(params, opt)
+        loop_losses.append(float(l))
+
+    for k in params:
+        np.testing.assert_array_equal(
+            np.asarray(p_scan.params[k]), np.asarray(params[k]),
+            err_msg=f"scan-fit drifted from the loop fit on {k}")
+    assert losses.shape == (steps,)
+    np.testing.assert_allclose(np.asarray(losses), loop_losses, rtol=1e-6)
+    # the trace is the training curve: it must actually descend
+    assert float(losses[-1]) < float(losses[0])
+
+
+def test_mlp_fit_default_returns_predictor_only():
+    X, lam = _data(seed=5, n=60)
+    p = MLPLambdaPredictor.fit(X, lam, num_steps=5, d_hidden=16)
+    assert isinstance(p, MLPLambdaPredictor)
+
+
+def test_knn_chunked_matches_full_matrix():
+    """The chunked db sweep is the same estimator as the one-matmul
+    path: same neighbours (ties to lower global index), same weights,
+    exact-match override included — on chunk sizes that do and do not
+    divide n_train."""
+    rng = np.random.default_rng(7)
+    X_db = jnp.asarray(rng.normal(size=(500, 9)), jnp.float32)
+    lam_db = jnp.asarray(np.abs(rng.normal(size=(500, 4))), jnp.float32)
+    Xq = jnp.concatenate([
+        jnp.asarray(rng.normal(size=(11, 9)), jnp.float32),
+        X_db[100:103],                       # exact-match rows
+    ])
+    full = knn_predict(X_db, lam_db, Xq, k=10)
+    for chunk in (128, 500, 333):            # divides / whole / ragged
+        got = knn_predict_chunked(X_db, lam_db, Xq, k=10, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=f"chunk={chunk}")
+    # 1-D query squeeze contract matches too
+    np.testing.assert_allclose(
+        np.asarray(knn_predict_chunked(X_db, lam_db, Xq[0], k=5, chunk=200)),
+        np.asarray(knn_predict(X_db, lam_db, Xq[0], k=5)),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_knn_chunked_rejects_too_small_db():
+    X_db = jnp.zeros((4, 3))
+    lam_db = jnp.zeros((4, 2))
+    with pytest.raises(ValueError, match="n_train"):
+        knn_predict_chunked(X_db, lam_db, jnp.zeros((2, 3)), k=10)
+
+
+def test_knn_predictor_routes_chunked_above_threshold(monkeypatch):
+    """KNNLambdaPredictor.predict flips to the chunked path above the
+    size threshold and the answer does not change."""
+    rng = np.random.default_rng(8)
+    X_db = rng.normal(size=(300, 6)).astype(np.float32)
+    lam_db = np.abs(rng.normal(size=(300, 3))).astype(np.float32)
+    Xq = jnp.asarray(rng.normal(size=(9, 6)), jnp.float32)
+    p = KNNLambdaPredictor.fit(X_db, lam_db, k=10)
+    full = p.predict(Xq)
+
+    routed = {"chunked": 0}
+    real = predictors_mod.knn_predict_chunked
+
+    def counting(*args, **kwargs):
+        routed["chunked"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(predictors_mod, "KNN_CHUNK_THRESHOLD", 100)
+    monkeypatch.setattr(predictors_mod, "knn_predict_chunked", counting)
+    got = p.predict(Xq)
+    assert routed["chunked"] == 1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-6, atol=1e-7)
 
 
 def test_predictors_are_pytrees():
