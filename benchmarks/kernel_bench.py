@@ -37,19 +37,35 @@ single-sweep dispatcher (kernels.ops.predict_rank_audited) deletes:
             VMEM prologue, KNN fuses its weighting into the db sweep's
             flush step, and λ̂ never exists between programs.
 
+The knn_fused section covers the single-grid KNN kernel
+(`kernels/knn_topk.knn_rank_audited_pallas`) specifically: the HBM
+traffic model for the three ways of serving a KNN micro-batch (XLA
+chunked predict -> rank with its per-slab d2 materializations; the PR 4
+two-kernel chain with its λ̂ HBM round-trip; the single grid), and the
+measured two-dispatch-vs-one wall of the corresponding XLA stand-in
+programs.
+
 `python -m benchmarks.kernel_bench --quick` is the CI smoke: small
-shapes, plus `check_rank_audited` and `check_predict_rank` — hard
-gates that fail the build if interpret-mode parity with the
-predict-then-rank oracle breaks, if the dispatchers stop engaging the
-kernels for kernel-eligible shapes, or if the m2 > MAX_KERNEL_M2
-fallbacks stop engaging. `--json OUT` writes a machine-readable
-BENCH_kernel_bench.json (medians, geometry, backend) for the
-cross-PR perf trajectory; CI uploads it as an artifact.
+shapes, plus `check_rank_audited`, `check_predict_rank` and
+`check_knn_fused` — hard gates that fail the build if interpret-mode
+parity with the predict-then-rank oracle breaks, if the dispatchers
+stop engaging the kernels for kernel-eligible shapes, if the
+m2 > MAX_KERNEL_M2 fallbacks stop engaging, or if the serving engine's
+KNN buckets stop recording exactly one kernel launch per flushed
+micro-batch. `--json OUT` writes machine-readable
+BENCH_kernel_bench.json / BENCH_knn_fused.json (medians, geometry,
+backend) for the cross-PR perf trajectory; CI uploads both as
+artifacts. `--budget-s` bounds the --quick wall clock: blowing it
+fails the job with a named per-section timing table instead of the
+runner's silent timeout.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import time
+from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
@@ -234,6 +250,101 @@ def run_predict_rank(n, m1, K, m2, *, d=20, n_db=8192, iters=7):
     return rows
 
 
+def _knn_fused_traffic_model(B: int, N: int, D: int, K: int,
+                             m1: int, m2: int, k: int = 10) -> dict:
+    """Per-micro-batch HBM bytes of the three ways to serve a KNN
+    bucket, at the tile geometry the dispatcher actually runs
+    (kernels.common.TILE_B batch rows resident per db sweep):
+
+      xla_chunked  predict program (knn_predict_chunked: every db slab's
+                   (B, chunk) d2 block materializes — write + read —
+                   summing to 2·B·N floats across the sweep, plus the db
+                   stream) writes λ̂ out; rank+audit program reads λ̂
+                   back and streams u/a. Two dispatches.
+      chain        PR 4: knn_lambda kernel (db streamed once per
+                   resident query tile, d2 never leaves VMEM) writes λ̂
+                   to HBM; rank_audited kernel reads it back and
+                   streams u/a. One executable, two kernel launches,
+                   one λ̂ round-trip.
+      single_grid  this PR: one kernel launch; the λ̂ round-trip is
+                   gone (the (B, K) lam output is written once as
+                   observability, never read back) and so is the
+                   second launch's pipeline drain/fill.
+
+    Rank-side traffic (u/a streamed once + outputs) is identical
+    everywhere and included so the ratios reflect whole micro-batches.
+    """
+    from repro.kernels.ops import knn_lambda_tile_q
+
+    # db sweeps per micro-batch: one per resident query tile, at the
+    # same tile rule the dispatcher runs (32-wide when the batch fills)
+    sweeps = -(-B // knn_lambda_tile_q(B))
+    db_stream = sweeps * N * (D + K) * 4       # db rows + λ rows, per sweep
+    rank_stream = B * (K + 1) * m1 * 4         # u + a, read once
+    outputs = B * (2 * m2 + K + K + 2) * 4     # vals/idx/util/expo/comp/lam
+    lam_rt = 2 * B * K * 4                     # λ̂ write + read back
+    d2_slabs = 2 * B * N * 4                   # chunked-scan d2 blocks
+    # the XLA path streams the db once and gathers only the B·k
+    # selected λ rows (the kernels stream the full (N, K) λ database
+    # per sweep instead — payload ride-along trades λ bytes for never
+    # touching HBM with d2/idx)
+    xla = (d2_slabs + N * D * 4 + B * k * K * 4
+           + lam_rt + rank_stream + outputs)
+    chain = db_stream + lam_rt + rank_stream + outputs
+    fused = db_stream + rank_stream + outputs
+    return {
+        "knn_xla_bytes": xla, "knn_chain_bytes": chain,
+        "knn_fused_bytes": fused,
+        "ratio_xla_over_fused": round(xla / fused, 3),
+        "ratio_chain_over_fused": round(chain / fused, 3),
+        "lam_roundtrip_bytes_eliminated": lam_rt,
+        "kernel_launches_chain": 2, "kernel_launches_fused": 1,
+    }
+
+
+def run_knn_fused(n, m1, K, m2, *, d=20, n_db=8192, k=10, iters=7):
+    """The single-grid KNN kernel's section: the three-way traffic
+    model above, plus a measured CPU stand-in for the dispatch overhead
+    the fusion deletes — the two-dispatch XLA baseline (a jit'd
+    knn_predict_chunked program, then a jit'd rank+audit program
+    reading λ̂ back) against the same math as ONE jit program. Both
+    sides run the slab-streaming predictor, so the wall delta isolates
+    the λ̂ handoff + second dispatch; interpret-mode Pallas wall time
+    would be meaningless (see module docstring)."""
+    from repro.core.predictors import KNNLambdaPredictor, knn_predict_chunked
+
+    u, a, b, _, gamma = _rank_audit_problem(n, m1, K, m2)
+    ks = jax.random.split(jax.random.key(29), 3)
+    X = jax.random.normal(ks[0], (n, d))
+    X_tr = jax.random.uniform(ks[1], (n_db, d))
+    lam_tr = jnp.abs(jax.random.normal(ks[2], (n_db, K)))
+    pred = KNNLambdaPredictor.fit(X_tr, lam_tr, k=k)
+
+    chunk = min(2048, n_db)
+    predict_j = jax.jit(lambda X: knn_predict_chunked(
+        pred.X_db, pred.lam_db, X, k=k, chunk=chunk))
+    rank_j = jax.jit(
+        lambda u, a, b, lam, gamma: ref.rank_audited_ref(
+            u, a, b, lam, gamma, m2)[2])
+    one_j = jax.jit(
+        lambda X, u, a, b, gamma: ref.rank_audited_ref(
+            u, a, b, knn_predict_chunked(
+                pred.X_db, pred.lam_db, X, k=k, chunk=chunk),
+            gamma, m2)[2])
+    two_us = timed(lambda: rank_j(u, a, b, predict_j(X), gamma), iters=iters)
+    one_us = timed(lambda: one_j(X, u, a, b, gamma), iters=iters)
+    model = _knn_fused_traffic_model(n, n_db, d, K, m1, m2, k=k)
+    return {
+        "name": f"knn_fused/m1={m1}/K={K}/m2={m2}/n={n}/n_db={n_db}",
+        "us": one_us,
+        "derived": {
+            **model,
+            "us_two_dispatch": round(two_us, 1),
+            "wall_two_over_one": round(two_us / one_us, 3),
+        },
+    }
+
+
 def run(quick: bool = False):
     rows = []
     key = jax.random.key(0)
@@ -269,6 +380,15 @@ def run(quick: bool = False):
         rows += run_predict_rank(n_pr, m1_pr, K_pr, m2_pr,
                                  d=d_pr, n_db=ndb_pr)
 
+    # knn_fused: the single-grid KNN kernel vs the two-kernel chain vs
+    # the XLA chunked path, at engine micro-batch shapes
+    kf_shapes = ([(32, 2048, 5, 32, 20, 4096)] if quick
+                 else [(32, 2048, 5, 32, 20, 16384),
+                       (64, 8192, 8, 50, 20, 65536)])
+    for n_kf, m1_kf, K_kf, m2_kf, d_kf, ndb_kf in kf_shapes:
+        rows.append(run_knn_fused(n_kf, m1_kf, K_kf, m2_kf,
+                                  d=d_kf, n_db=ndb_kf))
+
     # knn_topk: oracle materializes the (B, N) distance matrix
     B, N, D, k = (256, 65536, 20, 10) if not quick else (64, 8192, 20, 10)
     kq, kd = jax.random.split(key)
@@ -295,6 +415,34 @@ def run(quick: bool = False):
     return rows
 
 
+@contextmanager
+def _count_kernel_calls(mapping: dict):
+    """Monkeypatch-count Pallas kernel engagements through the ops
+    dispatchers: ``mapping`` is {label: attribute name on
+    repro.kernels.ops}; yields the live {label: count} dict. The shared
+    scaffolding of every health gate below — wrappers restore on exit,
+    so a failing gate can never leak a counting shim into later
+    sections."""
+    import repro.kernels.ops as ops_mod
+
+    calls = {label: 0 for label in mapping}
+    real = {label: getattr(ops_mod, attr) for label, attr in mapping.items()}
+
+    def counting(label, fn):
+        def wrapped(*args, **kwargs):
+            calls[label] += 1
+            return fn(*args, **kwargs)
+        return wrapped
+
+    for label, attr in mapping.items():
+        setattr(ops_mod, attr, counting(label, real[label]))
+    try:
+        yield calls
+    finally:
+        for label, attr in mapping.items():
+            setattr(ops_mod, attr, real[label])
+
+
 def check_rank_audited() -> None:
     """Kernel-health gate (CI smoke): raises on any regression.
 
@@ -317,20 +465,10 @@ def check_rank_audited() -> None:
     b = jnp.abs(jax.random.normal(ks[3], (n, K)))
     gamma = jnp.abs(jax.random.normal(ks[4], (n, m2)))
 
-    calls = {"kernel": 0}
-    real = ops_mod.rank_audited_pallas
-
-    def counting(*args, **kwargs):
-        calls["kernel"] += 1
-        return real(*args, **kwargs)
-
-    ops_mod.rank_audited_pallas = counting
-    try:
+    with _count_kernel_calls({"kernel": "rank_audited_pallas"}) as calls:
         got = ops_mod.rank_audited(u, a, b, lam, gamma, m2=m2)
         big = ops_mod.rank_audited(
             u, a, b, lam, jnp.abs(jax.random.normal(ks[4], (n, 256))), m2=256)
-    finally:
-        ops_mod.rank_audited_pallas = real
     if calls["kernel"] != 1:
         raise AssertionError(
             f"kernel dispatch regression: rank_audited_pallas engaged "
@@ -392,39 +530,20 @@ def check_predict_rank() -> None:
         "mlp": MLPLambdaPredictor.fit(X_tr, lam_tr, num_steps=20),
     }
 
-    calls = {"linear": 0, "knn_lambda": 0, "rank": 0}
-    real_lin = ops_mod.linear_rank_audited_pallas
-    real_knn = ops_mod.knn_lambda_pallas
-    real_rank = ops_mod.rank_audited_pallas
-
-    def c_lin(*a_, **k_):
-        calls["linear"] += 1
-        return real_lin(*a_, **k_)
-
-    def c_knn(*a_, **k_):
-        calls["knn_lambda"] += 1
-        return real_knn(*a_, **k_)
-
-    def c_rank(*a_, **k_):
-        calls["rank"] += 1
-        return real_rank(*a_, **k_)
-
-    ops_mod.linear_rank_audited_pallas = c_lin
-    ops_mod.knn_lambda_pallas = c_knn
-    ops_mod.rank_audited_pallas = c_rank
-    try:
+    with _count_kernel_calls({
+            "linear": "linear_rank_audited_pallas",
+            "knn_fused": "knn_rank_audited_pallas",
+            "rank": "rank_audited_pallas"}) as calls:
         got = {name: ops_mod.predict_rank_audited(
                    X, pred, u, a, b, gamma, m2=m2)
                for name, pred in families.items()}
         gamma_big = jnp.abs(jax.random.normal(ks[3], (n, 256)))
         big = ops_mod.predict_rank_audited(
             X, families["linear"], u, a, b, gamma_big, m2=256)
-    finally:
-        ops_mod.linear_rank_audited_pallas = real_lin
-        ops_mod.knn_lambda_pallas = real_knn
-        ops_mod.rank_audited_pallas = real_rank
 
-    want_calls = {"linear": 2, "knn_lambda": 1, "rank": 2}  # knn+mlp rank
+    # knn engages the single-grid kernel; only mlp still chains into a
+    # standalone rank kernel
+    want_calls = {"linear": 2, "knn_fused": 1, "rank": 1}
     if calls != want_calls:
         raise AssertionError(
             f"predict+rank dispatch regression: kernel engagement "
@@ -459,6 +578,110 @@ def check_predict_rank() -> None:
           "-> PASS")
 
 
+def check_knn_fused() -> None:
+    """Single-grid KNN kernel health gate (CI smoke): raises on any
+    regression.
+
+    1. parity: ops.predict_rank_audited on a KNN predictor — the
+       single-grid knn_rank_audited_pallas — matches the PR 4
+       two-kernel chain (knn_chain=True, matched tile geometry)
+       BITWISE on every RankingOutput field INCLUDING λ̂, and matches
+       the rank_given_lambda oracle exactly on
+       perm/utility/exposure/compliant (λ̂ to tight tolerance — the
+       per-slab distance accumulation differs from the oracle's
+       one-matmul form in the last ulp).
+    2. dispatch: the kernel-eligible shape engages the single-grid
+       kernel exactly once and the chain kernels not at all; the
+       m2 > MAX_KERNEL_M2 fallback engages none.
+    3. engine accounting: a fused-executor engine serving a KNN
+       covariate stream records exactly ONE kernel launch AND one
+       executable call per flushed micro-batch post-warmup
+       (EngineMetrics.kernel_launches / executable_calls).
+    """
+    import repro.kernels.ops as ops_mod
+    from repro.core.predictors import KNNLambdaPredictor
+    from repro.core.ranking import rank_given_lambda
+    from repro.serving import Scenario, ServingEngine, make_stream
+
+    n, m1, K, m2, d = 8, 640, 4, 16, 12
+    ks = jax.random.split(jax.random.key(31), 7)
+    u = jax.random.uniform(ks[0], (n, m1), minval=1.0, maxval=5.0)
+    a = (jax.random.uniform(ks[1], (n, K, m1)) < 0.15).astype(jnp.float32)
+    b = jnp.abs(jax.random.normal(ks[2], (n, K)))
+    gamma = jnp.abs(jax.random.normal(ks[3], (n, m2)))
+    X = jax.random.normal(ks[4], (n, d))
+    X_tr = jax.random.uniform(ks[5], (600, d))
+    lam_tr = jnp.abs(jax.random.normal(ks[6], (600, K)))
+    pred = KNNLambdaPredictor.fit(X_tr, lam_tr, k=5)
+
+    gamma_big = jnp.abs(jax.random.normal(ks[3], (n, 256)))
+    with _count_kernel_calls({
+            "fused": "knn_rank_audited_pallas",
+            "chain_knn": "knn_lambda_pallas",
+            "chain_rank": "rank_audited_pallas"}) as calls:
+        got = ops_mod.predict_rank_audited(X, pred, u, a, b, gamma, m2=m2)
+        fast_calls = dict(calls)
+        big = ops_mod.predict_rank_audited(X, pred, u, a, b, gamma_big,
+                                           m2=256)
+        fallback_calls = dict(calls)
+
+    if fast_calls != {"fused": 1, "chain_knn": 0, "chain_rank": 0}:
+        raise AssertionError(
+            f"knn_fused dispatch regression: kernel engagement "
+            f"{fast_calls}, expected the single grid exactly once")
+    if fallback_calls != fast_calls:
+        raise AssertionError(
+            f"knn_fused fallback regression: m2 > MAX_KERNEL_M2 engaged "
+            f"kernels {fallback_calls} (expected {fast_calls})")
+
+    chain = ops_mod.predict_rank_audited(X, pred, u, a, b, gamma, m2=m2,
+                                         knn_chain=True)
+    for field in ("perm", "utility", "exposure", "compliant", "lam"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)), np.asarray(getattr(chain, field)),
+            err_msg=f"single-grid vs two-kernel chain broke on {field}")
+    want = rank_given_lambda(u, a, b, pred.predict(X), gamma, m2=m2)
+    for field in ("perm", "utility", "exposure", "compliant"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)), np.asarray(getattr(want, field)),
+            err_msg=f"single-grid vs oracle broke on {field}")
+    np.testing.assert_allclose(
+        np.asarray(got.lam), np.asarray(want.lam), rtol=1e-5, atol=1e-6,
+        err_msg="single-grid λ̂ drifted from the predictor")
+    want_big = rank_given_lambda(u, a, b, pred.predict(X), gamma_big, m2=256)
+    for field in ("perm", "utility", "exposure", "compliant"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(big, field)),
+            np.asarray(getattr(want_big, field)),
+            err_msg=f"knn_fused XLA fallback parity broke on {field}")
+
+    rng = np.random.default_rng(5)
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(96, d)).astype(np.float32),
+        np.abs(rng.normal(size=(96, K))).astype(np.float32), k=5)
+    with ServingEngine(max_batch=8, max_wait_ms=2.0,
+                       executor="fused") as eng:
+        eng.register_predictor("knn_arch", knn, d_cov=d)
+        mix = (Scenario("feed", m1=300, m2=16, K=K, tag="knn_arch",
+                        d_cov=d),)
+        reqs = make_stream(mix, n_requests=24, seed=3)
+        eng.warmup(reqs)
+        results = eng.serve_stream(reqs)
+        m = eng.metrics
+        if len(results) != 24 or m.batches == 0:
+            raise AssertionError("knn_fused engine smoke did not serve")
+        if (m.kernel_launches != m.batches
+                or m.executable_calls != m.batches):
+            raise AssertionError(
+                f"knn_fused engine accounting regression: "
+                f"{m.batches} batches but {m.executable_calls} "
+                f"executable calls / {m.kernel_launches} kernel "
+                f"launches (want exactly one of each per batch)")
+    print("# knn_fused health: single grid engaged (chain kernels idle), "
+          "bitwise vs chain, oracle parity, fallback clean, engine "
+          "1 launch/batch -> PASS")
+
+
 def records(rows):
     return [Record(name=f"kernel/{r['name']}", us_per_call=r["us"],
                    derived=r["derived"]) for r in rows]
@@ -469,18 +692,37 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized shapes + the kernel health gates")
     ap.add_argument("--json", metavar="OUT", default=None,
-                    help="write BENCH_kernel_bench.json to OUT (a "
-                         "directory, or an explicit *.json path)")
+                    help="write BENCH_kernel_bench.json / "
+                         "BENCH_knn_fused.json to OUT (a directory, or "
+                         "an explicit *.json path for the main file)")
+    ap.add_argument("--budget-s", type=float, default=300.0,
+                    help="--quick wall-clock budget: exceeding it fails "
+                         "the run with a per-section timing table "
+                         "(instead of the CI runner's silent timeout)")
     args = ap.parse_args()
 
-    check_rank_audited()                    # hard gates: raise on regression
-    check_predict_rank()
-    rows = run(quick=args.quick)
+    sections: list[tuple[str, float]] = []
+
+    def section(name, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        sections.append((name, time.perf_counter() - t0))
+        return out
+
+    section("check_rank_audited", check_rank_audited)   # hard gates:
+    section("check_predict_rank", check_predict_rank)   # raise on
+    section("check_knn_fused", check_knn_fused)         # regression
+    rows = section("bench_sweep", lambda: run(quick=args.quick))
     recs = records(rows)
     for rec in recs:
         print(rec.csv())
     if args.json:
         write_bench_json(args.json, "kernel_bench", recs,
+                         meta={"quick": args.quick})
+        kf_recs = [r for r in recs if "/knn_fused/" in r.name]
+        out_dir = (args.json if not args.json.endswith(".json")
+                   else (os.path.dirname(args.json) or "."))
+        write_bench_json(out_dir, "knn_fused", kf_recs,
                          meta={"quick": args.quick})
     ras = [r for r in rows if r["name"].startswith("rank_audit/")]
     if any(r["derived"]["audit_ratio_xla_over_fused"] <= 1.0 for r in ras):
@@ -512,6 +754,38 @@ def main():
         print(f"# predict+rank acceptance: WARN — traffic model holds but "
               f"measured two-dispatch/fused wall {best_pr:.2f}x < 1.0x "
               f"(noisy host?)")
+    kfs = [r for r in rows if r["name"].startswith("knn_fused/")]
+    # bytes compared unrounded: the chain/fused edge is the λ̂
+    # round-trip (small but strictly positive) plus the deleted second
+    # kernel launch; the xla/fused edge is the d2 slab materialization
+    if any(r["derived"]["knn_fused_bytes"] >= r["derived"]["knn_chain_bytes"]
+           or (r["derived"]["knn_fused_bytes"]
+               >= r["derived"]["knn_xla_bytes"]) for r in kfs):
+        raise SystemExit("# knn_fused acceptance: FAIL — traffic model "
+                         "does not favor the single-grid kernel over the "
+                         "chain AND the XLA chunked path")
+    best_kf = max(r["derived"]["wall_two_over_one"] for r in kfs)
+    print(f"# knn_fused acceptance: PASS — xla/fused traffic up to "
+          f"{max(r['derived']['ratio_xla_over_fused'] for r in kfs)}x, "
+          f"chain/fused {max(r['derived']['ratio_chain_over_fused'] for r in kfs)}x "
+          f"(+1 fewer kernel launch), two-dispatch/fused wall up to "
+          f"{best_kf:.2f}x" if best_kf >= 1.0 else
+          f"# knn_fused acceptance: WARN — traffic model holds but "
+          f"measured wall {best_kf:.2f}x < 1.0x (noisy host?)")
+
+    # --- wall-clock budget: a growing bench suite must fail loudly, ---
+    # --- with names, not eat the CI runner's timeout silently       ---
+    total = sum(s for _, s in sections)
+    width = max(len(n) for n, _ in sections)
+    print(f"# section timings (budget {args.budget_s:.0f}s, "
+          f"{'enforced' if args.quick else 'informational'}):")
+    for name, secs in sections + [("TOTAL", total)]:
+        print(f"#   {name:<{width}}  {secs:7.1f}s")
+    if args.quick and total > args.budget_s:
+        raise SystemExit(
+            f"# kernel_bench budget: FAIL — --quick took {total:.1f}s "
+            f"> {args.budget_s:.0f}s; trim the slowest section above "
+            f"or raise --budget-s deliberately")
 
 
 if __name__ == "__main__":

@@ -136,21 +136,21 @@ def knn_predict(X_db: Array, lam_db: Array, X: Array, *, k: int = 10) -> Array:
 KNN_CHUNK_THRESHOLD = 32_768
 
 
-@partial(jax.jit, static_argnames=("k", "chunk"))
-def knn_predict_chunked(
-    X_db: Array, lam_db: Array, X: Array, *, k: int = 10, chunk: int = 8192
-) -> Array:
-    """knn_predict for large train databases: identical estimator,
-    O(b * chunk) peak distance storage instead of O(b * n_train).
+def knn_topk_scan(
+    X_db: Array, Xq: Array, *, k: int = 10, chunk: int = 8192
+) -> tuple[Array, Array]:
+    """Streaming top-k of -d2: the database scans through in
+    `chunk`-row slabs and the carry is only the running top-k
+    (neg-d2, global index) per query — O(b * chunk) peak distance
+    storage, no (b, n_train) matrix ever.
 
-    The database streams through a lax.scan in `chunk`-row slabs; the
-    carry is only the running top-k (neg-d2, global index) per query.
     Ties break exactly like the one-matmul path (lower global index:
-    the running buffer precedes the fresh slab in the merge). The final
-    weighting is the shared _idw_lambda on k gathered neighbours.
+    the running buffer precedes the fresh slab in the merge). Returns
+    (neg_top (b, k) descending, idx (b, k)). This is the slab sweep
+    shared by knn_predict_chunked and the sharded serving body
+    (core.serving_dist.knn_predict_distributed), where it serves as the
+    per-shard local selection ahead of the cross-shard merge.
     """
-    squeeze = X.ndim == 1
-    Xq = jnp.atleast_2d(X)
     b = Xq.shape[0]
     n, d = X_db.shape
     if n < k:
@@ -178,6 +178,21 @@ def knn_predict_chunked(
     init = (jnp.full((b, k), -jnp.inf, Xq.dtype),
             jnp.zeros((b, k), jnp.int32))
     (neg_top, idx), _ = jax.lax.scan(body, init, (db_slabs, bases))
+    return neg_top, idx
+
+
+@partial(jax.jit, static_argnames=("k", "chunk"))
+def knn_predict_chunked(
+    X_db: Array, lam_db: Array, X: Array, *, k: int = 10, chunk: int = 8192
+) -> Array:
+    """knn_predict for large train databases: identical estimator,
+    built on the knn_topk_scan slab sweep. The final weighting is the
+    shared _idw_lambda on k gathered neighbours.
+    """
+    squeeze = X.ndim == 1
+    Xq = jnp.atleast_2d(X)
+    neg_top, idx = knn_topk_scan(X_db, Xq, k=k, chunk=chunk)
+    x2 = jnp.sum(Xq * Xq, axis=-1, keepdims=True)           # (b, 1)
     y2 = jnp.sum(X_db * X_db, axis=-1)                      # (n,) — cheap
     out = _idw_lambda(-neg_top, x2, y2[idx], lam_db[idx])
     return out[0] if squeeze else out

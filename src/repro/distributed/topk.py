@@ -42,6 +42,36 @@ def _merge_topk(values: Array, indices: Array, k: int, payload=None):
     return top_v, top_i, sel
 
 
+def gather_merge_top_k(
+    local_v: Array,             # (b, kk) per-shard pre-selected values
+    local_i: Array,             # (b, kk) their GLOBAL indices
+    k: int,
+    axis_name: str,
+    payload=None,               # pytree of (..., b, kk) selected slots
+):
+    """The collective half of distributed_top_k: all_gather each
+    shard's already-selected (value, global index) candidates — and
+    their payload slots — then re-top-k the union. Exposed on its own
+    so bodies that produce their local top-k without a dense score
+    matrix (e.g. the slab-streaming sharded KNN body in
+    core.serving_dist) can join the same merge. Only k·shards
+    candidates cross the interconnect."""
+
+    def gather_flat(x):
+        """(..., b?, kk) -> all_gather -> (..., shards*kk): the shard axis
+        lands in front; fold it into the last axis."""
+        g = jax.lax.all_gather(x, axis_name)       # (shards, ..., kk)
+        g = jnp.moveaxis(g, 0, -2)                 # (..., shards, kk)
+        return g.reshape(g.shape[:-2] + (-1,))
+
+    all_v = gather_flat(local_v)
+    all_i = gather_flat(local_i)
+    all_p = None
+    if payload is not None:
+        all_p = jax.tree.map(gather_flat, payload)
+    return _merge_topk(all_v, all_i, k, all_p)
+
+
 def distributed_top_k(
     scores: Array,              # (b, n_local) per-shard scores
     k: int,
@@ -68,20 +98,8 @@ def distributed_top_k(
     if global_offset is None:
         global_offset = jax.lax.axis_index(axis_name) * n_local
     local_i = local_i + global_offset
-
-    def gather_flat(x):
-        """(..., b?, kk) -> all_gather -> (..., shards*kk): the shard axis
-        lands in front; fold it into the last axis."""
-        g = jax.lax.all_gather(x, axis_name)       # (shards, ..., kk)
-        g = jnp.moveaxis(g, 0, -2)                 # (..., shards, kk)
-        return g.reshape(g.shape[:-2] + (-1,))
-
-    all_v = gather_flat(local_v)
-    all_i = gather_flat(local_i)
-    all_p = None
-    if local_p is not None:
-        all_p = jax.tree.map(gather_flat, local_p)
-    return _merge_topk(all_v, all_i, k, all_p)
+    return gather_merge_top_k(local_v, local_i, k, axis_name,
+                              payload=local_p)
 
 
 def sharded_knn_topk(

@@ -24,7 +24,11 @@ on it:
     VMEM scratch, not a payload — it is per-row, not per-candidate);
   * knn_topk.knn_lambda_pallas — each neighbour's λ row + |x_n|^2 ride
     along so the inverse-distance weighting runs at the flush step and
-    the kernel emits λ̂ directly, no d2/idx pairs in HBM.
+    the kernel emits λ̂ directly, no d2/idx pairs in HBM;
+  * knn_topk.knn_rank_audited_pallas — BOTH of the above in one grid:
+    the db-sweep merge feeds a λ̂ flush into VMEM scratch, then the
+    rank-sweep merge audits at the final flush — the whole KNN online
+    stage in one kernel launch.
 It is also the in-VMEM twin of the payload ride-along in
 repro.distributed.topk.distributed_top_k.
 """
@@ -35,6 +39,19 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = float(-1e30)
+
+# ---------------------------------------------------------------------------
+# Shared tiling knobs. Every kernel wrapper in ops.py defaults to these,
+# so a TPU-generation retune is a one-file edit and the benchmarks'
+# traffic models can import the exact geometry the kernels run with.
+# ---------------------------------------------------------------------------
+
+LANE = 128      # TPU lane width: minor-dim alignment boundary
+SUBLANE = 8     # f32 sublane count: batch-row alignment boundary
+
+TILE_B = SUBLANE   # batch rows resident per grid step (rank + KNN sweeps)
+TILE_M = 512       # candidate (m1) columns per rank-sweep tile
+DB_SLAB = 512      # train-db rows per VMEM slab in the KNN db sweeps
 
 
 def first_argmax(x: jnp.ndarray) -> jnp.ndarray:

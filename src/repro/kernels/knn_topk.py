@@ -22,9 +22,26 @@ flush step computes the inverse-distance weights — exact-match override
 included — and emits λ̂ (B, K) directly. The (B, k) d2/idx pairs that
 XLA would otherwise write out, re-read, and re-gather against the λ
 database never exist in HBM; neither does the (B, n_train) distance
-matrix the brute-force XLA path materializes. This is the KNN half of
-the single-sweep predict+rank+audit dispatcher
-(repro.kernels.ops.predict_rank_audited).
+matrix the brute-force XLA path materializes. Since the single-grid
+kernel below landed, this is the predict half of the RETAINED
+two-kernel chain (ops.predict_rank_audited(knn_chain=True)) — the
+parity oracle and A/B baseline for the fused grid.
+
+`knn_rank_audited_pallas` is the whole KNN online stage as ONE grid:
+per batch tile the minor axis first streams the S db slabs (the
+knn_lambda sweep, double-buffered by the Pallas pipeline: slab t+1's
+HBM->VMEM copy overlaps slab t's distance dot + merge), computes λ̂ at
+the slab-sweep flush into a VMEM scratch, and then — still inside the
+same program — continues through the M candidate tiles of the
+rank+audit sweep (fused_rank's shared merge body reading λ̂ from that
+scratch) and emits the complete RankingOutput at the final flush. λ̂
+never exists in HBM at all (the (B, K) lam output written at the end is
+observability, not a handoff), and the per-micro-batch kernel-launch
+count drops from two to one. The db-sweep and rank-sweep bodies are the
+SAME functions the two-kernel chain runs (_db_slab_merge /
+_idw_lambda_flush here, _merge_scored_tile / _audit_flush in
+fused_rank), so the fused program is bitwise-identical to the chain at
+matched tile geometry (tests/test_knn_fused.py).
 """
 
 from __future__ import annotations
@@ -37,7 +54,12 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.predictors import _idw_lambda
-from repro.kernels.common import NEG_INF, topk_merge
+from repro.kernels.common import DB_SLAB, NEG_INF, TILE_B, TILE_M, topk_merge
+from repro.kernels.fused_rank import (
+    MAX_KERNEL_M2,
+    _audit_flush,
+    _merge_scored_tile,
+)
 
 
 def _knn_kernel(
@@ -79,8 +101,8 @@ def knn_topk_pallas(
     xdb: jax.Array,   # (N, D) database
     *,
     k: int = 10,
-    tile_q: int = 8,
-    tile_n: int = 512,
+    tile_q: int = TILE_B,
+    tile_n: int = DB_SLAB,
     interpret: bool = False,
 ):
     """Returns (d2 (B, k) ascending, idx (B, k) — ties to lower index)."""
@@ -119,6 +141,51 @@ def knn_topk_pallas(
 # knn_lambda: distances + top-k + inverse-distance weighting in one sweep
 # ---------------------------------------------------------------------------
 
+def _db_slab_merge(
+    slab, q_ref, db_ref, lamdb_ref, run_v, run_i, run_lam, run_y2,
+    *, k: int, tile_n: int, num_k: int,
+):
+    """One db-slab step of the KNN λ sweep: squared-L2 distances for
+    this slab, merged into the running top-k with each neighbour's λ row
+    and |x_n|^2 riding along as payload. Shared verbatim by
+    knn_lambda_pallas and the single-grid knn_rank_audited_pallas so
+    their neighbour selections (and therefore λ̂) can never drift."""
+    q = q_ref[...].astype(jnp.float32)                       # (Bq, D)
+    db = db_ref[...].astype(jnp.float32)                     # (Tn, D)
+    lamdb = lamdb_ref[...].astype(jnp.float32)               # (Tn, K)
+    bq = q.shape[0]
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)              # (Bq, 1)
+    db2 = jnp.sum(db * db, axis=-1)                          # (Tn,)
+    cross = jnp.dot(q, db.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(q2 - 2.0 * cross + db2[None, :], 0.0)   # (Bq, Tn)
+
+    base = slab * tile_n
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, d2.shape, dimension=1)
+    # each candidate's payload: its λ row (constraint-major) and |x_n|^2
+    tile_lam = jnp.broadcast_to(lamdb.T[None], (bq, num_k, tile_n))
+    tile_y2 = jnp.broadcast_to(db2[None, :], (bq, tile_n))
+    new_v, new_i, new_p = topk_merge(
+        run_v[...], run_i[...], -d2, gidx, k,
+        run_payload={"lam": run_lam[...], "y2": run_y2[...]},
+        tile_payload={"lam": tile_lam, "y2": tile_y2})
+    run_v[...] = new_v
+    run_i[...] = new_i
+    run_lam[...] = new_p["lam"]
+    run_y2[...] = new_p["y2"]
+
+
+def _idw_lambda_flush(q_ref, run_v, run_lam, run_y2):
+    """Inverse-distance weighting on the VMEM-resident neighbours: the
+    predictor's own _idw_lambda (one source of truth for the weights,
+    exact-match override, and normalization), applied to payload columns
+    instead of HBM gathers — the payload is constraint-major (Bq, K, k),
+    so transpose to its (b, k, C) neighbour-major convention."""
+    q = q_ref[...].astype(jnp.float32)
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)              # (Bq, 1)
+    return _idw_lambda(
+        -run_v[...], q2, run_y2[...], run_lam[...].transpose(0, 2, 1))
+
+
 def _knn_lambda_kernel(
     q_ref, db_ref, lamdb_ref,      # inputs
     lam_ref,                       # output: lam_hat (Bq, K)
@@ -134,40 +201,13 @@ def _knn_lambda_kernel(
         run_lam[...] = jnp.zeros_like(run_lam)
         run_y2[...] = jnp.zeros_like(run_y2)
 
-    q = q_ref[...].astype(jnp.float32)                       # (Bq, D)
-    db = db_ref[...].astype(jnp.float32)                     # (Tn, D)
-    lamdb = lamdb_ref[...].astype(jnp.float32)               # (Tn, K)
-    bq = q.shape[0]
-    q2 = jnp.sum(q * q, axis=-1, keepdims=True)              # (Bq, 1)
-    db2 = jnp.sum(db * db, axis=-1)                          # (Tn,)
-    cross = jnp.dot(q, db.T, preferred_element_type=jnp.float32)
-    d2 = jnp.maximum(q2 - 2.0 * cross + db2[None, :], 0.0)   # (Bq, Tn)
-
-    base = t * tile_n
-    gidx = base + jax.lax.broadcasted_iota(jnp.int32, d2.shape, dimension=1)
-    # each candidate's payload: its λ row (constraint-major) and |x_n|^2
-    tile_lam = jnp.broadcast_to(lamdb.T[None], (bq, num_k, tile_n))
-    tile_y2 = jnp.broadcast_to(db2[None, :], (bq, tile_n))
-    new_v, new_i, new_p = topk_merge(
-        run_v[...], run_i[...], -d2, gidx, k,
-        run_payload={"lam": run_lam[...], "y2": run_y2[...]},
-        tile_payload={"lam": tile_lam, "y2": tile_y2})
-    run_v[...] = new_v
-    run_i[...] = new_i
-    run_lam[...] = new_p["lam"]
-    run_y2[...] = new_p["y2"]
+    _db_slab_merge(t, q_ref, db_ref, lamdb_ref,
+                   run_v, run_i, run_lam, run_y2,
+                   k=k, tile_n=tile_n, num_k=num_k)
 
     @pl.when(t == pl.num_programs(1) - 1)
     def _flush():
-        # Inverse-distance weighting on the VMEM-resident neighbours:
-        # the predictor's own _idw_lambda (one source of truth for the
-        # weights, exact-match override, and normalization), applied to
-        # payload columns instead of HBM gathers — the payload is
-        # constraint-major (Bq, K, k), so transpose to its (b, k, C)
-        # neighbour-major convention.
-        lam_ref[...] = _idw_lambda(
-            -run_v[...], q2, run_y2[...],
-            run_lam[...].transpose(0, 2, 1))
+        lam_ref[...] = _idw_lambda_flush(q_ref, run_v, run_lam, run_y2)
 
 
 @functools.partial(
@@ -178,8 +218,8 @@ def knn_lambda_pallas(
     lam_db: jax.Array,  # (N, K) train shadow prices
     *,
     k: int = 10,
-    tile_q: int = 8,
-    tile_n: int = 512,
+    tile_q: int = TILE_B,
+    tile_n: int = DB_SLAB,
     interpret: bool = False,
 ):
     """Returns lam_hat (B, K): the inverse-distance-weighted KNN λ
@@ -216,3 +256,166 @@ def knn_lambda_pallas(
         interpret=interpret,
     )(xq, xdb, lam_db)
     return lam
+
+
+# ---------------------------------------------------------------------------
+# knn_rank_audited: predict + rank + audit as ONE grid (the KNN online stage)
+# ---------------------------------------------------------------------------
+
+def _knn_rank_audited_kernel(
+    q_ref, db_ref, lamdb_ref, b_ref, gamma_ref, u_ref, a_ref,   # inputs
+    vals_ref, idx_ref, util_ref, expo_ref, comp_ref, lam_ref,   # outputs
+    kv, ki, klam, ky2, lam_scr, rv, ri, ru, ra,                 # scratch
+    *, k: int, tile_n: int, n_slabs: int,
+    eps: float, m2: int, tile_m: int, num_k: int, tol: float,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        kv[...] = jnp.full_like(kv, NEG_INF)
+        ki[...] = jnp.zeros_like(ki)
+        klam[...] = jnp.zeros_like(klam)
+        ky2[...] = jnp.zeros_like(ky2)
+        rv[...] = jnp.full_like(rv, NEG_INF)
+        ri[...] = jnp.zeros_like(ri)
+        ru[...] = jnp.zeros_like(ru)
+        ra[...] = jnp.zeros_like(ra)
+
+    # Phase 1 — db slab sweep (steps 0..n_slabs-1): knn_lambda's merge,
+    # verbatim. The Pallas pipeline double-buffers the slab blocks, so
+    # slab t+1's HBM->VMEM copy overlaps slab t's distance dot + merge.
+    @pl.when(t < n_slabs)
+    def _db_step():
+        _db_slab_merge(t, q_ref, db_ref, lamdb_ref, kv, ki, klam, ky2,
+                       k=k, tile_n=tile_n, num_k=num_k)
+
+    # λ̂ flush: the slab sweep ends and the rank sweep begins inside the
+    # same program step — λ̂ goes VMEM scratch -> VMEM scratch, no HBM.
+    @pl.when(t == n_slabs - 1)
+    def _lam_flush():
+        lam_scr[...] = _idw_lambda_flush(q_ref, kv, klam, ky2)
+
+    # Phase 2 — candidate tile sweep (steps n_slabs..n_slabs+M-1):
+    # rank_audited's merge, verbatim, reading λ̂ from scratch.
+    @pl.when(t >= n_slabs)
+    def _rank_step():
+        _merge_scored_tile(t - n_slabs, lam_scr[...], u_ref, a_ref,
+                           rv, ri, ru, ra,
+                           eps=eps, m2=m2, tile_m=tile_m, num_k=num_k)
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _final_flush():
+        _audit_flush(gamma_ref, b_ref, vals_ref, idx_ref, util_ref,
+                     expo_ref, comp_ref, rv, ri, ru, ra, tol=tol)
+        lam_ref[...] = lam_scr[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "m2", "eps", "tol", "tile_b", "tile_n", "tile_m",
+                     "interpret"))
+def knn_rank_audited_pallas(
+    xq: jax.Array,       # (B, D) query covariates
+    xdb: jax.Array,      # (N, D) train database
+    lam_db: jax.Array,   # (N, K) train shadow prices (K = constraint tier)
+    u: jax.Array,        # (B, m1)
+    a: jax.Array,        # (B, K, m1)
+    b: jax.Array,        # (B, K)
+    gamma: jax.Array,    # (B, m2)
+    *,
+    k: int = 10,
+    m2: int,
+    eps: float = 1e-4,
+    tol: float = 1e-6,
+    tile_b: int = TILE_B,
+    tile_n: int = DB_SLAB,
+    tile_m: int = TILE_M,
+    interpret: bool = False,
+):
+    """The paper's whole KNN online stage — λ̂ prediction, adjusted-score
+    ranking, and the audit — as ONE pallas_call with grid
+    (B/tile_b, n_slabs + m1_tiles). Returns (vals (B, m2) f32 desc,
+    idx (B, m2) i32, utility (B, 1) f32, exposure (B, K) f32,
+    compliant (B, 1) i32, lam (B, K) f32).
+
+    Per batch tile the minor axis streams the db slabs first (running
+    top-k + λ-row/|x_n|^2 payload in VMEM scratch), flushes λ̂ into a
+    VMEM scratch at the last slab, then keeps going straight into the
+    candidate tiles of the rank+audit sweep. The block index maps clamp:
+    during the db phase the u/a maps sit on candidate tile 0 and during
+    the rank phase the db maps sit on the last slab, so no block is
+    refetched and the only HBM traffic is the compulsory stream of each
+    input plus the tiny outputs — λ̂ (B, K) included purely as
+    observability, never read back. Requires N >= k real database rows
+    (the KNN contract) so far-away padding rows can never enter a top-k.
+    """
+    B, D = xq.shape
+    N, K = lam_db.shape
+    m1 = u.shape[1]
+    if xdb.shape != (N, D):
+        raise ValueError(f"xdb {xdb.shape} vs lam_db {lam_db.shape}: "
+                         f"row counts must match")
+    if a.shape != (B, K, m1):
+        raise ValueError(f"a {a.shape} must be ({B}, {K}, {m1})")
+    if m2 > MAX_KERNEL_M2:
+        raise ValueError(f"kernel path supports m2 <= {MAX_KERNEL_M2}; "
+                         f"use repro.kernels.ops.predict_rank_audited "
+                         f"(XLA fallback)")
+    if B % tile_b or N % tile_n or m1 % tile_m:
+        raise ValueError(f"(B={B}, N={N}, m1={m1}) must tile by "
+                         f"({tile_b}, {tile_n}, {tile_m})")
+
+    n_slabs = N // tile_n
+    grid = (B // tile_b, n_slabs + m1 // tile_m)
+    kernel = functools.partial(
+        _knn_rank_audited_kernel, k=k, tile_n=tile_n, n_slabs=n_slabs,
+        eps=eps, m2=m2, tile_m=tile_m, num_k=K, tol=tol)
+    # db blocks advance then park on the last slab; u/a blocks park on
+    # candidate tile 0 until the rank phase starts. Pallas skips the
+    # copy whenever a block index repeats, so parking is free.
+    db_map = lambda bi, t: (jnp.minimum(t, n_slabs - 1), 0)
+    cand = lambda t: jnp.maximum(t - n_slabs, 0)
+    vals, idx, util, expo, comp, lam = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, D), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_n, D), db_map),
+            pl.BlockSpec((tile_n, K), db_map),
+            pl.BlockSpec((tile_b, K), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, m2), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, tile_m), lambda bi, t: (bi, cand(t))),
+            pl.BlockSpec((tile_b, K, tile_m),
+                         lambda bi, t: (bi, 0, cand(t))),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, m2), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, m2), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, 1), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, K), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, 1), lambda bi, t: (bi, 0)),
+            pl.BlockSpec((tile_b, K), lambda bi, t: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, m2), jnp.float32),
+            jax.ShapeDtypeStruct((B, m2), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_b, k), jnp.float32),      # kv: running -d2
+            pltpu.VMEM((tile_b, k), jnp.int32),        # ki: neighbour idx
+            pltpu.VMEM((tile_b, K, k), jnp.float32),   # klam: λ payload
+            pltpu.VMEM((tile_b, k), jnp.float32),      # ky2: |x_n|^2 payload
+            pltpu.VMEM((tile_b, K), jnp.float32),      # lam_scr: λ̂
+            pltpu.VMEM((tile_b, m2), jnp.float32),     # rv: running scores
+            pltpu.VMEM((tile_b, m2), jnp.int32),       # ri: running items
+            pltpu.VMEM((tile_b, m2), jnp.float32),     # ru: u payload
+            pltpu.VMEM((tile_b, K, m2), jnp.float32),  # ra: a payload
+        ],
+        interpret=interpret,
+    )(xq, xdb, lam_db, b, gamma, u, a)
+    return vals, idx, util, expo, comp, lam

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.common import NEG_INF
+from repro.kernels.common import DB_SLAB, LANE, NEG_INF, TILE_B, TILE_M
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fused_rank import (
     MAX_KERNEL_M2,
@@ -26,7 +26,11 @@ from repro.kernels.fused_rank import (
     linear_rank_audited_pallas,
     rank_audited_pallas,
 )
-from repro.kernels.knn_topk import knn_lambda_pallas, knn_topk_pallas
+from repro.kernels.knn_topk import (
+    knn_lambda_pallas,
+    knn_rank_audited_pallas,
+    knn_topk_pallas,
+)
 
 Array = jax.Array
 
@@ -52,7 +56,7 @@ def _pad_to(x: Array, axis: int, mult: int, value):
 def fused_rank(
     u: Array, a: Array, lam: Array, *, m2: int, eps: float = 1e-4,
     use_kernel: bool | None = None, interpret: bool | None = None,
-    tile_b: int = 8, tile_m: int = 512,
+    tile_b: int = TILE_B, tile_m: int = TILE_M,
 ):
     """(top scores (n, m2) desc f32, item idx (n, m2)). See ref.fused_rank_ref."""
     if use_kernel is None:
@@ -87,8 +91,8 @@ def rank_audited(
     tol: float | None = None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
-    tile_b: int = 8,
-    tile_m: int = 512,
+    tile_b: int = TILE_B,
+    tile_m: int = TILE_M,
 ):
     """Fused rank+audit dispatcher: one kernel emits the complete
     RankingOutput (perm, utility, exposure, compliant, lam) with zero
@@ -155,8 +159,11 @@ def predict_rank_audited(
     tol: float | None = None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
-    tile_b: int = 8,
-    tile_m: int = 512,
+    tile_b: int | None = None,
+    tile_m: int = TILE_M,
+    tile_n: int = DB_SLAB,
+    knn_chain: bool = False,
+    pad_lanes: bool | None = None,
 ):
     """The paper's ENTIRE online stage — predict λ̂ = f(X), rank, audit
     — as one dispatcher that lowers to a single device program, routed
@@ -168,18 +175,25 @@ def predict_rank_audited(
                       and never exists in HBM between predict and rank;
                       the mean predictor is the W = 0, no-clamp case.
                       Bitwise-identical to predict-then-rank.
-      knn             knn_lambda_pallas streams the train database once
-                      and emits λ̂ (n, K) straight from its flush step
-                      (inverse-distance weighting fused in-kernel; no
-                      (n, n_train) distance matrix, no d2/idx pairs in
-                      HBM), then chains into rank_audited_pallas inside
-                      the same traced program — under the serving
-                      engine's per-bucket jit both kernels live in one
-                      executable and XLA owns the tiny λ̂ handoff
-                      buffer.
+      knn             knn_rank_audited_pallas: ONE pallas_call whose
+                      grid streams the train db in tile_n-row slabs,
+                      flushes λ̂ into VMEM scratch, and continues
+                      straight into the rank+audit sweep — one kernel
+                      launch per micro-batch, λ̂ never in HBM.
+                      ``knn_chain=True`` keeps the pre-fusion two-kernel
+                      chain (knn_lambda_pallas -> rank_audited_pallas
+                      inside one jit executable, λ̂ handed off through
+                      an HBM buffer) as the parity oracle the fused
+                      grid is tested bitwise against at matched tiles.
       mlp / other     λ̂ = predictor.predict(X) stays XLA (matmuls are
                       already MXU-shaped) and joins the same jit
                       executable ahead of the rank+audit kernel.
+
+    ``pad_lanes`` widens the affine prologue's covariate dim d to the
+    128-lane boundary with zero W/X columns (exact: trailing zeros add
+    nothing to the dot) — default on for compiled TPU kernels, OFF on
+    the interpret path, whose bitwise-parity contract pins the dot's
+    reduction length.
 
     Extra constraint rows in ``a`` beyond the predictor's output width
     (bucket-padded K) get zero shadow prices — exactly the serving
@@ -221,6 +235,16 @@ def predict_rank_audited(
     if interpret is None:
         interpret = not _on_tpu()
 
+    if isinstance(predictor, KNNLambdaPredictor):
+        # the KNN route picks its own batch tile: a wide resident query
+        # tile divides the db-streaming cost (one sweep per tile), so it
+        # defaults to knn_lambda_tile_q — 32 when the batch fills it —
+        # exactly the geometry the PR 4 chain ran.
+        if tile_b is None:
+            tile_b = knn_lambda_tile_q(n)
+    elif tile_b is None:
+        tile_b = TILE_B
+
     if isinstance(predictor, (LinearLambdaPredictor, MeanLambdaPredictor)):
         if isinstance(predictor, LinearLambdaPredictor):
             W, c, relu = predictor.W, predictor.c, True
@@ -234,10 +258,6 @@ def predict_rank_audited(
         ref.check_pred_width(k_pred, Kp)
         # zero rows/intercepts for bucket-padded constraints: the
         # prologue emits exactly the 0.0 λ̂ the padding scheme wants.
-        # (On TPU, d additionally wants lane alignment; zero-padding d
-        # changes the dot's reduction length, so it is left to the
-        # real-accelerator tuning pass — interpret mode has no
-        # alignment constraint.)
         W_p = jnp.pad(W.astype(jnp.float32), ((0, Kp - k_pred), (0, 0)))
         c_p = jnp.pad(c.astype(jnp.float32), (0, Kp - k_pred))[None, :]
         u_p = _pad_to(_pad_to(u, 0, tile_b, 0.0), 1, tile_m, NEG_INF)
@@ -245,6 +265,18 @@ def predict_rank_audited(
         b_p = _pad_to(b, 0, tile_b, 0.0)
         gamma_p = _pad_to(gamma, 0, tile_b, 0.0)
         X_p = _pad_to(jnp.asarray(X, jnp.float32), 0, tile_b, 0.0)
+        # MXU lane alignment for the prologue dot: widen d to the
+        # 128-lane boundary with zero columns of X AND zero columns of
+        # W. Trailing zeros append exactly-0.0 terms at the END of the
+        # reduction, so the math is exact — but the reduction LENGTH
+        # changes, which on the interpret path would void the
+        # bitwise-vs-predict() contract; hence the gate (compiled TPU
+        # kernels only, unless a caller forces it).
+        if pad_lanes is None:
+            pad_lanes = not interpret
+        if pad_lanes:
+            X_p = _pad_to(X_p, 1, LANE, 0.0)
+            W_p = _pad_to(W_p, 1, LANE, 0.0)
         _, idx, util, expo, comp, lam = linear_rank_audited_pallas(
             u_p, a_p, b_p, X_p, W_p, c_p, gamma_p, m2=m2, eps=eps, tol=tol,
             relu=relu, tile_b=tile_b, tile_m=tile_m, interpret=interpret)
@@ -253,8 +285,20 @@ def predict_rank_audited(
             compliant=comp[:n, 0].astype(bool), lam=lam[:n])
 
     if isinstance(predictor, KNNLambdaPredictor):
+        if not knn_chain:
+            return knn_rank_audited(
+                X, predictor.X_db, predictor.lam_db, u, a, b, gamma,
+                k=predictor.k, m2=m2, eps=eps, tol=tol,
+                interpret=interpret, tile_b=tile_b, tile_n=tile_n,
+                tile_m=tile_m)
+        # the pre-fusion two-kernel chain: knn_lambda_pallas emits λ̂
+        # through an HBM buffer, rank_audited_pallas reads it back —
+        # kept as the single-grid kernel's bitwise parity oracle (and
+        # for A/B measurement); tile_q matches the fused grid's batch
+        # tile so the slab sweeps see identical tile geometry.
         lam = knn_lambda(X, predictor.X_db, predictor.lam_db,
-                         k=predictor.k, interpret=interpret)
+                         k=predictor.k, interpret=interpret,
+                         tile_q=tile_b, tile_n=tile_n)
         ref.check_pred_width(lam.shape[-1], Kp)
         lam = jnp.pad(lam, ((0, 0), (0, Kp - lam.shape[-1])))
     else:
@@ -265,6 +309,91 @@ def predict_rank_audited(
                         interpret=interpret, tile_b=tile_b, tile_m=tile_m)
 
 
+def knn_rank_audited(
+    X: Array,            # (n, d) query covariates
+    X_db: Array,         # (n_train, d) train database
+    lam_db: Array,       # (n_train, K_pred) train shadow prices
+    u: Array,            # (n, m1)
+    a: Array,            # (n, K, m1)
+    b: Array,            # (n, K)
+    gamma: Array,        # (n, m2)
+    *,
+    k: int = 10,
+    m2: int,
+    eps: float = 1e-4,
+    tol: float | None = None,
+    interpret: bool | None = None,
+    tile_b: int | None = None,
+    tile_n: int = DB_SLAB,
+    tile_m: int = TILE_M,
+):
+    """The single-grid KNN online stage (knn_rank_audited_pallas) with
+    the padding contract of the other dispatchers: rows to tile_b
+    (default knn_lambda_tile_q — wide resident query tiles divide the
+    db-streaming cost; zero covariates — phantom rows score 0
+    everywhere and are sliced off),
+    db rows to tile_n with far-away 1e15 rows (never top-k while the
+    KNN contract n_train >= k holds; their λ rows zeroed for hygiene),
+    candidates to tile_m with NEG_INF utilities, and bucket-padded
+    constraint rows beyond the predictor's width priced at exactly 0.0
+    (zero lam_db columns make the flush-step einsum emit 0.0). Returns
+    a complete RankingOutput."""
+    from repro.core.ranking import AUDIT_TOL, RankingOutput  # deferred: no cycle
+
+    if tol is None:
+        tol = AUDIT_TOL
+    if X_db.shape[0] < k:
+        raise ValueError(f"n_train={X_db.shape[0]} < k={k}")
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = u.shape[0]
+    if X.shape[0] != n:
+        # same loud contract as predict_rank_audited: row padding is
+        # the kernel's job, a row-count mismatch is a caller bug that
+        # must never be silently intercept-served or sliced away
+        raise ValueError(f"X carries {X.shape[0]} covariate rows but the "
+                         f"problem has {n} users")
+    if tile_b is None:
+        tile_b = knn_lambda_tile_q(n)
+    Kp = a.shape[1]
+    k_pred = lam_db.shape[1]
+    ref.check_pred_width(k_pred, Kp)
+    Xq_p = _pad_to(jnp.asarray(X, jnp.float32), 0, tile_b, 0.0)
+    xdb_p = _pad_to(X_db, 0, tile_n, 1e15)
+    lamdb_p = _pad_to(
+        jnp.pad(lam_db, ((0, 0), (0, Kp - k_pred))), 0, tile_n, 0.0)
+    u_p = _pad_to(_pad_to(u, 0, tile_b, 0.0), 1, tile_m, NEG_INF)
+    a_p = _pad_to(_pad_to(a, 0, tile_b, 0.0), 2, tile_m, 0.0)
+    b_p = _pad_to(b, 0, tile_b, 0.0)
+    gamma_p = _pad_to(gamma, 0, tile_b, 0.0)
+    _, idx, util, expo, comp, lam = knn_rank_audited_pallas(
+        Xq_p, xdb_p, lamdb_p, u_p, a_p, b_p, gamma_p, k=k, m2=m2,
+        eps=eps, tol=tol, tile_b=tile_b, tile_n=tile_n, tile_m=tile_m,
+        interpret=interpret)
+    return RankingOutput(
+        perm=idx[:n], utility=util[:n, 0], exposure=expo[:n],
+        compliant=comp[:n, 0].astype(bool), lam=lam[:n])
+
+
+def kernel_launch_count(predictor, m2: int, *,
+                        use_kernel: bool | None = None,
+                        knn_chain: bool = False) -> int:
+    """Pallas kernel launches per dispatcher call, by route — the
+    number EngineMetrics charges each flushed micro-batch with.
+    ``predictor=None`` is the λ-carrying rank_audited path. Zero means
+    the XLA fallback owns the batch (m2 > MAX_KERNEL_M2 or
+    use_kernel=False)."""
+    from repro.core.predictors import KNNLambdaPredictor  # deferred
+
+    if use_kernel is None:
+        use_kernel = m2 <= MAX_KERNEL_M2
+    if not use_kernel or m2 > MAX_KERNEL_M2:
+        return 0
+    if isinstance(predictor, KNNLambdaPredictor) and knn_chain:
+        return 2      # the pre-fusion chain: knn_lambda + rank_audited
+    return 1          # affine prologue / single-grid KNN / mlp + rank
+
+
 # ---------------------------------------------------------------------------
 # knn_topk
 # ---------------------------------------------------------------------------
@@ -272,7 +401,7 @@ def predict_rank_audited(
 def knn_topk(
     xq: Array, xdb: Array, *, k: int = 10,
     use_kernel: bool = True, interpret: bool | None = None,
-    tile_q: int = 8, tile_n: int = 512,
+    tile_q: int = TILE_B, tile_n: int = DB_SLAB,
 ):
     """(d2 (B, k) ascending, idx (B, k)). See ref.knn_topk_ref."""
     if not use_kernel:
@@ -301,7 +430,7 @@ def knn_lambda_tile_q(batch: int) -> int:
 def knn_lambda(
     X: Array, X_db: Array, lam_db: Array, *, k: int = 10,
     use_kernel: bool = True, interpret: bool | None = None,
-    tile_q: int | None = None, tile_n: int = 512,
+    tile_q: int | None = None, tile_n: int = DB_SLAB,
 ) -> Array:
     """λ̂ (B, K) from the fused KNN kernel (knn_lambda_pallas): one db
     sweep per query tile, weighting at the flush step, no d2/idx or

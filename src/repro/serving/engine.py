@@ -172,6 +172,10 @@ class ServingEngine:
         self.metrics = EngineMetrics()
         self._predictors: dict[str, _PredictorEntry] = {}
         self._exec: dict[Bucket, Callable] = {}
+        # Pallas kernel launches per bucket-executable invocation
+        # (kernels.ops.kernel_launch_count of the bucket's route) —
+        # what metrics.kernel_launches charges each flushed batch.
+        self._kernel_launches: dict[Bucket, int] = {}
         self._queues: dict[Bucket, list] = {}
         self._rings: dict[Bucket, StagingRing] = {}
         self._warmed: set[Bucket] = set()
@@ -240,6 +244,13 @@ class ServingEngine:
     def _build_executor(self, bucket: Bucket) -> Callable:
         """One fresh jit wrapper per bucket: its compile cache holds
         exactly one entry, so `jit_cache_sizes` exposes recompiles."""
+        from repro.kernels.ops import kernel_launch_count
+
+        predictor = (None if bucket.tag == LAM_TAG
+                     else self._predictors[bucket.tag].predictor)
+        self._kernel_launches[bucket] = (
+            kernel_launch_count(predictor, bucket.m2)
+            if self.executor == "fused" else 0)
         rank = self._rank_fn(bucket)
         donate = (2, 3) if self.donate else ()
         if bucket.tag == LAM_TAG:
@@ -434,7 +445,10 @@ class ServingEngine:
         # the single-dispatch contract: this _call was the batch's ONE
         # executable invocation — predictor buckets included (λ̂ is
         # predicted inside the executable, never as a separate program)
-        self.metrics.on_executable_call()
+        # — and it contained the route's static kernel-launch count
+        # (ONE for every fused-executor kernel bucket, KNN included
+        # since the single-grid predict+rank+audit kernel).
+        self.metrics.on_executable_call(self._kernel_launches[bucket])
         pending = PendingBatch(
             bucket=bucket, entries=[(r, t) for r, t, _ in entries],
             futures=[f for _, _, f in entries], out=out, staged=staged,

@@ -41,6 +41,11 @@ class EngineMetrics:
     # re-entered after warmup — a second per-batch program would
     # re-enter it or retrace).
     executable_calls: int = 0
+    # Pallas kernel launches those executables contained (statically
+    # known per bucket route: 1 for every fused-executor kernel bucket
+    # — the single-grid KNN program included, which is the point: the
+    # pre-fusion KNN chain charged 2 — and 0 for XLA-bodied buckets).
+    kernel_launches: int = 0
     # shape-lattice behaviour
     bucket_hits: dict = field(default_factory=lambda: defaultdict(int))
     compiles: int = 0                 # executables built, ever
@@ -89,10 +94,14 @@ class EngineMetrics:
         if self.warmed and not in_warmup:
             self.compiles_post_warmup += 1
 
-    def on_executable_call(self) -> None:
+    def on_executable_call(self, kernel_launches: int = 0) -> None:
         """Submission side: one bucket executable was invoked (the
-        whole predict+rank+audit program for its micro-batch)."""
+        whole predict+rank+audit program for its micro-batch).
+        ``kernel_launches`` is how many Pallas kernel launches that
+        executable contains (kernels.ops.kernel_launch_count for the
+        bucket's route)."""
         self.executable_calls += 1
+        self.kernel_launches += kernel_launches
 
     def on_dispatch(self, bucket, n_real: int, trigger: str, fill: dict,
                     *, assembly_ms: float, dispatch_ms: float,
@@ -163,6 +172,10 @@ class EngineMetrics:
             "executable_calls": self.executable_calls,
             "dispatches_per_batch": round(
                 self.executable_calls / self.batches, 3)
+                if self.batches else float("nan"),
+            "kernel_launches": self.kernel_launches,
+            "kernel_launches_per_batch": round(
+                self.kernel_launches / self.batches, 3)
                 if self.batches else float("nan"),
             "buckets_used": len(self.bucket_hits),
             "compiles": self.compiles,

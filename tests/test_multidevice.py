@@ -102,6 +102,59 @@ _PROG = textwrap.dedent("""
     lam_dense = knn_predict(X_db, lam_db, X, k=5)
     lam_dist = knn_predict_distributed(mesh, X_db, lam_db, X, k=5)
     np.testing.assert_allclose(lam_dist, lam_dense, rtol=1e-4, atol=1e-5)
+
+    # the slab-streaming shard body vs the retired dense-matrix body:
+    # the old body materialized the per-shard (B_l, n_l) distance
+    # matrix; the new one streams knn_topk_scan slabs. Selection is
+    # BITWISE identical (indices + gathered |x_n|^2 payload); the
+    # distance VALUES may differ in the last ulp (the slab dot compiles
+    # inside a scan body and XLA rounds the fused x2 - 2qx + y2 chain
+    # differently there), so λ̂ is compared at 1-ulp tolerance.
+    from repro.distributed.topk import distributed_top_k
+    def old_dense_body(xq, xdb_local, lam_all):
+        x2 = jnp.sum(xq * xq, axis=-1, keepdims=True)
+        y2l = jnp.sum(xdb_local * xdb_local, axis=-1)
+        d2 = jnp.maximum(x2 - 2.0 * (xq @ xdb_local.T) + y2l[None, :], 0.0)
+        y2_b = jnp.broadcast_to(y2l[None, :], d2.shape)
+        neg_d2, idx_g, y2_sel = distributed_top_k(-d2, 5, "model",
+                                                  payload=y2_b)
+        d2k = -neg_d2
+        lam_nb = lam_all[idx_g]
+        scale2 = x2 + y2_sel + 1e-12
+        exact = d2k <= 1e-6 * scale2
+        any_exact = jnp.any(exact, axis=-1, keepdims=True)
+        w_inv = 1.0 / jnp.maximum(jnp.sqrt(d2k), 1e-12)
+        w = jnp.where(any_exact, exact.astype(d2.dtype), w_inv)
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+        return idx_g, y2_sel, jnp.einsum("bk,bkc->bc", w, lam_nb)
+    from repro.core.predictors import knn_topk_scan
+    from repro.distributed.topk import gather_merge_top_k
+    def new_selection_body(xq, xdb_local, lam_all):
+        n_l = xdb_local.shape[0]
+        neg_v, idx_l = knn_topk_scan(xdb_local, xq, k=5, chunk=n_l)
+        y2l = jnp.sum(xdb_local * xdb_local, axis=-1)
+        gidx = idx_l + jax.lax.axis_index("model") * n_l
+        _, idx_g, y2_sel = gather_merge_top_k(neg_v, gidx, 5, "model",
+                                              payload=y2l[idx_l])
+        return idx_g, y2_sel
+    specs = dict(mesh=mesh,
+                 in_specs=(P("data", None), P("model", None), P()),
+                 check_vma=False)
+    old_idx, old_y2, old_lam = shard_map(
+        old_dense_body, out_specs=(P("data", None),) * 3, **specs)(
+            X, X_db, lam_db)
+    new_idx, new_y2 = shard_map(
+        new_selection_body, out_specs=(P("data", None),) * 2, **specs)(
+            X, X_db, lam_db)
+    np.testing.assert_array_equal(np.asarray(new_idx), np.asarray(old_idx))
+    np.testing.assert_array_equal(np.asarray(new_y2), np.asarray(old_y2))
+    np.testing.assert_allclose(np.asarray(lam_dist), np.asarray(old_lam),
+                               rtol=5e-7, atol=1e-7)
+    # multi-slab (ragged chunk) keeps the same answer
+    lam_multi = knn_predict_distributed(mesh, X_db, lam_db, X, k=5, chunk=13)
+    np.testing.assert_allclose(np.asarray(lam_multi), np.asarray(old_lam),
+                               rtol=5e-7, atol=1e-7)
+    print("slab-sweep shard body equivalence OK")
     dense = rank_given_lambda(u, a, b, lam_dense, gamma, m2=8)
     dist = rank_distributed(mesh, u, a, b, lam_dense, gamma, m2=8)
     np.testing.assert_array_equal(np.asarray(dist.perm), np.asarray(dense.perm))
@@ -187,6 +240,7 @@ def test_multidevice_semantics():
                    "compressed_psum OK", "dryrun cell OK",
                    "paper serve SPMD OK",
                    "distributed serving equivalence OK",
+                   "slab-sweep shard body equivalence OK",
                    "engine dist executor OK",
                    "shmap MoE grad equivalence OK",
                    "elastic reshard OK"):

@@ -147,6 +147,32 @@ def test_predict_rank_bucket_padded_batch():
         assert bool(np.all(np.asarray(got.compliant[n_real:])))
 
 
+def test_affine_prologue_lane_padded_ragged_d_exact():
+    """The TPU lane-alignment path: padding a ragged covariate dim d to
+    the 128-lane boundary with zero X/W columns must leave every output
+    bitwise unchanged (trailing zeros append exactly-0.0 terms at the
+    end of the prologue dot's reduction). The pad is gated OFF on the
+    interpret path by default — forcing it on here proves the gate is
+    caution about reduction-order, not a correctness requirement."""
+    n, m1, K, m2 = 8, 512, 3, 10
+    d = 12                                     # ragged: pads to 128
+    u, a, b, gamma, X, X_tr, lam_tr = _problem(n, m1, K, m2, d=d, salt=7)
+    for pred in (LinearLambdaPredictor.fit(X_tr, lam_tr),
+                 MeanLambdaPredictor.fit(X_tr, lam_tr)):
+        plain = ops.predict_rank_audited(X, pred, u, a, b, gamma, m2=m2,
+                                         interpret=True)
+        padded = ops.predict_rank_audited(X, pred, u, a, b, gamma, m2=m2,
+                                          interpret=True, pad_lanes=True)
+        for field in FIELDS + ("lam",):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(padded, field)),
+                np.asarray(getattr(plain, field)),
+                err_msg=f"lane padding changed {field} for "
+                        f"{type(pred).__name__}")
+        want = rank_given_lambda(u, a, b, pred.predict(X), gamma, m2=m2)
+        _assert_fields_equal(padded, want)
+
+
 def test_predict_rank_xla_fallback_large_m2():
     """m2 > MAX_KERNEL_M2 routes to the two-stage XLA oracle: the
     dispatcher must reproduce ref.rank_audited_ref on the predictor's

@@ -309,6 +309,15 @@ def test_covariate_stream_single_dispatch_per_batch(executor):
     assert sizes and all(v == 1 for v in sizes.values()), sizes
     # predict() was traced into the executable, not dispatched per batch
     assert counting.calls == calls_after_warmup
+    # kernel-launch accounting: every fused-executor batch carries ONE
+    # Pallas kernel launch — the KNN buckets included, now that the
+    # single-grid predict+rank+audit kernel replaced the two-kernel
+    # chain; the xla executor launches none.
+    if executor == "fused":
+        assert m.kernel_launches == m.batches
+        assert m.summary()["kernel_launches_per_batch"] == 1.0
+    else:
+        assert m.kernel_launches == 0
 
     # and the answers are the two-stage oracle's, per request
     by_rid = {r.rid: r for r in results}
