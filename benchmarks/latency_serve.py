@@ -43,12 +43,21 @@ Three measurement modes (docs/benchmarks.md walks through them):
     + `serve_open_loop`). Closed-loop drivers cannot offer more load
     than the server absorbs, so they never see queueing delay; the
     open-loop sweep reports the tail below saturation and marks the
-    rows past it.
+    rows past it. Each row also reports the deadline-hit rate against
+    the 50 ms budget next to p99, and saturation is detected on the
+    decomposed QUEUE lag (pacing clock-drift excluded).
+
+  * deadline (`--only deadline`): the admission-control health gate
+    (`check_deadline`) — zero missed deadlines at <= 0.8x detected
+    saturation with admission on, an admission-off baseline that
+    misses past saturation, and a forced-degrade pass whose rung-1
+    compliance cost comes from the fused-kernel audit outputs. Writes
+    BENCH_deadline.json with `--json`; AssertionError on regression.
 
 Usage:
 
   python -m benchmarks.latency_serve [--quick] [--frontier]
-                                     [--only direct|engine|frontier]
+                                     [--only direct|engine|frontier|deadline]
                                      [--json OUT]
 
 `--json OUT` additionally writes a machine-readable
@@ -74,11 +83,18 @@ import numpy as np
 
 from benchmarks.common import Record, save_json, timed, write_bench_json
 from repro.core.constraints import dcg_discount
-from repro.core.predictors import knn_predict
+from repro.core.predictors import (
+    KNNLambdaPredictor,
+    MeanLambdaPredictor,
+    knn_predict,
+)
 from repro.core.ranking import rank_given_lambda
 from repro.serving import (
     DEFAULT_MIX,
+    AdmissionController,
+    Scenario,
     ServingEngine,
+    Shed,
     make_stream,
     poisson_arrivals,
     serve_open_loop,
@@ -311,14 +327,16 @@ def run_frontier(*, n_requests=512,
         arrivals = poisson_arrivals(n_requests, qps, seed=seed + 1)
         results, ol = serve_open_loop(eng, requests, arrivals)
         s = eng.metrics.summary()
+        dl = s["deadline"]
         eng.close()
-        # Saturation telltale: submission falls behind its schedule.
-        # Below capacity, lag is bounded sleep-granularity/scheduler
-        # noise (a few ms on a loaded host); past it, lag accumulates
-        # over the stream. Threshold: 10 arrival slots or 5 ms,
-        # whichever is larger, by the LAST submission.
+        # Saturation telltale: QUEUEING lag at the last submission —
+        # lateness carried into an arrival by earlier submits blocking
+        # on engine backpressure. serve_open_loop separates this from
+        # pacing clock-drift (sleep-granularity overshoot), so the
+        # detector no longer trips on timer jitter on a loaded host.
+        # Threshold: 10 arrival slots or 5 ms, whichever is larger.
         lag_thresh_ms = max(5.0, 1e4 / qps)
-        saturated = ol["lag_ms"]["last"] > lag_thresh_ms
+        saturated = ol["queue_lag_ms"]["last"] > lag_thresh_ms
         rows.append({
             "offered_qps": round(qps, 1),
             "offered_frac_of_capacity": frac,
@@ -330,8 +348,14 @@ def run_frontier(*, n_requests=512,
             "p50_ms": s["latency_ms"]["p50"],
             "p95_ms": s["latency_ms"]["p95"],
             "p99_ms": s["latency_ms"]["p99"],
+            "queue_lag_ms_last": round(ol["queue_lag_ms"]["last"], 3),
+            "drift_ms_p99": round(ol["drift_ms"]["p99"], 3),
             "submit_lag_ms_p99": round(ol["lag_ms"]["p99"], 3),
             "submit_lag_ms_last": round(ol["lag_ms"]["last"], 3),
+            "deadline_hit_rate": dl["hit_rate"],
+            "deadline_misses": dl["misses"],
+            "sheds": dl["sheds"],
+            "degrades": dl["degrades"],
             "fill_rate": s["fill_rate"],
             "compiles_post_warmup": s["compiles_post_warmup"],
             "saturated": bool(saturated),
@@ -342,11 +366,211 @@ def run_frontier(*, n_requests=512,
             print(f"frontier offered {r['offered_qps']:8.1f} req/s "
                   f"({frac:4.2f}x cap)  achieved {r['achieved_qps']:8.1f}  "
                   f"p50 {r['p50_ms']:6.2f}  p95 {r['p95_ms']:6.2f}  "
-                  f"p99 {r['p99_ms']:7.2f} ms  lag_last "
-                  f"{r['submit_lag_ms_last']:7.2f} ms  "
+                  f"p99 {r['p99_ms']:7.2f} ms  queue_lag_last "
+                  f"{r['queue_lag_ms_last']:7.2f} ms  "
+                  f"hit_rate {r['deadline_hit_rate']:.3f}  "
                   f"saturated {r['saturated']}", flush=True)
     save_json("latency_frontier", rows)
     return rows
+
+
+def _deadline_mix(seed):
+    """Quick synthetic mix for the deadline gate: a KNN-served surface
+    with a mean-predictor degradation rung, plus a raw-lam surface."""
+    rng = np.random.default_rng(seed)
+    d, K = 12, 4
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(64, d)).astype(np.float32),
+        np.abs(rng.normal(size=(64, K))).astype(np.float32), k=5)
+    mean = MeanLambdaPredictor.fit(
+        np.zeros((4, d), np.float32),
+        np.abs(rng.normal(size=(4, K))).astype(np.float32))
+    mix = (Scenario("feed_knn", m1=300, m2=24, K=K, weight=2.0,
+                    tag="knn", d_cov=d),
+           Scenario("notif_lam", m1=120, m2=8, K=3, weight=1.0))
+    return mix, knn, mean, d
+
+
+def run_deadline(*, n_requests=256, max_batch=16, max_wait_ms=2.0,
+                 seed=0, pipeline_depth=1, verbose=True):
+    """Deadline-hit-rate frontier for the admission health gate.
+
+    Probes closed-loop capacity on the quick synthetic mix, fixes a
+    feasible per-request budget (max(50 ms, 5x the low-load p99) —
+    generous enough that below-saturation service can always make it,
+    so a miss means the engine queued past the deadline, not that the
+    budget was impossible), then measures:
+
+      * admission ON  at 0.5x and 0.8x capacity — the gate requires
+        ZERO deadline misses (sheds/degrades are the controller doing
+        its job and are reported, not failed);
+      * admission OFF at 2.5x capacity — the baseline must show misses
+        past saturation (otherwise the gate proves nothing);
+      * a deterministic forced-degrade pass (KNN rungs poisoned with a
+        huge observed service time) — degraded buckets must serve from
+        rung 1 and report their compliance cost from the fused-kernel
+        audit outputs.
+    """
+    mix, knn, mean, d = _deadline_mix(seed)
+    requests = make_stream(mix, n_requests=n_requests, seed=seed)
+
+    def fresh(admission, budget_s):
+        eng = ServingEngine(max_batch=max_batch, max_wait_ms=max_wait_ms,
+                            pipeline_depth=pipeline_depth,
+                            admission=admission, default_budget_s=budget_s)
+        eng.register_predictor("knn", knn, d_cov=d)
+        eng.register_predictor("mean", mean, d_cov=d)
+        eng.set_degradation_ladder("knn", ["mean"])
+        eng.warmup(requests)
+        return eng
+
+    probe = fresh(None, 1.0)
+    _, wall = _saturated_serve(probe, requests)
+    probe.close()
+    capacity = n_requests / wall
+
+    eng = fresh(None, 1.0)                      # low-load budget reference
+    arrivals = poisson_arrivals(n_requests, 0.3 * capacity, seed=seed + 1)
+    serve_open_loop(eng, requests, arrivals)
+    p99_low = eng.metrics.summary()["latency_ms"]["p99"]
+    eng.close()
+    budget_ms = max(LATENCY_BUDGET_MS, 5.0 * p99_low)
+    if verbose:
+        print(f"deadline: capacity ~ {capacity:.1f} req/s, low-load p99 "
+              f"{p99_low:.2f} ms -> budget {budget_ms:.1f} ms", flush=True)
+
+    # The overload baseline needs a stream long enough that queueing
+    # lateness actually exceeds the budget: at frac x capacity the last
+    # arrival is ~ (n/capacity)(1 - 1/frac) seconds late, so size n for
+    # ~2 budgets of accumulated lateness (bounded for beefy hosts).
+    n_over = int(min(20_000, max(
+        n_requests, np.ceil(2.0 * (budget_ms / 1e3) * capacity / 0.6))))
+    requests_over = make_stream(mix, n_requests=n_over, seed=seed)
+
+    rows = []
+    for frac, use_admission in ((0.5, True), (0.8, True), (2.5, False)):
+        reqs = requests if use_admission else requests_over
+        eng = fresh(AdmissionController() if use_admission else None,
+                    budget_ms / 1e3)
+        arrivals = poisson_arrivals(len(reqs), capacity * frac,
+                                    seed=seed + 2)
+        # deadlines anchored at scheduled ARRIVAL (absolute stamps):
+        # lateness the generator accumulates blocking on backpressure
+        # counts against the budget, as a caller-side SLA would.
+        results, ol = serve_open_loop(eng, reqs, arrivals,
+                                      deadline_budget_s=budget_ms / 1e3)
+        dl = eng.metrics.deadline_summary()
+        served = sum(1 for r in results if not isinstance(r, Shed))
+        eng.close()
+        rows.append({
+            "admission": use_admission,
+            "offered_frac_of_capacity": frac,
+            "offered_qps": round(capacity * frac, 1),
+            "capacity_qps": round(capacity, 1),
+            "budget_ms": round(budget_ms, 1),
+            "n_requests": len(reqs),
+            "served": served,
+            "deadline_hit_rate": dl["hit_rate"],
+            "deadline_misses": dl["misses"],
+            "sheds": dl["sheds"],
+            "degrades": dl["degrades"],
+            "queue_lag_ms_last": round(ol["queue_lag_ms"]["last"], 3),
+            "rungs": dl["rungs"],
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"deadline[admission={'on ' if use_admission else 'off'}] "
+                  f"{frac:4.2f}x cap  served {r['served']:4d}  "
+                  f"hit_rate {r['deadline_hit_rate']:.3f}  "
+                  f"misses {r['deadline_misses']:3d}  "
+                  f"sheds {r['sheds']:3d}  degrades {r['degrades']:3d}",
+                  flush=True)
+
+    # deterministic forced-degrade pass: every KNN rung predicted late
+    for r in requests:
+        r.deadline = None       # drop the open-loop runs' absolute stamps
+    ctrl = AdmissionController()
+    eng = fresh(ctrl, budget_ms / 1e3)
+    for b in eng._warmed:
+        if b.tag == "knn":
+            ctrl.observe_service(b.name, 1e6)
+    eng.serve_stream(requests, warmup=False)
+    dl = eng.metrics.deadline_summary()
+    eng.close()
+    degrade = {
+        "degrades": dl["degrades"],
+        "sheds": dl["sheds"],
+        "rung1_served": dl["rungs"].get("1", {}).get("served", 0),
+        "rung1_compliance": dl["rungs"].get("1", {}).get(
+            "compliance", float("nan")),
+        "rung1_mean_shortfall": dl["rungs"].get("1", {}).get(
+            "mean_shortfall", float("nan")),
+    }
+    if verbose:
+        print(f"deadline[forced degrade] degrades {degrade['degrades']} "
+              f"rung1_served {degrade['rung1_served']} "
+              f"rung1_compliance {degrade['rung1_compliance']} "
+              f"rung1_mean_shortfall {degrade['rung1_mean_shortfall']}",
+              flush=True)
+    out = {"capacity_qps": round(capacity, 1),
+           "budget_ms": round(budget_ms, 1),
+           "rows": rows, "degrade": degrade}
+    save_json("latency_deadline", out)
+    return out
+
+
+def check_deadline(*, quick=False, verbose=True):
+    """Admission health gate (kernel_bench-style: AssertionError on
+    regression): zero missed deadlines below 80% of detected
+    saturation with admission on; the admission-off baseline must miss
+    past saturation; degraded buckets must report compliance cost."""
+    kw = dict(n_requests=160) if quick else {}
+    res = run_deadline(verbose=verbose, **kw)
+    for r in res["rows"]:
+        if r["admission"] and r["offered_frac_of_capacity"] <= 0.8:
+            assert r["deadline_misses"] == 0, (
+                f"deadline gate: {r['deadline_misses']} misses at "
+                f"{r['offered_frac_of_capacity']}x capacity with admission "
+                f"on (budget {r['budget_ms']} ms)")
+            assert r["served"] > 0, (
+                "deadline gate: admission shed the entire below-saturation "
+                "stream — the controller is overpredicting")
+    baseline = [r for r in res["rows"] if not r["admission"]]
+    assert baseline and any(r["deadline_misses"] > 0 for r in baseline), (
+        "deadline gate: the admission-off overload baseline shows no "
+        "misses — the gate is not exercising saturation")
+    dg = res["degrade"]
+    assert dg["degrades"] > 0 and dg["rung1_served"] > 0, (
+        f"deadline gate: forced-degrade pass served nothing from rung 1 "
+        f"({dg})")
+    assert np.isfinite(dg["rung1_mean_shortfall"]), (
+        "deadline gate: rung 1 reported no compliance cost")
+    print("# deadline acceptance (0 misses <= 0.8x capacity with "
+          "admission, baseline misses past saturation, degraded rungs "
+          "report compliance cost): PASS")
+    return res
+
+
+def records_deadline(res):
+    recs = [Record(
+        name=f"serve_deadline/admission={'on' if r['admission'] else 'off'}"
+             f"/frac={r['offered_frac_of_capacity']}",
+        us_per_call=float("nan"),
+        derived={"hit_rate": r["deadline_hit_rate"],
+                 "misses": r["deadline_misses"],
+                 "sheds": r["sheds"], "degrades": r["degrades"],
+                 "served": r["served"], "budget_ms": r["budget_ms"],
+                 "capacity_qps": r["capacity_qps"]})
+        for r in res["rows"]]
+    dg = res["degrade"]
+    recs.append(Record(
+        name="serve_deadline/forced_degrade",
+        us_per_call=float("nan"),
+        derived={"degrades": dg["degrades"],
+                 "rung1_served": dg["rung1_served"],
+                 "rung1_compliance": dg["rung1_compliance"],
+                 "rung1_mean_shortfall": dg["rung1_mean_shortfall"]}))
+    return recs
 
 
 def records(rows):
@@ -366,6 +590,9 @@ def records_frontier(rows):
         derived={"p50_ms": r["p50_ms"], "p95_ms": r["p95_ms"],
                  "p99_ms": r["p99_ms"],
                  "achieved_qps": r["achieved_qps"],
+                 "deadline_hit_rate": r["deadline_hit_rate"],
+                 "deadline_misses": r["deadline_misses"],
+                 "queue_lag_ms_last": r["queue_lag_ms_last"],
                  "saturated": r["saturated"],
                  "within_50ms": r["within_50ms"]})
         for r in rows]
@@ -392,7 +619,8 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized: small direct sweep, 256-request stream")
     ap.add_argument("--only", default="all",
-                    choices=["all", "direct", "engine", "frontier"])
+                    choices=["all", "direct", "engine", "frontier",
+                             "deadline"])
     ap.add_argument("--frontier", action="store_true",
                     help="also sweep p99 vs offered load (paced open-loop "
                          "Poisson arrivals below/around saturation)")
@@ -415,6 +643,19 @@ def main():
         rows = run_engine(**cfg)
         with open(args.engine_child, "w") as f:
             json.dump(rows, f)
+        return
+
+    if args.only == "deadline":
+        # the admission health gate writes its own BENCH_deadline.json
+        # (never the engine step's BENCH_latency_serve.json — the two
+        # run as separate CI steps against the same artifact dir).
+        res = check_deadline(quick=args.quick)
+        recs = records_deadline(res)
+        for rec in recs:
+            print(rec.csv())
+        if args.json:
+            write_bench_json(args.json, "deadline", recs,
+                             meta={"quick": args.quick})
         return
 
     all_recs = []

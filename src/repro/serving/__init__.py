@@ -18,11 +18,18 @@ from repro.serving.buckets import (
     k_tier,
     unpad_result,
 )
+from repro.serving.admission import (
+    SHED_RUNG,
+    AdmissionController,
+    AdmissionDecision,
+)
 from repro.serving.engine import (
+    DEFAULT_BUDGET_S,
     LAM_TAG,
     RankRequest,
     RankResult,
     ServingEngine,
+    Shed,
 )
 from repro.serving.metrics import EngineMetrics
 from repro.serving.pipeline import (
@@ -44,7 +51,9 @@ __all__ = [
     "Bucket", "K_TIERS", "MIN_M1", "MIN_M2", "NEG_FILL",
     "alloc_staging", "assemble_batch", "bucket_for", "ceil_pow2",
     "fill_staging", "k_tier", "unpad_result",
-    "LAM_TAG", "RankRequest", "RankResult", "ServingEngine",
+    "SHED_RUNG", "AdmissionController", "AdmissionDecision",
+    "DEFAULT_BUDGET_S", "LAM_TAG", "RankRequest", "RankResult",
+    "ServingEngine", "Shed",
     "EngineMetrics",
     "ExecutionPipeline", "PendingBatch", "RankFuture", "StagingRing",
     "DEFAULT_MIX", "Scenario", "make_request", "make_stream",

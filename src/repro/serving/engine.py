@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ranking import RankingOutput, rank_given_lambda
+from repro.serving.admission import SHED_RUNG, AdmissionController
 from repro.serving.buckets import (
     Bucket,
     assemble_batch,
@@ -77,11 +78,20 @@ from repro.serving.pipeline import (
 
 LAM_TAG = "_lam"   # requests that carry shadow prices directly
 
+# Default per-request latency budget: the paper's 50 ms claim.
+DEFAULT_BUDGET_S = 0.050
+
 
 @dataclass
 class RankRequest:
     """One user's ranking problem. Arrays are host (numpy) payloads —
-    the engine owns staging/padding and device transfer."""
+    the engine owns staging/padding and device transfer.
+
+    Deadline semantics: `deadline` is ABSOLUTE (in the engine's clock
+    domain — time.perf_counter by default); `budget_s` is RELATIVE to
+    enqueue time. When both are None the engine's default_budget_s
+    (50 ms, the paper's budget) applies; when both are set, `deadline`
+    wins."""
 
     rid: int
     u: np.ndarray                     # (m1,) candidate utilities
@@ -92,6 +102,8 @@ class RankRequest:
     X: np.ndarray | None = None      # (d,) covariates for the predictor
     tag: str = LAM_TAG                # predictor/arch affinity
     gamma: np.ndarray | None = None  # (m2,) slot discounts; default DCG
+    deadline: float | None = None    # absolute deadline (engine clock)
+    budget_s: float | None = None    # relative budget (enqueue + budget_s)
 
     def __post_init__(self):
         if self.lam is None and self.X is None:
@@ -110,6 +122,36 @@ class RankResult:
     bucket: str
     latency_ms: float                 # enqueue -> result materialized
     wait_ms: float                    # enqueue -> batch launch
+    deadline_hit: bool | None = None  # materialized before the deadline?
+    rung: int = 0                     # degradation rung served (0 = own)
+
+
+@dataclass
+class Shed:
+    """Typed admission-shed outcome: the request's RankFuture resolves
+    with THIS (not an exception) when every degradation rung was
+    predicted to miss the deadline. `predicted_ms` is the cheapest
+    rung's predicted completion — the best the engine could have done
+    against `budget_ms` of headroom."""
+
+    rid: int
+    bucket: str                       # the request's home bucket
+    predicted_ms: float
+    budget_ms: float
+    reason: str = "predicted-miss-at-every-rung"
+    rung: int = SHED_RUNG
+
+
+@dataclass
+class _QueueEntry:
+    """One admitted request waiting in (or flushed from) a bucket
+    queue: the request plus its admission-time bookkeeping."""
+
+    req: RankRequest
+    t_enq: float
+    fut: Any                          # RankFuture
+    deadline: float                   # absolute, engine clock
+    rung: int                         # degradation rung being served
 
 
 @dataclass
@@ -138,6 +180,18 @@ class ServingEngine:
     once the window is full. 0 disables the pipeline: every flush
     dispatches, materializes, and resolves inline on the calling
     thread — bitwise the same results, strictly serial timing.
+
+    admission: deadline-aware admission control (serving/admission.py).
+    None (default) admits everything — results still carry
+    `deadline_hit` against the 50 ms default budget, so an
+    admission-disabled engine reports its misses. With a controller
+    attached, every submit is checked against the request's deadline:
+    admit on rung 0, degrade down the tag's registered ladder
+    (`set_degradation_ladder`) to a cheaper pre-warmed predictor
+    bucket, or shed (the RankFuture resolves with a typed `Shed`).
+    At zero load admission is non-interfering: served results are
+    bitwise identical to the admission-disabled engine
+    (tests/test_serving_pipeline.py asserts this).
     """
 
     def __init__(
@@ -150,6 +204,8 @@ class ServingEngine:
         mesh=None,
         donate: bool | None = None,
         pipeline_depth: int = 1,
+        admission: AdmissionController | bool | None = None,
+        default_budget_s: float = DEFAULT_BUDGET_S,
         clock: Callable[[], float] = time.perf_counter,
     ):
         if executor not in ("xla", "fused", "dist"):
@@ -168,9 +224,20 @@ class ServingEngine:
             donate = jax.default_backend() != "cpu"
         self.donate = bool(donate)
         self.pipeline_depth = int(pipeline_depth)
+        # admission control: None/False = every request is admitted on
+        # rung 0 (pre-admission behavior, deadline tracking still on);
+        # True = a default AdmissionController; or pass a configured one.
+        if admission is True:
+            admission = AdmissionController()
+        elif admission is False:
+            admission = None
+        self.admission: AdmissionController | None = admission
+        self.default_budget_s = float(default_budget_s)
         self.clock = clock
         self.metrics = EngineMetrics()
         self._predictors: dict[str, _PredictorEntry] = {}
+        self._ladders: dict[str, tuple[str, ...]] = {}
+        self._uncollected_sheds: list[Shed] = []
         self._exec: dict[Bucket, Callable] = {}
         # Pallas kernel launches per bucket-executable invocation
         # (kernels.ops.kernel_launch_count of the bucket's route) —
@@ -196,6 +263,35 @@ class ServingEngine:
         self._predictors[tag] = _PredictorEntry(
             predictor=predictor, d_cov=int(d_cov), K=int(probe.shape[-1]))
 
+    def set_degradation_ladder(self, tag: str, fallbacks) -> None:
+        """Register `tag`'s degradation ladder: when admission predicts
+        rung 0 (the tag's own predictor, e.g. the KNN single-grid
+        executable) would miss a deadline, requests route to
+        fallbacks[0], then fallbacks[1], ... (cheaper, already-warmed
+        predictor buckets — e.g. affine, then mean) before shedding.
+        Every fallback must already be registered, accept the same
+        covariates, and price at least as many constraints as `tag`
+        (a rung that silently ignored constraints would fake its
+        compliance numbers)."""
+        if tag not in self._predictors:
+            raise KeyError(f"no predictor registered for tag {tag!r}")
+        fallbacks = tuple(fallbacks)
+        primary = self._predictors[tag]
+        for fb in fallbacks:
+            if fb not in self._predictors:
+                raise KeyError(f"ladder fallback {fb!r} is not a "
+                               f"registered predictor")
+            entry = self._predictors[fb]
+            if entry.d_cov != primary.d_cov:
+                raise ValueError(
+                    f"ladder fallback {fb!r}: d_cov {entry.d_cov} != "
+                    f"{primary.d_cov} of {tag!r}")
+            if entry.K < primary.K:
+                raise ValueError(
+                    f"ladder fallback {fb!r} emits {entry.K} shadow "
+                    f"prices < the {primary.K} that {tag!r} serves")
+        self._ladders[tag] = fallbacks
+
     # -- bucketing ----------------------------------------------------------
 
     def bucket_of(self, req: RankRequest) -> Bucket:
@@ -216,6 +312,24 @@ class ServingEngine:
             K = K_pred
         return bucket_for(m1=req.u.shape[0], m2=req.m2, K=K, tag=tag,
                           batch=self.max_batch)
+
+    def _rung_buckets(self, req: RankRequest,
+                      home: Bucket) -> list[tuple[int, Bucket]]:
+        """The request's degradation ladder as (rung, bucket) pairs,
+        rung 0 (its own bucket) first. Raw-lam requests have no ladder
+        — the rank itself is already the cheapest program."""
+        rungs = [(0, home)]
+        if req.X is None or home.tag == LAM_TAG:
+            return rungs
+        K_req = req.a.shape[0]
+        for i, fb in enumerate(self._ladders.get(req.tag, ()), start=1):
+            entry = self._predictors[fb]
+            if entry.K < K_req:      # cannot price this request's system
+                continue
+            rungs.append((i, bucket_for(
+                m1=req.u.shape[0], m2=req.m2, K=entry.K, tag=fb,
+                batch=self.max_batch)))
+        return rungs
 
     # -- executables --------------------------------------------------------
 
@@ -303,18 +417,35 @@ class ServingEngine:
 
     def warmup(self, sample) -> dict:
         """Compile every bucket reachable from `sample` (RankRequests or
-        Buckets) by executing one phantom batch per bucket. After this,
-        any stream inside the lattice runs with zero recompiles. This
-        is the only place the engine blocks on the device directly."""
-        buckets = {r if isinstance(r, Bucket) else self.bucket_of(r)
-                   for r in sample}
+        Buckets) by executing one phantom batch per bucket — including
+        every degradation-ladder rung of each request's tag, so a
+        degrade decision can never trip the no-recompile contract.
+        After this, any stream inside the lattice runs with zero
+        recompiles. This is the only place the engine blocks on the
+        device directly. With admission attached, a second (compiled)
+        phantom execution per bucket seeds the controller's
+        service-time EWMAs, so the very first live decision already
+        has a real estimate instead of the prior."""
+        buckets = set()
+        for r in sample:
+            if isinstance(r, Bucket):
+                buckets.add(r)
+                continue
+            home = self.bucket_of(r)
+            for _, bk in self._rung_buckets(r, home):
+                buckets.add(bk)
         self._in_warmup = True
         try:
             for bucket in sorted(buckets):
                 fn = self._executor_for(bucket)
-                jax.block_until_ready(
-                    self._call(fn, bucket, assemble_batch([], bucket,
-                               d_cov=self._dcov(bucket))).perm)
+                staged = assemble_batch([], bucket, d_cov=self._dcov(bucket))
+                jax.block_until_ready(self._call(fn, bucket, staged).perm)
+                if self.admission is not None:
+                    t0 = self.clock()
+                    jax.block_until_ready(
+                        self._call(fn, bucket, staged).perm)
+                    self.admission.observe_service(
+                        bucket.name, (self.clock() - t0) * 1e3)
                 self._warmed.add(bucket)
         finally:
             self._in_warmup = False
@@ -353,18 +484,62 @@ class ServingEngine:
     def submit_future(self, req: RankRequest,
                       now: float | None = None) -> RankFuture:
         """Enqueue and return this request's RankFuture. The future
-        resolves when the request's micro-batch retires; completed
-        results also keep flowing through submit/poll/drain, so mixing
-        the two styles is safe (same underlying results objects)."""
+        resolves when the request's micro-batch retires — or
+        immediately, with a typed `Shed` result, when admission sheds
+        it. Completed results also keep flowing through
+        submit/poll/drain, so mixing the two styles is safe (same
+        underlying results objects)."""
         return self._enqueue(req, now)
+
+    def observe_submission_lag(self, lag_ms: float) -> None:
+        """Feed the open-loop driver's queueing-lag sample (pacing
+        clock-drift already separated out by serve_open_loop) to the
+        admission controller as its online saturation signal. No-op
+        without a controller."""
+        if self.admission is not None:
+            self.admission.observe_lag(lag_ms)
+
+    def _deadline_of(self, req: RankRequest, now: float) -> float:
+        if req.deadline is not None:
+            return float(req.deadline)
+        budget = (req.budget_s if req.budget_s is not None
+                  else self.default_budget_s)
+        return now + float(budget)
 
     def _enqueue(self, req: RankRequest, now: float | None) -> RankFuture:
         now = self.clock() if now is None else now
         bucket = self.bucket_of(req)
         self.metrics.on_submit(bucket, known=bucket in self._warmed)
         fut = RankFuture(req.rid, bucket.name)
+        deadline = self._deadline_of(req, now)
+        rung = 0
+        if self.admission is not None:
+            rungs = self._rung_buckets(req, bucket)
+            inflight = (self._pipeline.inflight()
+                        if self._pipeline is not None else 0)
+            preds = [(r, self.admission.predict_ms(
+                          bk.name,
+                          queue_len=len(self._queues.get(bk, ())),
+                          batch_cap=bk.batch, inflight=inflight,
+                          max_wait_ms=self.max_wait_ms))
+                     for r, bk in rungs]
+            decision = self.admission.decide(
+                budget_ms=(deadline - now) * 1e3, rung_predictions=preds)
+            if not decision.admitted:
+                self.metrics.on_shed(bucket)
+                shed = Shed(rid=req.rid, bucket=bucket.name,
+                            predicted_ms=decision.predicted_ms,
+                            budget_ms=decision.budget_ms)
+                fut._resolve(shed)
+                self._uncollected_sheds.append(shed)
+                return fut
+            if decision.rung > 0:
+                rung = decision.rung
+                bucket = dict(rungs)[rung]
+                self.metrics.on_degrade(rung)
         q = self._queues.setdefault(bucket, [])
-        q.append((req, now, fut))
+        q.append(_QueueEntry(req=req, t_enq=now, fut=fut,
+                             deadline=deadline, rung=rung))
         if len(q) >= bucket.batch:
             self._flush_bucket(bucket, trigger="capacity")
         return fut
@@ -375,7 +550,7 @@ class ServingEngine:
         now = self.clock() if now is None else now
         for bucket in list(self._queues):
             q = self._queues[bucket]
-            if q and (now - q[0][1]) * 1e3 >= self.max_wait_ms:
+            if q and (now - q[0].t_enq) * 1e3 >= self.max_wait_ms:
                 self._flush_bucket(bucket, trigger="deadline")
         return self._collect()
 
@@ -387,7 +562,7 @@ class ServingEngine:
             if self._queues[bucket]:
                 self._flush_bucket(bucket, trigger="drain")
         if self._pipeline is not None:
-            results = []
+            results = self._take_sheds()
             for pending in self._pipeline.flush():
                 results += pending.results()
             return results
@@ -406,16 +581,21 @@ class ServingEngine:
     def __exit__(self, *exc):
         self.close()
 
+    def _take_sheds(self) -> list:
+        sheds, self._uncollected_sheds = self._uncollected_sheds, []
+        return sheds
+
     def _collect(self):
-        """Build results for every batch retired since the last call.
-        Runs on the caller's thread — the Python-heavy unpadding
-        deliberately lives here, not on the pipeline worker, so it
-        overlaps device execution instead of starving it via the GIL."""
+        """Build results for every batch retired since the last call
+        (plus any Shed outcomes since the last call). Runs on the
+        caller's thread — the Python-heavy unpadding deliberately
+        lives here, not on the pipeline worker, so it overlaps device
+        execution instead of starving it via the GIL."""
         if self._pipeline is not None:
             batches = self._pipeline.collect()
         else:
             batches, self._retired_sync = self._retired_sync, []
-        results = []
+        results = self._take_sheds()
         for pending in batches:
             results += pending.results()
         return results
@@ -434,13 +614,24 @@ class ServingEngine:
     def _flush_bucket(self, bucket: Bucket, *, trigger: str) -> None:
         entries = self._queues[bucket]
         self._queues[bucket] = []
-        reqs = [r for r, _, _ in entries]
+        reqs = [e.req for e in entries]
         ring = self._ring_for(bucket)
         fn = self._executor_for(bucket)
         t0 = self.clock()
         staged = fill_staging(ring.acquire(), reqs, bucket)
         t_launch = self.clock()
-        out = self._call(fn, bucket, staged)    # async dispatch: no block
+        try:
+            out = self._call(fn, bucket, staged)  # async dispatch: no block
+        except BaseException as e:                # noqa: BLE001
+            # dispatch itself blew up (bad executable, device OOM, an
+            # injected fault): fail this batch's futures so every one
+            # still resolves exactly once, and recycle the staging set
+            # — the ring is finite, and a leaked buffer would
+            # eventually deadlock acquire() under continued load.
+            for entry in entries:
+                entry.fut._fail(e)
+            ring.release(staged)
+            raise
         t1 = self.clock()
         # the single-dispatch contract: this _call was the batch's ONE
         # executable invocation — predictor buckets included (λ̂ is
@@ -450,8 +641,8 @@ class ServingEngine:
         # since the single-grid predict+rank+audit kernel).
         self.metrics.on_executable_call(self._kernel_launches[bucket])
         pending = PendingBatch(
-            bucket=bucket, entries=[(r, t) for r, t, _ in entries],
-            futures=[f for _, _, f in entries], out=out, staged=staged,
+            bucket=bucket, entries=entries,
+            futures=[e.fut for e in entries], out=out, staged=staged,
             ring=ring, t_launch=t_launch, trigger=trigger,
             materialize=self._materialize_batch, build=self._build_result,
             assembly_ms=(t_launch - t0) * 1e3,
@@ -483,8 +674,10 @@ class ServingEngine:
             exposure=np.asarray(out.exposure),
             compliant=np.asarray(out.compliant), lam=out.lam)
         pending.t_done = self.clock()
-        self.metrics.on_retire((pending.t_done - pending.t_launch) * 1e3,
-                               pending.t_done)
+        exec_ms = (pending.t_done - pending.t_launch) * 1e3
+        self.metrics.on_retire(exec_ms, pending.t_done)
+        if self.admission is not None:
+            self.admission.observe_service(pending.bucket.name, exec_ms)
         if pending.ring is not None:            # inputs consumed: recycle
             pending.ring.release(pending.staged)
             pending.staged = None
@@ -494,15 +687,24 @@ class ServingEngine:
         per row (memoized by the row's RankFuture), on whichever
         consumer thread first asks — the engine's collect path or a
         direct future.result() call."""
-        req, t_enq = pending.entries[i]
+        entry = pending.entries[i]
+        req, t_enq = entry.req, entry.t_enq
         perm, utility, exposure, compliant = unpad_result(pending.out, i, req)
+        deadline_hit = pending.t_done <= entry.deadline
+        # per-rung compliance cost: the exposure shortfall against the
+        # request's REAL thresholds, computed from the fused kernel's
+        # already-unpadded audit outputs — one tiny numpy op per row.
+        shortfall = float(np.clip(req.b - exposure, 0.0, None).sum())
         self.metrics.on_result((pending.t_done - t_enq) * 1e3,
-                               (pending.t_launch - t_enq) * 1e3, compliant)
+                               (pending.t_launch - t_enq) * 1e3, compliant,
+                               deadline_hit=deadline_hit, rung=entry.rung,
+                               shortfall=shortfall)
         return RankResult(
             rid=req.rid, perm=perm, utility=utility, exposure=exposure,
             compliant=compliant, bucket=pending.bucket.name,
             latency_ms=(pending.t_done - t_enq) * 1e3,
-            wait_ms=(pending.t_launch - t_enq) * 1e3)
+            wait_ms=(pending.t_launch - t_enq) * 1e3,
+            deadline_hit=deadline_hit, rung=entry.rung)
 
     # -- convenience driver -------------------------------------------------
 

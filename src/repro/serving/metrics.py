@@ -71,6 +71,20 @@ class EngineMetrics:
     compliant_sum: float = 0.0
     latencies_ms: list = field(default_factory=list)
     queue_wait_ms: list = field(default_factory=list)
+    # deadline accounting: every result is checked against its
+    # request's (absolute) deadline at build time; sheds/degrades are
+    # the admission controller's submit-time decisions. rung_stats
+    # accumulates, per degradation rung actually served, the
+    # compliance cost of serving from that rung — the audit outputs
+    # (exposure/compliance) come free out of the fused kernel, so the
+    # per-rung exposure shortfall sum(max(b - exposure, 0)) costs one
+    # tiny numpy op per result.
+    deadline_hits: int = 0
+    deadline_misses: int = 0
+    sheds: int = 0
+    degrades: int = 0
+    rung_stats: dict = field(default_factory=lambda: defaultdict(
+        lambda: {"served": 0, "compliant": 0.0, "shortfall": 0.0}))
     # on_result runs on whichever consumer thread builds a result
     # (future.result() is a public API), so unlike the submission/
     # completion pair its read-modify-writes need a real lock.
@@ -128,12 +142,35 @@ class EngineMetrics:
         self.t_last_retire = t_now
 
     def on_result(self, latency_ms: float, wait_ms: float,
-                  compliant: bool) -> None:
+                  compliant: bool, *, deadline_hit: bool | None = None,
+                  rung: int = 0, shortfall: float = 0.0) -> None:
         with self._result_lock:
             self.results += 1
             self.latencies_ms.append(latency_ms)
             self.queue_wait_ms.append(wait_ms)
             self.compliant_sum += float(compliant)
+            if deadline_hit is not None:
+                if deadline_hit:
+                    self.deadline_hits += 1
+                else:
+                    self.deadline_misses += 1
+            rs = self.rung_stats[int(rung)]
+            rs["served"] += 1
+            rs["compliant"] += float(compliant)
+            rs["shortfall"] += float(shortfall)
+
+    def on_shed(self, bucket) -> None:
+        """Submission side: a request was shed at admission (its
+        RankFuture resolved with a typed Shed result — it never
+        entered a queue, so it appears in no other counter)."""
+        with self._result_lock:
+            self.sheds += 1
+
+    def on_degrade(self, rung: int) -> None:
+        """Submission side: a request was admitted on a cheaper
+        degradation-ladder rung instead of its own bucket."""
+        with self._result_lock:
+            self.degrades += 1
 
     # -- reporting ----------------------------------------------------------
 
@@ -199,4 +236,30 @@ class EngineMetrics:
             },
             "compliance": round(self.compliant_sum / self.results, 3)
                           if self.results else float("nan"),
+            "deadline": self.deadline_summary(),
+        }
+
+    def deadline_summary(self) -> dict:
+        """Deadline/admission view: hit rate over SERVED requests
+        (sheds are the admission controller doing its job, not
+        misses), shed/degrade decision counts, and the per-rung
+        compliance-cost accumulator."""
+        tracked = self.deadline_hits + self.deadline_misses
+        return {
+            "hits": self.deadline_hits,
+            "misses": self.deadline_misses,
+            "hit_rate": round(self.deadline_hits / tracked, 4)
+                        if tracked else float("nan"),
+            "sheds": self.sheds,
+            "degrades": self.degrades,
+            "rungs": {
+                str(rung): {
+                    "served": rs["served"],
+                    "compliance": round(rs["compliant"] / rs["served"], 3)
+                                  if rs["served"] else float("nan"),
+                    "mean_shortfall": round(rs["shortfall"] / rs["served"], 4)
+                                      if rs["served"] else float("nan"),
+                }
+                for rung, rs in sorted(self.rung_stats.items())
+            },
         }

@@ -118,6 +118,16 @@ class RankFuture:
         self._event.set()
         self._fire_callbacks()
 
+    def _resolve(self, result) -> None:
+        """Resolve immediately with a pre-built result — the shed path:
+        an admission-shed request never joins a batch, but its future
+        must still resolve exactly once (with the typed Shed result,
+        not an exception)."""
+        with self._lock:
+            self._result = result
+        self._event.set()
+        self._fire_callbacks()
+
     def _fail(self, error: BaseException) -> None:
         self._error = error
         self._event.set()
@@ -161,7 +171,8 @@ class PendingBatch:
     """
 
     bucket: Bucket
-    entries: list                     # [(RankRequest, t_enqueue)]
+    entries: list                     # [engine._QueueEntry] (req, t_enq,
+                                      # deadline, rung)
     futures: list                     # [RankFuture], aligned with entries
     out: Any                          # RankingOutput: device, then host arrays
     staged: dict | None               # staging buffers to recycle

@@ -116,13 +116,22 @@ def poisson_arrivals(n_requests: int, qps: float, *, seed: int = 0,
 
 def serve_open_loop(engine, requests, arrivals, *,
                     clock=time.perf_counter, sleep=time.sleep,
-                    poll_interval_s: float = 5e-4):
+                    poll_interval_s: float = 5e-4,
+                    deadline_budget_s: float | None = None):
     """Drive `engine` open-loop: submit requests[i] once the stream clock
     reaches arrivals[i], never waiting on completions. While pacing
     between arrivals the engine is polled so deadline flushes fire on
     schedule. Returns (results, stats) — stats carries the wall clock
     and the SUBMISSION-LAG profile (ms by which each submit trailed its
     scheduled arrival).
+
+    With `deadline_budget_s` set, every request is stamped with the
+    ABSOLUTE deadline `t0 + arrival + deadline_budget_s` before submit
+    — the budget runs from the request's scheduled arrival, the way a
+    caller-side SLA does. A relative budget (engine default) would
+    restart the clock at submit time, silently forgiving any lateness
+    the load generator accumulated blocking on engine backpressure —
+    exactly the lateness an overloaded server inflicts.
 
     Open-loop semantics under overload: submission keeps pressing at the
     offered rate; the only thing allowed to slow it down is the engine's
@@ -131,7 +140,24 @@ def serve_open_loop(engine, requests, arrivals, *,
     up in per-request latency instead of being silently absorbed by the
     load generator, so the measured frontier is honest. Below saturation
     lag stays bounded (sleep-granularity noise); past it, lag grows over
-    the stream — `lag_ms['last']` is the cleanest saturation telltale.
+    the stream.
+
+    The lag profile is DECOMPOSED so the saturation detector (and the
+    admission controller, which consumes it online via
+    `engine.observe_submission_lag`) never trips on pacing jitter:
+
+      queue_lag_ms  lateness already present when the driver REACHES an
+                    arrival's pacing loop — carry-over from earlier
+                    submits that blocked on engine backpressure. Zero
+                    below saturation; grows over the stream past it.
+                    `queue_lag_ms['last']` is the saturation telltale.
+      drift_ms      lateness accrued INSIDE the pacing wait — sleep
+                    granularity overshoot + in-loop poll time. Bounded
+                    by the platform timer resolution at any load;
+                    charging it to the engine (the pre-decomposition
+                    bug) made the detector trip on pacing jitter.
+      lag_ms        the sum: total lateness at submit time (kept for
+                    continuity with earlier frontier artifacts).
     """
     requests = list(requests)
     arrivals = np.asarray(arrivals, np.float64)
@@ -141,30 +167,47 @@ def serve_open_loop(engine, requests, arrivals, *,
     if not requests:
         raise ValueError("empty request stream: an open-loop run needs at "
                          "least one arrival")
+    feed_lag = getattr(engine, "observe_submission_lag", None)
     results = []
     lags = np.zeros(len(requests))
+    queue_lags = np.zeros(len(requests))
     t0 = clock()
     for i, (req, due) in enumerate(zip(requests, arrivals)):
+        # lateness at ENTRY is queueing carry-over (earlier submits
+        # blocked on backpressure), not pacing noise: nothing in this
+        # arrival's own pacing loop has run yet.
+        queue_lags[i] = max(0.0, (clock() - t0 - due)) * 1e3
         while clock() - t0 < due:
             results += engine.poll()
             remaining = due - (clock() - t0)
             if remaining > 0:
                 sleep(min(remaining, poll_interval_s))
         lags[i] = (clock() - t0 - due) * 1e3
+        if feed_lag is not None:
+            feed_lag(queue_lags[i])
+        if deadline_budget_s is not None:
+            req.deadline = t0 + due + deadline_budget_s
         results += engine.submit(req)
         results += engine.poll()
     results += engine.drain()
     wall = clock() - t0
+    drifts = lags - queue_lags
+
+    def _profile(xs):
+        return {
+            "mean": float(xs.mean()),
+            "p50": float(np.percentile(xs, 50)),
+            "p99": float(np.percentile(xs, 99)),
+            "max": float(xs.max()),
+            "last": float(xs[-1]),
+        }
+
     stats = {
         "wall_s": wall,
         "offered_qps": len(requests) / float(arrivals[-1]),
         "achieved_qps": len(requests) / wall,
-        "lag_ms": {
-            "mean": float(lags.mean()),
-            "p50": float(np.percentile(lags, 50)),
-            "p99": float(np.percentile(lags, 99)),
-            "max": float(lags.max()),
-            "last": float(lags[-1]),
-        },
+        "lag_ms": _profile(lags),
+        "queue_lag_ms": _profile(queue_lags),
+        "drift_ms": _profile(drifts),
     }
     return results, stats

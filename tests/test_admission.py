@@ -1,0 +1,332 @@
+"""Deadline-aware admission control: property-based invariants over the
+bucket lattice and the admission decision rule, plus deterministic
+engine-level shed/degrade/deadline behavior.
+
+The property layer (hypothesis) proves the two load-stability
+invariants the controller's monotone prediction model was designed for:
+
+  * a request admitted at queue depth q is admitted at every depth < q
+    (no admit/shed flapping while a queue drains), and
+  * the chosen degradation rung is monotone non-decreasing in the
+    predicted lag (load only ever pushes DOWN the ladder);
+
+and the serving layer's geometric exactness claims: bucket quantization
+is monotone and idempotent, and the pad/unpad roundtrip is bitwise
+exact over random (m1, m2, K, d) geometries.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.constraints import dcg_discount
+from repro.core.predictors import KNNLambdaPredictor, MeanLambdaPredictor
+from repro.core.ranking import RankingOutput
+from repro.serving import (
+    SHED_RUNG,
+    AdmissionController,
+    RankRequest,
+    Scenario,
+    ServingEngine,
+    Shed,
+    bucket_for,
+    fill_staging,
+    alloc_staging,
+    make_stream,
+    unpad_result,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # pragma: no cover
+    given = None
+
+if given is not None:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+
+    # -----------------------------------------------------------------------
+    # Bucket quantization: monotone + idempotent (property)
+    # -----------------------------------------------------------------------
+
+    geometries = st.tuples(st.integers(1, 5000), st.integers(1, 5000),
+                           st.integers(1, 64)).map(
+        lambda t: (max(t[0], t[1]), min(t[0], t[1]), t[2]))  # m1 >= m2
+
+    @given(geometries)
+    def test_bucket_contains_and_is_fixed_point(geom):
+        m1, m2, K = geom
+        b = bucket_for(m1=m1, m2=m2, K=K, tag="t", batch=8)
+        # containment: the bucket holds the request
+        assert b.m1 >= m1 and b.m2 >= m2 and b.K >= K
+        # idempotence: bucketing a bucket geometry changes nothing
+        b2 = bucket_for(m1=b.m1, m2=b.m2, K=b.K, tag="t", batch=8)
+        assert b2 == b
+
+    @given(geometries, geometries)
+    def test_bucket_quantization_is_monotone(g1, g2):
+        """Componentwise-larger geometry never maps to a smaller bucket
+        — the property that makes the lattice warmable from the
+        scenario maxima."""
+        lo = (min(g1[0], g2[0]), min(g1[1], g2[1]), min(g1[2], g2[2]))
+        hi = (max(g1[0], g2[0]), max(g1[1], g2[1]), max(g1[2], g2[2]))
+        bl = bucket_for(m1=lo[0], m2=lo[1], K=lo[2], tag="t", batch=8)
+        bh = bucket_for(m1=hi[0], m2=hi[1], K=hi[2], tag="t", batch=8)
+        assert bl.m1 <= bh.m1 and bl.m2 <= bh.m2 and bl.K <= bh.K
+
+    # -----------------------------------------------------------------------
+    # Pad/unpad roundtrip exactness (property, array-level)
+    # -----------------------------------------------------------------------
+
+    @given(st.integers(0, 10_000), st.integers(1, 600), st.integers(1, 64),
+           st.integers(1, 12), st.integers(1, 24))
+    def test_pad_unpad_roundtrip_is_bitwise_exact(seed, m1, m2, K, d):
+        """fill_staging embeds the request bitwise; unpad_result
+        recovers exactly the rows/slices a phantom-free batch would
+        have."""
+        m2 = min(m2, m1)
+        rng = np.random.default_rng(seed)
+        req = RankRequest(
+            rid=0, u=rng.uniform(1, 5, m1).astype(np.float32),
+            a=(rng.random((K, m1)) < 0.3).astype(np.float32),
+            b=rng.uniform(0, 1, K).astype(np.float32), m2=m2,
+            X=rng.normal(size=d).astype(np.float32), tag="arch",
+            gamma=np.asarray(dcg_discount(m2), np.float32))
+        bucket = bucket_for(m1=m1, m2=m2, K=K, tag="arch", batch=3)
+        staged = fill_staging(alloc_staging(bucket, d_cov=d), [req], bucket)
+        # embedded slices are bitwise the request's arrays
+        np.testing.assert_array_equal(staged["u"][0, :m1], req.u)
+        np.testing.assert_array_equal(staged["a"][0, :K, :m1], req.a)
+        np.testing.assert_array_equal(staged["b"][0, :K], req.b)
+        np.testing.assert_array_equal(staged["gamma"][0, :m2], req.gamma)
+        np.testing.assert_array_equal(staged["X"][0], req.X)
+        # padding is the additive/ordering identity
+        assert np.all(staged["u"][0, m1:] == -1.0e30)
+        assert np.all(staged["a"][0, :, m1:] == 0) and np.all(
+            staged["a"][0, K:, :] == 0)
+        assert np.all(staged["b"][0, K:] == 0)
+        assert np.all(staged["gamma"][0, m2:] == 0)
+        # unpad recovers exactly what a batched output carries in-row
+        out = RankingOutput(
+            perm=np.arange(bucket.batch * bucket.m2).reshape(
+                bucket.batch, bucket.m2),
+            utility=rng.normal(size=bucket.batch).astype(np.float32),
+            exposure=rng.normal(
+                size=(bucket.batch, bucket.K)).astype(np.float32),
+            compliant=np.ones(bucket.batch, bool), lam=None)
+        perm, utility, exposure, compliant = unpad_result(out, 0, req)
+        np.testing.assert_array_equal(perm, out.perm[0, :m2])
+        assert utility == float(out.utility[0])
+        np.testing.assert_array_equal(exposure, out.exposure[0, :K])
+        assert compliant is True
+
+    # -----------------------------------------------------------------------
+    # Admission decision invariants (property)
+    # -----------------------------------------------------------------------
+
+    @given(st.floats(0, 100), st.floats(0, 50), st.integers(0, 64),
+           st.integers(0, 8), st.floats(0.5, 50))
+    def test_predict_ms_is_monotone_in_load(lag, exec_ms, q, inflight, wait):
+        ctrl = AdmissionController()
+        ctrl.observe_lag(lag)
+        ctrl.observe_service("b", exec_ms)
+        p = ctrl.predict_ms("b", queue_len=q, batch_cap=16,
+                            inflight=inflight, max_wait_ms=wait)
+        # deeper queue, deeper pipeline, more lag: never smaller
+        assert ctrl.predict_ms("b", queue_len=q + 1, batch_cap=16,
+                               inflight=inflight, max_wait_ms=wait) >= p
+        assert ctrl.predict_ms("b", queue_len=q, batch_cap=16,
+                               inflight=inflight + 1, max_wait_ms=wait) >= p
+        ctrl.observe_lag(lag + 100.0)           # EWMA moves strictly up
+        assert ctrl.predict_ms("b", queue_len=q, batch_cap=16,
+                               inflight=inflight, max_wait_ms=wait) >= p
+
+    @given(st.floats(1.0, 200.0), st.floats(0.1, 30.0), st.integers(1, 64),
+           st.integers(0, 4))
+    def test_admitted_at_depth_q_admitted_below_q(budget_ms, exec_ms, q,
+                                                  inflight):
+        """No admit/shed flapping as a queue drains: if the controller
+        admits at depth q it admits at every depth < q."""
+        ctrl = AdmissionController()
+        ctrl.observe_service("b", exec_ms)
+
+        def decision_at(depth):
+            pred = ctrl.predict_ms("b", queue_len=depth, batch_cap=16,
+                                   inflight=inflight, max_wait_ms=2.0)
+            return ctrl.decide(budget_ms=budget_ms,
+                               rung_predictions=[(0, pred)])
+
+        if decision_at(q).admitted:
+            assert all(decision_at(d).admitted for d in range(q))
+
+    @given(st.lists(st.floats(0.1, 50.0), min_size=1, max_size=5),
+           st.floats(1.0, 100.0),
+           st.lists(st.floats(0.0, 200.0), min_size=2, max_size=6))
+    def test_chosen_rung_is_monotone_in_lag(base_ms, budget_ms, lags):
+        """Load only ever pushes DOWN the ladder: a uniform lag shift
+        never moves the first-fit decision back UP to a costlier rung
+        (shed counts as the bottom)."""
+        ctrl = AdmissionController()
+        base = sorted(base_ms, reverse=True)    # rung 0 costliest
+
+        def rung_at(lag):
+            preds = [(i, b + lag) for i, b in enumerate(base)]
+            d = ctrl.decide(budget_ms=budget_ms, rung_predictions=preds)
+            return len(base) if d.rung == SHED_RUNG else d.rung
+
+        chosen = [rung_at(lag) for lag in sorted(lags)]
+        assert chosen == sorted(chosen)
+
+else:                                            # keep the skip visible
+
+    def test_property_layer_requires_hypothesis():
+        pytest.importorskip("hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# Controller validation + decision bookkeeping (deterministic)
+# ---------------------------------------------------------------------------
+
+
+def test_controller_validates_parameters():
+    with pytest.raises(ValueError, match="headroom"):
+        AdmissionController(headroom=0.0)
+    with pytest.raises(ValueError, match="ewma_alpha"):
+        AdmissionController(ewma_alpha=1.5)
+    with pytest.raises(ValueError, match="at least rung 0"):
+        AdmissionController().decide(budget_ms=50, rung_predictions=[])
+
+
+def test_decide_first_fit_and_tallies():
+    ctrl = AdmissionController(headroom=1.0)
+    d = ctrl.decide(budget_ms=10, rung_predictions=[(0, 5.0), (1, 1.0)])
+    assert (d.action, d.rung, d.admitted) == ("admit", 0, True)
+    d = ctrl.decide(budget_ms=10, rung_predictions=[(0, 50.0), (1, 1.0)])
+    assert (d.action, d.rung) == ("degrade", 1)
+    d = ctrl.decide(budget_ms=10, rung_predictions=[(0, 50.0), (1, 20.0)])
+    assert (d.action, d.rung) == ("shed", SHED_RUNG)
+    assert d.predicted_ms == 20.0               # best the engine had
+    assert ctrl.decisions == {"admit": 1, "degrade": 1, "shed": 1}
+
+
+def test_ewma_seeding_and_updates():
+    ctrl = AdmissionController(ewma_alpha=0.5, prior_exec_ms=7.0)
+    assert ctrl.service_ms("unseen") == 7.0     # prior until observed
+    ctrl.observe_service("b", 10.0)
+    assert ctrl.service_ms("b") == 10.0         # first observation seeds
+    ctrl.observe_service("b", 20.0)
+    assert ctrl.service_ms("b") == 15.0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: deadlines, sheds, degrades (deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _knn_mean_engine(**kw):
+    """Engine with a knn predictor degrading to a mean predictor."""
+    rng = np.random.default_rng(0)
+    d, K = 8, 4
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(32, d)).astype(np.float32),
+        np.abs(rng.normal(size=(32, K))).astype(np.float32), k=5)
+    mean = MeanLambdaPredictor.fit(
+        np.zeros((4, d), np.float32),
+        np.abs(rng.normal(size=(4, K))).astype(np.float32))
+    eng = ServingEngine(max_batch=4, max_wait_ms=2.0, **kw)
+    eng.register_predictor("knn", knn, d_cov=d)
+    eng.register_predictor("mean", mean, d_cov=d)
+    eng.set_degradation_ladder("knn", ["mean"])
+    mix = (Scenario("s", m1=200, m2=16, K=K, tag="knn", d_cov=d),)
+    return eng, make_stream(mix, n_requests=8, seed=1)
+
+
+def test_deadline_tracking_without_admission():
+    """An admission-disabled engine still reports hits/misses against
+    the 50 ms default budget — every served result is checked."""
+    eng = ServingEngine(max_batch=4, pipeline_depth=0)
+    res = eng.serve_stream(make_stream(n_requests=8, seed=2))
+    assert all(r.deadline_hit is not None and r.rung == 0 for r in res)
+    m = eng.metrics
+    assert m.deadline_hits + m.deadline_misses == len(res)
+    assert m.sheds == 0 and m.degrades == 0
+
+
+def test_absolute_deadline_wins_over_budget():
+    eng = ServingEngine(max_batch=4, pipeline_depth=0)
+    req = make_stream(n_requests=1, seed=3)[0]
+    req.deadline, req.budget_s = 1e9, 1e-9      # absolute wins: hit
+    hit = eng.serve_stream([req], warmup=True)[0]
+    assert hit.deadline_hit is True
+    req.deadline, req.budget_s = -1.0, 1e9      # already expired: miss
+    miss = eng.serve_stream([req], warmup=False)[0]
+    assert miss.deadline_hit is False
+
+
+def test_shed_resolves_future_with_typed_result():
+    ctrl = AdmissionController()
+    eng, reqs = _knn_mean_engine(pipeline_depth=0, admission=ctrl)
+    eng.warmup(reqs)
+    for name in (eng.bucket_of(reqs[0]).name,
+                 *(b.name for _, b in eng._rung_buckets(
+                     reqs[0], eng.bucket_of(reqs[0])))):
+        ctrl.observe_service(name, 1e6)         # every rung predicted late
+    fut = eng.submit_future(reqs[0])
+    out = fut.result(timeout=1.0)
+    assert isinstance(out, Shed)
+    assert out.rid == reqs[0].rid and out.rung == SHED_RUNG
+    assert out.predicted_ms > out.budget_ms
+    assert fut.done()
+    drained = eng.drain()                       # shed flows to the driver too
+    assert any(isinstance(x, Shed) and x.rid == reqs[0].rid for x in drained)
+    assert eng.metrics.sheds == 1 and eng.metrics.results == 0
+
+
+def test_degrade_routes_to_fallback_bucket_and_accounts_cost():
+    """When rung 0 is predicted to miss but the mean rung fits, the
+    request is served from the mean bucket, carries rung=1, and the
+    per-rung compliance-cost accumulator records its shortfall."""
+    ctrl = AdmissionController()
+    eng, reqs = _knn_mean_engine(pipeline_depth=0, admission=ctrl)
+    eng.warmup(reqs)
+    home = eng.bucket_of(reqs[0])
+    rungs = dict(eng._rung_buckets(reqs[0], home))
+    assert set(rungs) == {0, 1} and rungs[1].tag == "mean"
+    for b in eng._warmed:                       # every knn bucket (m1
+        if b.tag == "knn":                      # jitter spans two) is
+            ctrl.observe_service(b.name, 1e6)   # predicted to miss
+    res = eng.serve_stream(reqs, warmup=False)
+    served = [r for r in res if not isinstance(r, Shed)]
+    assert served and all(r.rung == 1 for r in served)
+    assert all(r.bucket.startswith("mean/") for r in served)
+    assert eng.metrics.degrades == len(served)
+    assert eng.metrics.compiles_post_warmup == 0   # fallback was pre-warmed
+    dl = eng.metrics.deadline_summary()
+    assert dl["rungs"]["1"]["served"] == len(served)
+    assert np.isfinite(dl["rungs"]["1"]["mean_shortfall"])
+
+
+def test_ladder_validation():
+    eng, _ = _knn_mean_engine(pipeline_depth=0)
+    with pytest.raises(KeyError, match="not a registered"):
+        eng.set_degradation_ladder("knn", ["nope"])
+    with pytest.raises(KeyError, match="no predictor"):
+        eng.set_degradation_ladder("nope", ["mean"])
+    rng = np.random.default_rng(5)
+    small = MeanLambdaPredictor.fit(
+        np.zeros((4, 8), np.float32),
+        np.abs(rng.normal(size=(4, 2))).astype(np.float32))
+    eng.register_predictor("small", small, d_cov=8)
+    with pytest.raises(ValueError, match="shadow"):
+        eng.set_degradation_ladder("knn", ["small"])
+
+
+def test_raw_lam_requests_have_no_ladder():
+    """A raw-lam request is already the cheapest program: its ladder is
+    rung 0 only, so admission can only admit or shed it."""
+    eng = ServingEngine(max_batch=4, pipeline_depth=0, admission=True)
+    req = make_stream(n_requests=1, seed=4)[0]
+    assert req.lam is not None
+    assert eng._rung_buckets(req, eng.bucket_of(req)) == [
+        (0, eng.bucket_of(req))]

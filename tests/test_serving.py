@@ -428,6 +428,81 @@ def test_serve_open_loop_virtual_clock():
     assert stats["lag_ms"]["mean"] >= 0.0
 
 
+class _FakeEngine:
+    """Deterministic serve_open_loop stand-in on a virtual clock:
+    submit() consumes `cost_s` of clock time (pure engine
+    backpressure) and the lag samples fed to observe_submission_lag
+    are recorded for inspection."""
+
+    def __init__(self, t, cost_s=0.0):
+        self.t = t
+        self.cost_s = cost_s
+        self.fed = []
+
+    def poll(self):
+        return []
+
+    def submit(self, req):
+        self.t[0] += self.cost_s
+        return [req]
+
+    def drain(self):
+        return []
+
+    def observe_submission_lag(self, lag_ms):
+        self.fed.append(lag_ms)
+
+
+def test_open_loop_pacing_overshoot_is_drift_not_queue_lag():
+    """Regression (frozen-clock trace): sleep-granularity overshoot
+    used to be charged to the engine's submission-lag profile, tripping
+    the saturation detector on pacing jitter. Decomposed, it lands
+    entirely in drift_ms — queue_lag_ms stays exactly zero, and the
+    admission controller is fed those zeros."""
+    from repro.serving import serve_open_loop
+
+    t = [0.0]
+    overshoot = 1e-3
+
+    def sleep(dt):                              # timer overshoots 1 ms
+        t[0] += dt + overshoot
+
+    eng = _FakeEngine(t, cost_s=0.0)            # engine is instantaneous
+    n = 16
+    arrivals = 0.01 * np.arange(1, n + 1)       # 10 ms gaps >> overshoot
+    _, stats = serve_open_loop(eng, list(range(n)), arrivals,
+                               clock=lambda: t[0], sleep=sleep)
+    assert stats["queue_lag_ms"]["max"] == 0.0  # nothing charged to engine
+    assert stats["drift_ms"]["max"] >= overshoot * 1e3
+    assert stats["lag_ms"]["max"] == stats["drift_ms"]["max"]
+    assert eng.fed == [0.0] * n                 # controller sees no lag
+
+
+def test_open_loop_backpressure_is_queue_lag_not_drift():
+    """The converse trace: a saturated engine (each submit consumes 2x
+    the arrival gap) accumulates lateness that is pure queueing — it
+    lands entirely in queue_lag_ms, grows over the stream (the
+    saturation telltale), and is exactly what feeds the controller."""
+    from repro.serving import serve_open_loop
+
+    t = [0.0]
+
+    def sleep(dt):                              # exact virtual timer
+        t[0] += dt
+
+    eng = _FakeEngine(t, cost_s=0.02)           # 20 ms service, 10 ms gaps
+    n = 16
+    arrivals = 0.01 * np.arange(1, n + 1)
+    _, stats = serve_open_loop(eng, list(range(n)), arrivals,
+                               clock=lambda: t[0], sleep=sleep)
+    assert stats["drift_ms"]["max"] == 0.0      # no pacing jitter charged
+    assert stats["queue_lag_ms"]["last"] > 0.0
+    assert stats["queue_lag_ms"]["last"] == stats["queue_lag_ms"]["max"]
+    # lateness at entry grows ~(cost - gap) = 10 ms per request
+    np.testing.assert_allclose(eng.fed, 10.0 * np.arange(n), atol=1e-6)
+    assert stats["lag_ms"]["last"] == stats["queue_lag_ms"]["last"]
+
+
 def test_serve_open_loop_length_mismatch_rejected():
     from repro.serving import serve_open_loop
 

@@ -1,24 +1,33 @@
 """Async double-buffered pipeline: sync/async result equivalence,
-future-to-request association, backpressure, and graceful shutdown.
+future-to-request association, backpressure, graceful shutdown, and
+fault injection under deadline pressure.
 
 The pipeline must be a pure scheduling change: for any stream, the
 pipelined engine (pipeline_depth >= 1) returns bitwise the same
 perm/utility/exposure/compliance per rid as the synchronous engine
-(pipeline_depth=0), differing only in when results materialize.
+(pipeline_depth=0), differing only in when results materialize. The
+fault-injection layer (FaultyExecutor) proves the lifetime invariants
+survive injected per-flush delays and failures: drain/shutdown never
+deadlocks with mid-flight sheds, every RankFuture resolves exactly
+once (served, degraded, shed, or failed), and admission at zero load
+is non-interfering (bitwise-identical served results).
 """
 
 import threading
+import time
 
 import numpy as np
 import pytest
 
 from repro.core.constraints import dcg_discount
-from repro.core.predictors import KNNLambdaPredictor
+from repro.core.predictors import KNNLambdaPredictor, MeanLambdaPredictor
 from repro.serving import (
+    AdmissionController,
     ExecutionPipeline,
     RankRequest,
     Scenario,
     ServingEngine,
+    Shed,
     StagingRing,
     bucket_for,
     make_stream,
@@ -233,6 +242,150 @@ def test_staging_ring_blocks_when_exhausted_and_recycles():
     ring.release(b1)
     t.join(timeout=5.0)
     assert grabbed == [b1]                      # recycled, not reallocated
+
+
+# ---------------------------------------------------------------------------
+# Fault injection under deadline pressure (admission + pipeline lifetimes)
+# ---------------------------------------------------------------------------
+
+
+class FaultyExecutor:
+    """Wraps one bucket executable, injecting a fixed per-flush delay
+    and/or a failure on selected flush indices (counted per bucket,
+    post-wrap). The delay sits between the engine's t_launch stamp and
+    the device call, so it inflates the observed service time exactly
+    like a slow device would — which is what drives the admission
+    controller's EWMAs up under injected pressure."""
+
+    def __init__(self, fn, *, delay_s=0.0, fail_on=()):
+        self.fn = fn
+        self.delay_s = float(delay_s)
+        self.fail_on = set(fail_on)
+        self.calls = 0
+
+    def __call__(self, *args):
+        i = self.calls
+        self.calls += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        if i in self.fail_on:
+            raise RuntimeError(f"injected fault at flush {i}")
+        return self.fn(*args)
+
+
+def _inject_faults(eng, **kw):
+    """Wrap every warmed bucket executable of `eng` with FaultyExecutor."""
+    wrapped = {}
+    for b, fn in list(eng._exec.items()):
+        wrapped[b] = eng._exec[b] = FaultyExecutor(fn, **kw)
+    return wrapped
+
+
+def test_injected_dispatch_failure_fails_futures_and_recycles_ring():
+    """A flush whose dispatch raises must fail that batch's futures
+    (each still resolves exactly once, as an error) and recycle its
+    staging buffers; the engine keeps serving afterwards."""
+    reqs = [_tiny_request(i) for i in range(12)]
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=1)
+    eng.warmup(reqs)
+    _inject_faults(eng, fail_on={0})            # first live flush explodes
+    futures = [eng.submit_future(r) for r in reqs[:3]]
+    with pytest.raises(RuntimeError, match="injected fault"):
+        eng.submit_future(reqs[3])              # capacity flush -> boom
+    for fut in futures:
+        assert fut.done()
+        with pytest.raises(RuntimeError, match="injected fault"):
+            fut.result(timeout=1.0)
+    # flush 1+ succeeds: the failed flush leaked nothing
+    out = [eng.submit(r) for r in reqs[4:]]
+    drained = sum(out, []) + eng.drain()
+    assert sorted(r.rid for r in drained) == list(range(4, 12))
+    bucket = eng.bucket_of(reqs[0])
+    ring = eng._rings[bucket]
+    assert ring._free.qsize() == eng.pipeline_depth + 2   # all recycled
+    eng.close()
+
+
+def test_injected_delays_with_midflight_sheds_never_deadlock():
+    """Slow flushes in flight + sheds arriving on top: drain completes,
+    every future resolves exactly once (served or shed), and the
+    served/shed split is exact."""
+    eng = ServingEngine(max_batch=4, max_wait_ms=2.0, pipeline_depth=2,
+                        admission=True)
+    reqs = [_tiny_request(i) for i in range(16)]
+    eng.warmup(reqs)
+    _inject_faults(eng, delay_s=0.02)           # every flush 20 ms slow
+    fired = {r.rid: 0 for r in reqs}
+    futures = []
+    for r in reqs[:8]:                          # generous budget: admitted
+        r.budget_s = 10.0
+        fut = eng.submit_future(r)
+        fut.add_done_callback(lambda f: fired.__setitem__(
+            f.rid, fired[f.rid] + 1))
+        futures.append(fut)
+    for r in reqs[8:]:                          # impossible budget: every
+        r.budget_s = 1e-4                       # rung predicted to miss
+        fut = eng.submit_future(r)              # (max_wait alone exceeds it)
+        fut.add_done_callback(lambda f: fired.__setitem__(
+            f.rid, fired[f.rid] + 1))
+        futures.append(fut)
+    drained = []
+    t = threading.Thread(target=lambda: drained.extend(eng.drain()))
+    t.start()
+    t.join(timeout=30.0)
+    assert not t.is_alive()                     # drain never deadlocks
+    assert all(f.done() for f in futures)
+    assert all(n == 1 for n in fired.values())  # exactly-once resolution
+    served = [x for x in drained if not isinstance(x, Shed)]
+    sheds = [x for x in drained if isinstance(x, Shed)]
+    assert sorted(x.rid for x in served) == list(range(8))
+    assert sorted(x.rid for x in sheds) == list(range(8, 16))
+    assert eng.metrics.sheds == 8 and eng.metrics.results == 8
+    # the shed futures resolved to the same typed results the drain saw
+    for fut, shed in zip(futures[8:], sorted(sheds, key=lambda s: s.rid)):
+        assert fut.result(timeout=1.0) is shed
+    eng.close()
+
+
+def test_admission_noninterference_at_zero_load():
+    """With headroom to spare, admission must be a no-op: served
+    results are bitwise identical to the admission-disabled engine,
+    with zero sheds and zero degrades."""
+    rng = np.random.default_rng(7)
+    d, K = 8, 3
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(32, d)).astype(np.float32),
+        np.abs(rng.normal(size=(32, K))).astype(np.float32), k=3)
+    mean = MeanLambdaPredictor.fit(
+        np.zeros((4, d), np.float32),
+        np.abs(rng.normal(size=(4, K))).astype(np.float32))
+    mix = (Scenario("feed", m1=200, m2=16, K=K, weight=2.0,
+                    tag="knn", d_cov=d),
+           Scenario("notif", m1=120, m2=8, K=K, weight=1.0))
+    reqs = make_stream(mix, n_requests=48, seed=8)
+
+    def build(admission):
+        eng = ServingEngine(max_batch=8, max_wait_ms=2.0, pipeline_depth=1,
+                            admission=admission, default_budget_s=10.0)
+        eng.register_predictor("knn", knn, d_cov=d)
+        eng.register_predictor("mean", mean, d_cov=d)
+        eng.set_degradation_ladder("knn", ["mean"])
+        return eng
+
+    ref = {r.rid: r for r in build(None).serve_stream(reqs)}
+    eng = build(AdmissionController())
+    got = {r.rid: r for r in eng.serve_stream(reqs)}
+    assert eng.metrics.sheds == 0 and eng.metrics.degrades == 0
+    assert sorted(got) == sorted(ref)
+    for rid in ref:
+        assert not isinstance(got[rid], Shed)
+        np.testing.assert_array_equal(got[rid].perm, ref[rid].perm)
+        np.testing.assert_array_equal(got[rid].exposure, ref[rid].exposure)
+        assert got[rid].utility == ref[rid].utility
+        assert got[rid].compliant == ref[rid].compliant
+        assert got[rid].bucket == ref[rid].bucket
+        assert got[rid].rung == 0
+    eng.close()
 
 
 def test_staging_buffers_are_not_rewritten_while_in_flight():
