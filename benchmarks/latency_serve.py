@@ -54,11 +54,27 @@ Three measurement modes (docs/benchmarks.md walks through them):
     compliance cost comes from the fused-kernel audit outputs. Writes
     BENCH_deadline.json with `--json`; AssertionError on regression.
 
+  * refresh (`--only refresh`): the λ-refresh hot-swap health gate
+    (`check_refresh`) — real telemetry drives >= 2 mid-stream swaps
+    with zero recompiles, per-bucket jit caches pinned at the warmed
+    executable, one dispatch per flushed batch, every epoch bitwise
+    identical to a cold engine started on that epoch's published
+    state, and rollback restoring the last-good generation bitwise.
+    Also times the refresh publish (drain + update + device_put +
+    fenced swap). Writes BENCH_refresh.json with `--json`.
+
+  * drift (`--only drift`): the drift regression gate (`check_drift`)
+    — under 8x mid-stream constraint tightening, refresh-on must
+    strictly reduce accumulated exposure shortfall vs the frozen
+    predictor with zero recompiles, and must be a bitwise no-op on a
+    compliant stationary stream. Writes BENCH_drift.json with
+    `--json`.
+
 Usage:
 
-  python -m benchmarks.latency_serve [--quick] [--frontier]
-                                     [--only direct|engine|frontier|deadline]
-                                     [--json OUT]
+  python -m benchmarks.latency_serve \\
+      [--quick] [--frontier] [--json OUT] \\
+      [--only direct|engine|frontier|deadline|refresh|drift]
 
 `--json OUT` additionally writes a machine-readable
 BENCH_latency_serve.json (medians, geometry, backend — see
@@ -87,14 +103,18 @@ from repro.core.predictors import (
     KNNLambdaPredictor,
     MeanLambdaPredictor,
     knn_predict,
+    with_state,
 )
 from repro.core.ranking import rank_given_lambda
+from repro.data.synthetic import DriftSpec
 from repro.serving import (
     DEFAULT_MIX,
     AdmissionController,
+    RefreshLane,
     Scenario,
     ServingEngine,
     Shed,
+    make_drift_stream,
     make_stream,
     poisson_arrivals,
     serve_open_loop,
@@ -573,6 +593,302 @@ def records_deadline(res):
     return recs
 
 
+REFRESH_TAG = "arch"
+REFRESH_D, REFRESH_K = 10, 4
+
+
+def _refresh_engine(pred, *, max_batch=8, pipeline_depth=1):
+    """Deterministic refresh-gate engine: max_wait_ms=1e9 means the
+    deadline flush never fires, so batch composition is a pure function
+    of the stream (capacity flushes + end-of-stream drain) and hot- vs
+    cold-engine runs are bitwise comparable without a frozen clock."""
+    eng = ServingEngine(max_batch=max_batch, max_wait_ms=1e9,
+                        pipeline_depth=pipeline_depth)
+    eng.register_predictor(REFRESH_TAG, pred, d_cov=REFRESH_D)
+    return eng
+
+
+def _bitwise_same(got, ref):
+    return (np.array_equal(got.perm, ref.perm)
+            and np.array_equal(got.exposure, ref.exposure)
+            and got.utility == ref.utility
+            and got.compliant == ref.compliant)
+
+
+def run_refresh(*, n_requests=192, chunk=32, max_batch=8, seed=0,
+                verbose=True):
+    """Hot-swap health probe for the online λ-refresh lane.
+
+    Serves a shortfall-heavy stationary stream in chunks with a
+    `lane.refresh()` between chunks (real telemetry -> real swaps),
+    then checks the zero-recompile contract the tests prove, on the
+    benchmark box: swaps happened, compiles_post_warmup stayed 0,
+    per-bucket jit caches stayed at exactly the warmed executable,
+    executable_calls stayed one per flushed micro-batch — and each
+    epoch's results are BITWISE what a cold engine started from that
+    epoch's published state serves. A final rollback() must republish
+    the pre-swap generation bitwise. Also times the refresh publish
+    (drain + update rule + device_put + fenced swap), the number that
+    has to stay tiny for the lane to ride the serving box.
+    """
+    rng = np.random.default_rng(seed)
+    pred = KNNLambdaPredictor.fit(
+        rng.normal(size=(96, REFRESH_D)).astype(np.float32),
+        np.abs(rng.normal(size=(96, REFRESH_K))).astype(np.float32), k=5)
+    reqs = make_drift_stream(
+        DriftSpec(kind="none"), tag=REFRESH_TAG, n_requests=n_requests,
+        m1=128, m2=16, K=REFRESH_K, d_cov=REFRESH_D, b_frac=0.25,
+        seed=seed)
+
+    eng = _refresh_engine(pred, max_batch=max_batch)
+    lane = RefreshLane(eng, eta=0.5, min_samples=8)
+    eng.warmup(reqs)
+
+    # epoch -> host copy of the published state, for cold-engine replay
+    states = {0: jax.device_get(eng.predictor_state_of(REFRESH_TAG))}
+    chunks, swap_us = [], []
+    for i in range(0, len(reqs), chunk):
+        got = eng.serve_stream(reqs[i:i + chunk], warmup=False)
+        chunks.append((eng.predictor_epoch(REFRESH_TAG),
+                       reqs[i:i + chunk], got))
+        t0 = time.perf_counter()
+        rep = lane.refresh()[REFRESH_TAG]
+        dt = time.perf_counter() - t0
+        if rep["swapped"]:
+            swap_us.append(dt * 1e6)
+            states[rep["epoch"]] = jax.device_get(
+                eng.predictor_state_of(REFRESH_TAG))
+
+    m = eng.metrics
+    sizes = eng.jit_cache_sizes()
+    swaps = m.refresh_summary()["swaps"]
+
+    # hot-vs-cold parity, per epoch: refresh() runs between chunks and
+    # serve_stream drains fully, so every chunk is entirely one epoch.
+    parity_ok = True
+    for epoch in sorted({e for e, _, _ in chunks}):
+        cold = _refresh_engine(with_state(pred, states[epoch]),
+                               max_batch=max_batch)
+        for e, creqs, got in chunks:
+            if e != epoch:
+                continue
+            ref = {r.rid: r for r in cold.serve_stream(creqs)}
+            parity_ok &= all(_bitwise_same(r, ref[r.rid]) for r in got)
+        cold.close()
+
+    # rollback republishes the pre-swap generation (as a NEW epoch —
+    # the fence applies to rollback too) bitwise.
+    pre_rollback_epoch = eng.predictor_epoch(REFRESH_TAG)
+    rollback_ok = False
+    if swaps >= 1:
+        t0 = time.perf_counter()
+        rb_epoch = lane.rollback(REFRESH_TAG)
+        rollback_us = (time.perf_counter() - t0) * 1e6
+        prev = states[pre_rollback_epoch - 1]
+        now = jax.device_get(eng.predictor_state_of(REFRESH_TAG))
+        rollback_ok = (rb_epoch == pre_rollback_epoch + 1
+                       and set(now) == set(prev)
+                       and all(np.array_equal(now[k], prev[k])
+                               for k in now))
+    else:
+        rollback_us = float("nan")
+
+    out = {
+        "n_requests": n_requests,
+        "swaps": swaps,
+        "final_epoch": eng.predictor_epoch(REFRESH_TAG),
+        "compiles_post_warmup": m.compiles_post_warmup,
+        "executable_calls": m.executable_calls,
+        "batches": m.batches,
+        "jit_cache_sizes": dict(sizes),
+        "parity_ok": bool(parity_ok),
+        "rollback_ok": bool(rollback_ok),
+        "swap_us_p50": (round(statistics.median(swap_us), 1)
+                        if swap_us else float("nan")),
+        "rollback_us": round(rollback_us, 1),
+    }
+    eng.close()
+    if verbose:
+        print(f"refresh: swaps {out['swaps']}  epoch {out['final_epoch']}  "
+              f"compiles_post_warmup {out['compiles_post_warmup']}  "
+              f"exec_calls/batches {out['executable_calls']}/"
+              f"{out['batches']}  swap_p50 {out['swap_us_p50']} us  "
+              f"parity {out['parity_ok']}  rollback {out['rollback_ok']}",
+              flush=True)
+    save_json("latency_refresh", out)
+    return out
+
+
+def check_refresh(*, quick=False, verbose=True):
+    """Refresh-lane health gate (kernel_bench-style: AssertionError on
+    regression): real telemetry must drive >= 2 hot swaps with zero
+    recompiles and one dispatch per batch, every epoch must serve
+    bitwise what a cold engine on that state serves, and rollback must
+    restore the last-good generation bitwise."""
+    kw = dict(n_requests=128) if quick else {}
+    res = run_refresh(verbose=verbose, **kw)
+    assert res["swaps"] >= 2, (
+        f"refresh gate: only {res['swaps']} swaps — the shortfall-heavy "
+        f"stream should force repeated refreshes")
+    assert res["compiles_post_warmup"] == 0, (
+        f"refresh gate: {res['compiles_post_warmup']} recompiles after "
+        f"warmup — a swap broke the frozen-shape contract")
+    assert all(v == 1 for v in res["jit_cache_sizes"].values()), (
+        f"refresh gate: jit cache grew past the warmed executable: "
+        f"{res['jit_cache_sizes']}")
+    assert res["executable_calls"] == res["batches"], (
+        f"refresh gate: {res['executable_calls']} executable calls for "
+        f"{res['batches']} batches — a swap added a dispatch")
+    assert res["parity_ok"], (
+        "refresh gate: hot-swapped serving diverged from a cold engine "
+        "started on the published state")
+    assert res["rollback_ok"], (
+        "refresh gate: rollback did not restore the pre-swap state "
+        "bitwise")
+    print("# refresh acceptance (>= 2 hot swaps, 0 recompiles, 1 "
+          "dispatch/batch, hot == cold bitwise per epoch, rollback "
+          "restores last-good): PASS")
+    return res
+
+
+def records_refresh(res):
+    return [Record(
+        name=f"serve_refresh/hot_swap/n={res['n_requests']}",
+        us_per_call=res["swap_us_p50"],
+        derived={"swaps": res["swaps"],
+                 "final_epoch": res["final_epoch"],
+                 "compiles_post_warmup": res["compiles_post_warmup"],
+                 "executable_calls": res["executable_calls"],
+                 "batches": res["batches"],
+                 "parity_ok": res["parity_ok"],
+                 "rollback_ok": res["rollback_ok"],
+                 "rollback_us": res["rollback_us"]})]
+
+
+def run_drift(*, n_requests=256, chunk=32, seed=10, verbose=True):
+    """Drift regression: refresh-on vs refresh-off under mid-stream
+    constraint tightening, plus the stationarity control.
+
+    The KNN predictor is fit in the compliant era (zero-λ database);
+    the stream tightens its thresholds 8x between 25% and 75% of the
+    stream. Refresh-off keeps serving the stale λ̂ and accumulates
+    exposure shortfall against the requests' REAL thresholds;
+    refresh-on folds the dual-subgradient telemetry back between
+    chunks and must strictly reduce it — with zero recompiles. On a
+    compliant stationary stream the lane must publish nothing and
+    serving must stay bitwise identical to refresh-off.
+    """
+    def shortfall_run(reqs, *, refresh_on, eta=1.0, knn_scale=0.0,
+                      knn_seed=9):
+        rng = np.random.default_rng(knn_seed)
+        pred = KNNLambdaPredictor.fit(
+            rng.normal(size=(64, REFRESH_D)).astype(np.float32),
+            knn_scale * np.abs(rng.normal(
+                size=(64, REFRESH_K))).astype(np.float32), k=5)
+        eng = _refresh_engine(pred, pipeline_depth=0)
+        lane = (RefreshLane(eng, eta=eta, min_samples=8)
+                if refresh_on else None)
+        eng.warmup(reqs)
+        results = []
+        for i in range(0, len(reqs), chunk):
+            results += eng.serve_stream(reqs[i:i + chunk], warmup=False)
+            if lane is not None:
+                lane.refresh()
+        by_rid = {r.rid: r for r in reqs}
+        shortfall = sum(
+            float(np.clip(by_rid[r.rid].b - r.exposure, 0.0, None).sum())
+            for r in results)
+        m = eng.metrics
+        out = {"shortfall": round(shortfall, 4),
+               "swaps": m.refresh_summary()["swaps"],
+               "compiles_post_warmup": m.compiles_post_warmup,
+               "results": results}
+        eng.close()
+        return out
+
+    spec = DriftSpec(kind="tighten", magnitude=8.0, start=0.25, end=0.75)
+    reqs = make_drift_stream(
+        spec, tag=REFRESH_TAG, n_requests=n_requests, m1=128, m2=16,
+        K=REFRESH_K, d_cov=REFRESH_D, b_frac=0.03, seed=seed)
+    off = shortfall_run(reqs, refresh_on=False)
+    on = shortfall_run(reqs, refresh_on=True)
+
+    # stationarity control: compliant stream, refresh must be a no-op
+    stat = make_drift_stream(
+        DriftSpec(kind="none"), tag=REFRESH_TAG, n_requests=96, m1=128,
+        m2=16, K=REFRESH_K, d_cov=REFRESH_D, topic_rate=0.45,
+        b_frac=0.01, seed=seed + 1)
+    s_off = shortfall_run(stat, refresh_on=False, knn_scale=0.1,
+                          knn_seed=seed + 2)
+    s_on = shortfall_run(stat, refresh_on=True, knn_scale=0.1,
+                         knn_seed=seed + 2)
+    ref = {r.rid: r for r in s_off["results"]}
+    neutral = (s_on["swaps"] == 0
+               and all(_bitwise_same(r, ref[r.rid])
+                       for r in s_on["results"]))
+
+    out = {
+        "n_requests": n_requests,
+        "drift": {"kind": spec.kind, "magnitude": spec.magnitude,
+                  "start": spec.start, "end": spec.end},
+        "shortfall_off": off["shortfall"],
+        "shortfall_on": on["shortfall"],
+        "shortfall_ratio": round(on["shortfall"]
+                                 / max(off["shortfall"], 1e-12), 4),
+        "swaps_on": on["swaps"],
+        "compiles_post_warmup": (off["compiles_post_warmup"]
+                                 + on["compiles_post_warmup"]),
+        "stationary_neutral": bool(neutral),
+        "stationary_swaps": s_on["swaps"],
+    }
+    if verbose:
+        print(f"drift[{spec.kind} x{spec.magnitude}] shortfall "
+              f"off {out['shortfall_off']:.2f} -> on "
+              f"{out['shortfall_on']:.2f} (ratio "
+              f"{out['shortfall_ratio']:.3f}, {out['swaps_on']} swaps)  "
+              f"stationary_neutral {out['stationary_neutral']}",
+              flush=True)
+    save_json("latency_drift", out)
+    return out
+
+
+def check_drift(*, quick=False, verbose=True):
+    """Drift health gate (AssertionError on regression): refresh-on
+    strictly reduces accumulated shortfall under tighten drift with
+    zero recompiles, and is bitwise neutral on a compliant stationary
+    stream."""
+    kw = dict(n_requests=160) if quick else {}
+    res = run_drift(verbose=verbose, **kw)
+    assert res["shortfall_on"] < res["shortfall_off"], (
+        f"drift gate: refresh-on shortfall {res['shortfall_on']} did not "
+        f"beat refresh-off {res['shortfall_off']}")
+    assert res["swaps_on"] >= 1, (
+        "drift gate: refresh-on published nothing under drift")
+    assert res["compiles_post_warmup"] == 0, (
+        f"drift gate: {res['compiles_post_warmup']} recompiles after "
+        f"warmup across the drift runs")
+    assert res["stationary_neutral"], (
+        f"drift gate: refresh was not a bitwise no-op on the compliant "
+        f"stationary stream ({res['stationary_swaps']} swaps)")
+    print("# drift acceptance (refresh-on < refresh-off shortfall under "
+          "tighten drift, 0 recompiles, bitwise-neutral when "
+          "stationary): PASS")
+    return res
+
+
+def records_drift(res):
+    return [Record(
+        name=f"serve_drift/{res['drift']['kind']}"
+             f"/mag={res['drift']['magnitude']}/n={res['n_requests']}",
+        us_per_call=float("nan"),
+        derived={"shortfall_off": res["shortfall_off"],
+                 "shortfall_on": res["shortfall_on"],
+                 "shortfall_ratio": res["shortfall_ratio"],
+                 "swaps_on": res["swaps_on"],
+                 "compiles_post_warmup": res["compiles_post_warmup"],
+                 "stationary_neutral": res["stationary_neutral"]})]
+
+
 def records(rows):
     return [Record(
         name=f"serve/m1={r['m1']}/K={r['K']}/m2={r['m2']}/B={r['batch']}",
@@ -620,7 +936,7 @@ def main():
                     help="CI-sized: small direct sweep, 256-request stream")
     ap.add_argument("--only", default="all",
                     choices=["all", "direct", "engine", "frontier",
-                             "deadline"])
+                             "deadline", "refresh", "drift"])
     ap.add_argument("--frontier", action="store_true",
                     help="also sweep p99 vs offered load (paced open-loop "
                          "Poisson arrivals below/around saturation)")
@@ -655,6 +971,28 @@ def main():
             print(rec.csv())
         if args.json:
             write_bench_json(args.json, "deadline", recs,
+                             meta={"quick": args.quick})
+        return
+
+    if args.only == "refresh":
+        # the refresh-lane health gate writes its own BENCH_refresh.json
+        res = check_refresh(quick=args.quick)
+        recs = records_refresh(res)
+        for rec in recs:
+            print(rec.csv())
+        if args.json:
+            write_bench_json(args.json, "refresh", recs,
+                             meta={"quick": args.quick})
+        return
+
+    if args.only == "drift":
+        # the drift regression gate writes its own BENCH_drift.json
+        res = check_drift(quick=args.quick)
+        recs = records_drift(res)
+        for rec in recs:
+            print(rec.csv())
+        if args.json:
+            write_bench_json(args.json, "drift", recs,
                              meta={"quick": args.quick})
         return
 

@@ -16,10 +16,20 @@ Beyond-paper predictors (recorded separately in EXPERIMENTS.md):
 All predictors share the interface:
   fit(X_train, lam_train) -> fitted predictor (pytree)
   predict(X) -> lam_hat   (jit-able, vmap-able, shard_map-able)
+
+Hot-swap state seam (serving/refresh.py): `predictor_state` extracts
+exactly the ARRAY fields of a predictor (STATE_FIELDS), `with_state`
+grafts a compatible state dict back on. The split matters for jit: the
+serving engine threads the state dict through its bucket executables as
+an ARGUMENT (same pytree structure + shapes/dtypes -> same compile-cache
+entry, so refreshing state never recompiles), while non-array statics —
+KNN's `k` — stay closed over in the predictor template and keep shaping
+the trace (lax.top_k needs a Python int, not a tracer).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import Any
@@ -268,6 +278,7 @@ class MLPLambdaPredictor:
         lr: float = 1e-2,
         seed: int = 0,
         return_trace: bool = False,
+        init_params: Any = None,
     ):
         """Full-batch Adam fit as ONE jit dispatch: the training loop is
         a lax.scan inside the compiled program, not `num_steps` Python
@@ -275,12 +286,17 @@ class MLPLambdaPredictor:
         dispatch + host sync ~500 times). The per-step loss trace is
         stacked by the scan for free — pass ``return_trace=True`` to get
         ``(predictor, losses (num_steps,))`` instead of the predictor.
+
+        ``init_params`` warm-starts from an existing parameter pytree
+        (``d_hidden``/``seed`` are then ignored) — the refresh lane's
+        re-fit path: a few Adam steps from the serving parameters
+        instead of a from-scratch train.
         """
         X = jnp.asarray(X_train, jnp.float32)
         Y = jnp.asarray(lam_train, jnp.float32)
-        params = MLPLambdaPredictor.init_params(
-            jax.random.key(seed), X.shape[1], d_hidden, Y.shape[1]
-        )
+        params = init_params if init_params is not None else (
+            MLPLambdaPredictor.init_params(
+                jax.random.key(seed), X.shape[1], d_hidden, Y.shape[1]))
         opt = adam_init(params)
 
         def loss_fn(p):
@@ -312,3 +328,44 @@ PREDICTOR_REGISTRY = {
     "linear": LinearLambdaPredictor,
     "mlp": MLPLambdaPredictor,
 }
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap state seam (serving/refresh.py)
+# ---------------------------------------------------------------------------
+
+# The ARRAY fields of each family — the refreshable state the serving
+# engine threads through its bucket executables as a jit argument.
+# Deliberately NOT tree_flatten: KNN's `k` is registered as pytree data
+# but must stay a static Python int in the trace.
+STATE_FIELDS = {
+    MeanLambdaPredictor: ("mean_lam",),
+    KNNLambdaPredictor: ("X_db", "lam_db"),
+    LinearLambdaPredictor: ("W", "c"),
+    MLPLambdaPredictor: ("params",),
+}
+
+
+def predictor_state(predictor) -> dict:
+    """The predictor's refreshable array state as a flat dict. Unknown
+    (duck-typed) predictor families have no registered state and return
+    {} — the engine then closes over them whole, exactly the
+    pre-refresh behavior: they serve fine but cannot be hot-swapped."""
+    fields = STATE_FIELDS.get(type(predictor), ())
+    return {f: getattr(predictor, f) for f in fields}
+
+
+def with_state(predictor, state: dict):
+    """The predictor with its array state replaced by `state` (same
+    keys as predictor_state). Non-array statics (KNN's k) carry over
+    from the template, so a jit trace through the result keeps them as
+    Python constants while the state arrays may be tracers. An empty
+    state (unknown family) returns the predictor unchanged."""
+    fields = STATE_FIELDS.get(type(predictor), ())
+    if set(state) != set(fields):
+        raise ValueError(f"state keys {sorted(state)} != "
+                         f"{sorted(fields)} for "
+                         f"{type(predictor).__name__}")
+    if not fields:
+        return predictor
+    return dataclasses.replace(predictor, **state)

@@ -256,3 +256,84 @@ def build_experiment(
         u=top_u, X=X, a=a, b=b_ref, gamma=gamma, m2=m2,
         train_idx=perm[:n_train], test_idx=perm[n_train:],
     )
+
+
+# --------------------------------------------------------------------------
+# Drifting-traffic generators (the refresh lane's scenario class)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DriftSpec:
+    """A mid-stream distribution shift, parameterized by stream
+    position t in [0, 1]: nothing before `start`, a linear ramp to full
+    `magnitude` by `end`, held thereafter.
+
+    kind:
+      'none'     stationary control (phase stays 0; every draw is the
+                 same distribution as t=0 — the bitwise-neutrality
+                 baseline for refresh tests).
+      'tighten'  constraint tightening: thresholds b scale by
+                 1 + (magnitude-1)·phase — the regulator raised the
+                 exposure floor mid-stream. Utilities/covariates are
+                 untouched, so a frozen predictor keeps serving the
+                 stale (now too-small) λ̂.
+      'shift'    covariate shift: the user-covariate mean translates by
+                 magnitude·phase along a fixed unit direction — the
+                 serving distribution walks away from the train db.
+      'grow'     support growth: with probability min(phase, 1) a user
+                 is drawn from a NEW population cluster centered
+                 magnitude away — the db-growth regime (the world's
+                 user base expands past what the predictor was fit on;
+                 the KNN ring-write is how the frozen-shape db absorbs
+                 it).
+    """
+
+    kind: str = "none"
+    start: float = 0.25
+    end: float = 0.75
+    magnitude: float = 3.0
+
+    def __post_init__(self):
+        if self.kind not in ("none", "tighten", "shift", "grow"):
+            raise ValueError(f"unknown drift kind {self.kind!r}")
+        if not 0.0 <= self.start <= self.end <= 1.0:
+            raise ValueError(f"need 0 <= start <= end <= 1, got "
+                             f"[{self.start}, {self.end}]")
+
+
+def drift_phase(spec: DriftSpec, t: float) -> float:
+    """Ramp position in [0, 1] at stream fraction `t`."""
+    if spec.kind == "none" or t <= spec.start:
+        return 0.0
+    if t >= spec.end:
+        return 1.0
+    return (t - spec.start) / (spec.end - spec.start)
+
+
+def drift_request_params(
+    rng: np.random.Generator, spec: DriftSpec, t: float, *,
+    m1: int, m2: int, K: int, d_cov: int,
+    topic_rate: float = 0.15, b_frac: float = 0.03,
+) -> dict:
+    """One request's synthetic payload at stream fraction `t` under
+    `spec` (numpy host arrays, the serving engine's input convention):
+    utilities ~ U[1, 5], sparse binary topic attributes, thresholds as
+    a fraction of the total slot discount, standard-normal covariates —
+    the same conventions as serving/traffic.py — with the drift kind's
+    transformation applied at the current ramp phase."""
+    phase = drift_phase(spec, t)
+    u = rng.uniform(1.0, 5.0, m1).astype(np.float32)
+    a = (rng.random((K, m1)) < topic_rate).astype(np.float32)
+    gamma = np.asarray(dcg_discount(m2), np.float32)
+    frac = b_frac
+    if spec.kind == "tighten":
+        frac = b_frac * (1.0 + (spec.magnitude - 1.0) * phase)
+    b = (frac * float(gamma.sum()) * np.ones(K, np.float32))
+    X = rng.normal(size=d_cov).astype(np.float32)
+    if spec.kind == "shift":
+        direction = np.ones(d_cov, np.float32) / np.sqrt(d_cov)
+        X = X + np.float32(spec.magnitude * phase) * direction
+    elif spec.kind == "grow" and rng.random() < phase:
+        center = np.full(d_cov, spec.magnitude / np.sqrt(d_cov), np.float32)
+        X = X + center
+    return {"u": u, "a": a, "b": b, "gamma": gamma, "X": X}

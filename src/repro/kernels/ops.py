@@ -309,6 +309,33 @@ def predict_rank_audited(
                         interpret=interpret, tile_b=tile_b, tile_m=tile_m)
 
 
+def predict_rank_audited_stateful(
+    state: dict,         # predictor_state(predictor): the array leaves
+    predictor,           # the STATIC template (family + non-array fields)
+    X,
+    u: Array,
+    a: Array,
+    b: Array,
+    gamma: Array,
+    **kwargs,
+):
+    """predict_rank_audited with the predictor's ARRAY state threaded
+    as a leading argument — the hot-swap seam the serving engine jits.
+
+    Closing a predictor over a jit body bakes its arrays in as
+    executable constants, so refreshing them would force a retrace.
+    Here `state` (core.predictors.predictor_state) enters the trace as
+    a pytree ARGUMENT: swapping in new arrays of identical structure /
+    shape / dtype hits the same compile-cache entry — zero recompiles —
+    while `predictor` stays the static template whose family routes the
+    dispatch and whose non-array fields (KNN's k) shape the trace.
+    """
+    from repro.core.predictors import with_state  # deferred: no cycle
+
+    return predict_rank_audited(X, with_state(predictor, state),
+                                u, a, b, gamma, **kwargs)
+
+
 def knn_rank_audited(
     X: Array,            # (n, d) query covariates
     X_db: Array,         # (n_train, d) train database

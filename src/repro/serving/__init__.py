@@ -38,9 +38,17 @@ from repro.serving.pipeline import (
     RankFuture,
     StagingRing,
 )
+from repro.serving.refresh import (
+    RefreshLane,
+    dual_refresh_targets,
+    knn_ring_update,
+    ridge_refresh,
+    running_mean_update,
+)
 from repro.serving.traffic import (
     DEFAULT_MIX,
     Scenario,
+    make_drift_stream,
     make_request,
     make_stream,
     poisson_arrivals,
@@ -56,6 +64,8 @@ __all__ = [
     "ServingEngine", "Shed",
     "EngineMetrics",
     "ExecutionPipeline", "PendingBatch", "RankFuture", "StagingRing",
-    "DEFAULT_MIX", "Scenario", "make_request", "make_stream",
-    "poisson_arrivals", "serve_open_loop",
+    "RefreshLane", "dual_refresh_targets", "knn_ring_update",
+    "ridge_refresh", "running_mean_update",
+    "DEFAULT_MIX", "Scenario", "make_drift_stream", "make_request",
+    "make_stream", "poisson_arrivals", "serve_open_loop",
 ]

@@ -48,6 +48,7 @@ docs/api.md for the public API.
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from functools import partial
@@ -58,6 +59,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.predictors import predictor_state, with_state
 from repro.core.ranking import RankingOutput, rank_given_lambda
 from repro.serving.admission import SHED_RUNG, AdmissionController
 from repro.serving.buckets import (
@@ -124,6 +126,7 @@ class RankResult:
     wait_ms: float                    # enqueue -> batch launch
     deadline_hit: bool | None = None  # materialized before the deadline?
     rung: int = 0                     # degradation rung served (0 = own)
+    epoch: int = 0                    # predictor generation that served it
 
 
 @dataclass
@@ -236,6 +239,19 @@ class ServingEngine:
         self.clock = clock
         self.metrics = EngineMetrics()
         self._predictors: dict[str, _PredictorEntry] = {}
+        # hot-swap generations: per tag, the LIVE state dict the bucket
+        # executables are fed (threaded as jit argument 0 — never baked
+        # into the trace, see _build_executor) plus a monotone epoch.
+        # Superseded generations park in _old_states until every batch
+        # dispatched against them has materialized (_inflight_gens
+        # pins), then retire — on accelerator backends that release
+        # their device buffers.
+        self._pred_state: dict[str, dict] = {}
+        self._pred_epoch: dict[str, int] = {}
+        self._old_states: dict[str, dict[int, dict]] = {}
+        self._inflight_gens: dict[tuple[str, int], int] = {}
+        self._swap_lock = threading.Lock()
+        self._refresh = None              # attached RefreshLane, if any
         self._ladders: dict[str, tuple[str, ...]] = {}
         self._uncollected_sheds: list[Shed] = []
         self._exec: dict[Bucket, Callable] = {}
@@ -262,6 +278,10 @@ class ServingEngine:
         probe = predictor.predict(jnp.zeros((1, d_cov), jnp.float32))
         self._predictors[tag] = _PredictorEntry(
             predictor=predictor, d_cov=int(d_cov), K=int(probe.shape[-1]))
+        with self._swap_lock:
+            self._pred_state[tag] = jax.device_put(
+                predictor_state(predictor))
+            self._pred_epoch[tag] = 0
 
     def set_degradation_ladder(self, tag: str, fallbacks) -> None:
         """Register `tag`'s degradation ladder: when admission predicts
@@ -291,6 +311,126 @@ class ServingEngine:
                     f"ladder fallback {fb!r} emits {entry.K} shadow "
                     f"prices < the {primary.K} that {tag!r} serves")
         self._ladders[tag] = fallbacks
+
+    # -- predictor hot swap (serving/refresh.py's engine seam) ---------------
+
+    def attach_refresh(self, lane) -> None:
+        """Attach a refresh lane: every predictor-served result's
+        (X, λ̂, exposure, b) row is fed to `lane.observe` at build time
+        — the audit outputs are already on the host, so telemetry costs
+        zero extra device reads."""
+        self._refresh = lane
+
+    def predictor_epoch(self, tag: str) -> int:
+        """The tag's current predictor generation (0 = as registered)."""
+        return self._pred_epoch[tag]
+
+    def predictor_state_of(self, tag: str) -> dict:
+        """The tag's LIVE state dict (device arrays) — what the next
+        flush will dispatch against. The refresh lane builds its
+        incremental updates on this."""
+        with self._swap_lock:
+            return self._pred_state[tag]
+
+    def predictor_template(self, tag: str):
+        """The registered predictor instance (the static template whose
+        family routes kernel dispatch; its arrays are the generation-0
+        state, NOT necessarily the live one)."""
+        return self._predictors[tag].predictor
+
+    def swap_predictor(self, tag: str, new) -> int:
+        """Epoch-fenced two-phase hot swap of `tag`'s predictor state.
+
+        `new` is a state dict (core.predictors.predictor_state) or a
+        predictor instance to take the state from. Phase 1 (publish)
+        validates structure/shape/dtype against the live generation —
+        a mismatch would silently retrace the bucket executables, so it
+        raises ValueError and the engine keeps serving last-good — and
+        checks every leaf finite (a poisoned refresh must never reach
+        the executables), then transfers the new buffers to the device.
+        Phase 2 (flip) swaps the (state, epoch) pair under the same
+        lock every flush reads it under, so the flip lands exactly at a
+        micro-batch boundary: a batch is dispatched entirely against
+        one generation, never a torn mix. The superseded generation is
+        retired once its last in-flight batch materializes.
+
+        Returns the new epoch. Never recompiles: the state enters the
+        warmed executables as an argument with unchanged treedef.
+        """
+        if tag not in self._predictors:
+            raise KeyError(f"no predictor registered for tag {tag!r}")
+        state = dict(new) if isinstance(new, dict) else predictor_state(new)
+        cur = self._pred_state[tag]
+        if not cur:
+            raise ValueError(
+                f"swap {tag!r}: predictor family has no registered "
+                f"refreshable state (core.predictors.STATE_FIELDS)")
+        if set(state) != set(cur):
+            raise ValueError(
+                f"swap {tag!r}: state keys {sorted(state)} != "
+                f"{sorted(cur)} of the live generation")
+        cur_leaves = jax.tree_util.tree_leaves_with_path(cur)
+        new_leaves = jax.tree_util.tree_leaves_with_path(state)
+        if [p for p, _ in new_leaves] != [p for p, _ in cur_leaves]:
+            raise ValueError(
+                f"swap {tag!r}: state tree structure differs from the "
+                f"live generation (would retrace the warmed executables)")
+        for (path, new_leaf), (_, cur_leaf) in zip(new_leaves, cur_leaves):
+            new_leaf = jnp.asarray(new_leaf)
+            if (new_leaf.shape != cur_leaf.shape
+                    or new_leaf.dtype != cur_leaf.dtype):
+                raise ValueError(
+                    f"swap {tag!r}: leaf {jax.tree_util.keystr(path)} is "
+                    f"{new_leaf.shape}/{new_leaf.dtype}, live generation "
+                    f"has {cur_leaf.shape}/{cur_leaf.dtype} — shapes are "
+                    f"frozen (the no-recompile contract)")
+            if not bool(np.all(np.isfinite(np.asarray(new_leaf)))):
+                raise ValueError(
+                    f"swap {tag!r}: non-finite values in leaf "
+                    f"{jax.tree_util.keystr(path)} — poisoned state "
+                    f"refused, serving stays on the live generation")
+        state = jax.device_put(state)     # phase 1: publish new buffers
+        with self._swap_lock:             # phase 2: flip at batch boundary
+            old_epoch = self._pred_epoch[tag]
+            self._old_states.setdefault(tag, {})[old_epoch] = cur
+            self._pred_state[tag] = state
+            self._pred_epoch[tag] = old_epoch + 1
+            self._retire_unpinned(tag)
+        self.metrics.on_swap(tag)
+        return old_epoch + 1
+
+    def _current_gen(self, tag: str) -> tuple[dict, int]:
+        """The (state, epoch) pair a flush dispatches against, read
+        atomically — the other half of the swap fence."""
+        with self._swap_lock:
+            epoch = self._pred_epoch[tag]
+            self._inflight_gens[(tag, epoch)] = (
+                self._inflight_gens.get((tag, epoch), 0) + 1)
+            return self._pred_state[tag], epoch
+
+    def _release_gen(self, tag: str, epoch: int) -> None:
+        """A batch dispatched against (tag, epoch) has materialized:
+        unpin the generation and retire it if it is superseded and no
+        other batch still holds it."""
+        key = (tag, epoch)
+        with self._swap_lock:
+            n = self._inflight_gens.get(key, 1) - 1
+            if n <= 0:
+                self._inflight_gens.pop(key, None)
+            else:
+                self._inflight_gens[key] = n
+            self._retire_unpinned(tag)
+
+    def _retire_unpinned(self, tag: str) -> None:
+        # caller holds _swap_lock
+        old = self._old_states.get(tag)
+        if not old:
+            return
+        cur = self._pred_epoch[tag]
+        for epoch in [e for e in old
+                      if e < cur and (tag, e) not in self._inflight_gens]:
+            del old[epoch]
+            self.metrics.on_state_retired(tag)
 
     # -- bucketing ----------------------------------------------------------
 
@@ -366,45 +506,54 @@ class ServingEngine:
             kernel_launch_count(predictor, bucket.m2)
             if self.executor == "fused" else 0)
         rank = self._rank_fn(bucket)
-        donate = (2, 3) if self.donate else ()
         if bucket.tag == LAM_TAG:
 
             def fn(b, gamma, u, a, lam):
                 return rank(u, a, b, lam, gamma)
 
-            return jax.jit(fn, donate_argnums=donate)
+            return jax.jit(fn, donate_argnums=(2, 3) if self.donate else ())
 
+        # Predictor-tagged buckets take the predictor's ARRAY state as
+        # argument 0 instead of closing over it: closed-over arrays are
+        # baked into the executable as constants, so a λ-refresh would
+        # force a retrace. As an argument with frozen pytree structure
+        # + shapes + dtypes, a hot-swapped generation hits the same
+        # compile-cache entry — the no-recompile contract holds across
+        # swaps. Only the static template (family, KNN's k) is closed
+        # over. u/a stay the donated staging buffers; the state is NOT
+        # donated — it serves every batch until the next swap.
         entry = self._predictors[bucket.tag]
-        pred = entry.predictor      # closed over: baked into the executable
+        pred = entry.predictor              # static template
+        donate = (3, 4) if self.donate else ()
         if self.executor == "dist":
             # the mesh-sharded rank body keeps its own predict stage
             # (still inside this one jit executable)
             pad_k = bucket.K - entry.K
 
-            def fn(b, gamma, u, a, X):
-                lam = pred.predict(X)                   # (B, K_pred)
+            def fn(state, b, gamma, u, a, X):
+                lam = with_state(pred, state).predict(X)    # (B, K_pred)
                 lam = jnp.pad(lam, ((0, 0), (0, pad_k)))
                 return rank(u, a, b, lam, gamma)
 
             return jax.jit(fn, donate_argnums=donate)
 
-        # Predictor-tagged buckets route through the single-sweep
-        # dispatcher (kernels.ops.predict_rank_audited): predict + rank
-        # + audit lower to ONE device program per flushed batch — for
-        # the fused executor the affine families fold λ̂ into the rank
-        # kernel's VMEM prologue and KNN fuses its weighting into the
-        # db sweep; the xla executor runs the same dispatcher's
-        # two-stage XLA body (use_kernel=False), still one executable.
+        # The single-sweep dispatcher (kernels.ops.predict_rank_audited
+        # behind its stateful seam): predict + rank + audit lower to
+        # ONE device program per flushed batch — for the fused executor
+        # the affine families fold λ̂ into the rank kernel's VMEM
+        # prologue and KNN fuses its weighting into the db sweep; the
+        # xla executor runs the same dispatcher's two-stage XLA body
+        # (use_kernel=False), still one executable.
         # metrics.executable_calls counts the contract.
-        from repro.kernels.ops import predict_rank_audited
+        from repro.kernels.ops import predict_rank_audited_stateful
 
         m2, eps = bucket.m2, self.eps
         use_kernel = None if self.executor == "fused" else False
 
-        def fn(b, gamma, u, a, X):
-            return predict_rank_audited(X, pred, u, a, b, gamma,
-                                        m2=m2, eps=eps,
-                                        use_kernel=use_kernel)
+        def fn(state, b, gamma, u, a, X):
+            return predict_rank_audited_stateful(state, pred, X, u, a, b,
+                                                 gamma, m2=m2, eps=eps,
+                                                 use_kernel=use_kernel)
 
         return jax.jit(fn, donate_argnums=donate)
 
@@ -458,12 +607,15 @@ class ServingEngine:
             return None
         return self._predictors[bucket.tag].d_cov
 
-    def _call(self, fn, bucket: Bucket, staged: dict) -> RankingOutput:
+    def _call(self, fn, bucket: Bucket, staged: dict,
+              state: dict | None = None) -> RankingOutput:
         if bucket.tag == LAM_TAG:
             return fn(staged["b"], staged["gamma"], staged["u"], staged["a"],
                       staged["lam"])
-        return fn(staged["b"], staged["gamma"], staged["u"], staged["a"],
-                  staged["X"])
+        if state is None:                  # warmup path: no gen pinning
+            state = self._pred_state[bucket.tag]
+        return fn(state, staged["b"], staged["gamma"], staged["u"],
+                  staged["a"], staged["X"])
 
     def jit_cache_sizes(self) -> dict[str, int]:
         """Per-bucket jit compile-cache sizes (1 = exactly the warmed
@@ -619,9 +771,17 @@ class ServingEngine:
         fn = self._executor_for(bucket)
         t0 = self.clock()
         staged = fill_staging(ring.acquire(), reqs, bucket)
+        # epoch fence: the (state, epoch) pair is read atomically, so
+        # this whole batch dispatches against exactly one predictor
+        # generation — a concurrent swap lands before or after, never
+        # inside. The generation stays pinned until the batch
+        # materializes (_release_gen), which is what delays retirement
+        # of superseded device buffers past their last in-flight use.
+        state, epoch = ((None, 0) if bucket.tag == LAM_TAG
+                        else self._current_gen(bucket.tag))
         t_launch = self.clock()
         try:
-            out = self._call(fn, bucket, staged)  # async dispatch: no block
+            out = self._call(fn, bucket, staged, state)  # async: no block
         except BaseException as e:                # noqa: BLE001
             # dispatch itself blew up (bad executable, device OOM, an
             # injected fault): fail this batch's futures so every one
@@ -631,6 +791,8 @@ class ServingEngine:
             for entry in entries:
                 entry.fut._fail(e)
             ring.release(staged)
+            if bucket.tag != LAM_TAG:      # nothing dispatched: unpin
+                self._release_gen(bucket.tag, epoch)
             raise
         t1 = self.clock()
         # the single-dispatch contract: this _call was the batch's ONE
@@ -646,7 +808,7 @@ class ServingEngine:
             ring=ring, t_launch=t_launch, trigger=trigger,
             materialize=self._materialize_batch, build=self._build_result,
             assembly_ms=(t_launch - t0) * 1e3,
-            dispatch_ms=(t1 - t_launch) * 1e3)
+            dispatch_ms=(t1 - t_launch) * 1e3, epoch=epoch)
         if self._pipeline is not None:
             self._pipeline.submit(pending)      # may block: backpressure
         else:
@@ -669,10 +831,13 @@ class ServingEngine:
         then pure numpy (slicing jax arrays row-by-row would dispatch —
         and on first touch compile — one tiny program per slice)."""
         out = pending.out
+        # lam comes home with the rest: the refresh lane's telemetry
+        # (λ̂ actually served) reads it row-by-row in _build_result, and
+        # slicing a device array there would dispatch per row.
         pending.out = RankingOutput(
             perm=np.asarray(out.perm), utility=np.asarray(out.utility),
             exposure=np.asarray(out.exposure),
-            compliant=np.asarray(out.compliant), lam=out.lam)
+            compliant=np.asarray(out.compliant), lam=np.asarray(out.lam))
         pending.t_done = self.clock()
         exec_ms = (pending.t_done - pending.t_launch) * 1e3
         self.metrics.on_retire(exec_ms, pending.t_done)
@@ -681,6 +846,8 @@ class ServingEngine:
         if pending.ring is not None:            # inputs consumed: recycle
             pending.ring.release(pending.staged)
             pending.staged = None
+        if pending.bucket.tag != LAM_TAG:       # epoch fence: unpin the gen
+            self._release_gen(pending.bucket.tag, pending.epoch)
 
     def _build_result(self, pending: PendingBatch, i: int) -> RankResult:
         """Unpad row `i` into its RankResult. Runs lazily, exactly once
@@ -699,12 +866,29 @@ class ServingEngine:
                                (pending.t_launch - t_enq) * 1e3, compliant,
                                deadline_hit=deadline_hit, rung=entry.rung,
                                shortfall=shortfall)
+        if self._refresh is not None and pending.bucket.tag != LAM_TAG:
+            # feed the refresh lane: covariates + the λ̂ / exposure /
+            # threshold rows at the SERVED tag's predictor width (the
+            # dual-subgradient triple). All host numpy already — the
+            # audit outputs came home with the batch, zero extra
+            # device reads.
+            K_pred = self._predictors[pending.bucket.tag].K
+            K_req = req.b.shape[0]
+            expo_row = np.zeros(K_pred, np.float32)
+            expo_row[:K_req] = exposure[:K_pred][:K_req]
+            b_row = np.zeros(K_pred, np.float32)
+            b_row[:K_req] = req.b[:K_pred][:K_req]
+            self._refresh.observe(
+                pending.bucket.tag, X=req.X,
+                lam=np.asarray(pending.out.lam[i, :K_pred], np.float32),
+                exposure=expo_row, b=b_row)
         return RankResult(
             rid=req.rid, perm=perm, utility=utility, exposure=exposure,
             compliant=compliant, bucket=pending.bucket.name,
             latency_ms=(pending.t_done - t_enq) * 1e3,
             wait_ms=(pending.t_launch - t_enq) * 1e3,
-            deadline_hit=deadline_hit, rung=entry.rung)
+            deadline_hit=deadline_hit, rung=entry.rung,
+            epoch=pending.epoch)
 
     # -- convenience driver -------------------------------------------------
 

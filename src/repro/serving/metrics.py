@@ -83,6 +83,17 @@ class EngineMetrics:
     deadline_misses: int = 0
     sheds: int = 0
     degrades: int = 0
+    # refresh lane / hot swap accounting: swaps = predictor generations
+    # published + flipped (engine.swap_predictor successes);
+    # refresh_failures = refresh attempts that produced state the
+    # engine refused (poisoned / wrong structure) or that crashed in
+    # the lane — serving stayed on last-good each time;
+    # states_retired = superseded generations whose device buffers were
+    # released after their last in-flight batch materialized.
+    swaps: int = 0
+    refresh_failures: int = 0
+    states_retired: int = 0
+    swaps_by_tag: dict = field(default_factory=lambda: defaultdict(int))
     rung_stats: dict = field(default_factory=lambda: defaultdict(
         lambda: {"served": 0, "compliant": 0.0, "shortfall": 0.0}))
     # on_result runs on whichever consumer thread builds a result
@@ -172,6 +183,26 @@ class EngineMetrics:
         with self._result_lock:
             self.degrades += 1
 
+    def on_swap(self, tag: str) -> None:
+        """Refresh lane: a new predictor generation was published and
+        flipped live (engine.swap_predictor succeeded)."""
+        with self._result_lock:
+            self.swaps += 1
+            self.swaps_by_tag[tag] += 1
+
+    def on_refresh_failure(self, tag: str) -> None:
+        """Refresh lane: a refresh attempt failed (state the engine
+        refused, or a crash inside the lane) — serving kept the
+        last-good generation."""
+        with self._result_lock:
+            self.refresh_failures += 1
+
+    def on_state_retired(self, tag: str) -> None:
+        """A superseded predictor generation's buffers were released
+        (its last in-flight batch materialized)."""
+        with self._result_lock:
+            self.states_retired += 1
+
     # -- reporting ----------------------------------------------------------
 
     @staticmethod
@@ -237,6 +268,18 @@ class EngineMetrics:
             "compliance": round(self.compliant_sum / self.results, 3)
                           if self.results else float("nan"),
             "deadline": self.deadline_summary(),
+            "refresh": self.refresh_summary(),
+        }
+
+    def refresh_summary(self) -> dict:
+        """Hot-swap view: generations published, refreshes refused or
+        crashed (serving stayed last-good), superseded generations
+        whose buffers were released."""
+        return {
+            "swaps": self.swaps,
+            "swaps_by_tag": dict(self.swaps_by_tag),
+            "refresh_failures": self.refresh_failures,
+            "states_retired": self.states_retired,
         }
 
     def deadline_summary(self) -> dict:

@@ -186,6 +186,10 @@ class PendingBatch:
     dispatch_ms: float = 0.0
     depth_at_dispatch: int = 0
     fill: dict = field(default_factory=dict)
+    # predictor generation the batch was dispatched against (engine
+    # epoch fence): every row of the batch shares it — a swap lands
+    # between batches, never inside one. 0 for raw-lam buckets.
+    epoch: int = 0
 
     def finish(self) -> None:
         """Materialize outputs and mark every future done. Called by

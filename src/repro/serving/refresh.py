@@ -1,0 +1,354 @@
+"""Online λ-refresh lane: predictor updates from serving telemetry,
+hot-swapped into the warmed executables with zero recompiles.
+
+The paper freezes the λ-predictor at deployment. The primal-dual view
+(Shah et al., arXiv:1702.06971) says it doesn't have to be: for each
+served request the fused kernel already audits the realized exposure
+against the thresholds, and `b - exposure` IS the subgradient of the
+dual objective at the served λ̂. One projected subgradient step per
+request,
+
+    λ_target = max(0, λ̂_served + η · (b − exposure)),
+
+yields a fresh (X, λ_target) supervision pair at zero extra device cost
+— the audit outputs come home with every batch anyway. The lane
+accumulates these pairs per predictor tag (engine._build_result feeds
+`observe`), folds them into the predictor's ARRAY state per family, and
+publishes the new generation through `engine.swap_predictor`:
+
+  KNN      ring-write the newest (X, λ_target) rows over the oldest db
+           rows (`knn_ring_update`) — n_train is frozen, so shapes (and
+           therefore the warmed executables) never change; eviction is
+           strictly oldest-first.
+  linear   anchored ridge re-solve (`ridge_refresh`): minimize
+           Σ‖y − W̃x̃‖² + μ‖W̃ − W̃_live‖² over the augmented x̃ = [x; 1]
+           — each sample contributes a rank-1 x̃x̃ᵀ update to the Gram
+           matrix, and the live (W, c) is the prior anchor, so history
+           carries recursively across refreshes.
+  mean     running intercept (`running_mean_update`): the live mean is
+           a prior observation of weight w, the targets average in.
+  mlp      warm-start re-fit: MLPLambdaPredictor.fit(init_params=live,
+           num_steps=small) — a few Adam steps of the one-jit lax.scan
+           fit from the serving parameters, not a from-scratch train.
+
+Swap safety is the engine's epoch fence (engine.swap_predictor): new
+buffers are validated (structure/shape/dtype/finiteness) and published
+to the device BEFORE the (state, epoch) pair flips under the same lock
+every flush reads it under — a micro-batch is always served by exactly
+one generation, and a refused (poisoned) generation leaves serving on
+last-good with `refresh_failures` incremented. `rollback` re-publishes
+the state that was live before the most recent successful swap.
+
+Stationarity gate: a refresh only publishes when the drained telemetry
+actually shows exposure shortfall (`min_shortfall`). Compliant traffic
+teaches the lane nothing — λ_target degenerates to λ̂_served — so under
+a stationary compliant stream the lane never swaps and serving is
+bitwise identical to refresh-off (tests/test_refresh.py asserts this).
+The lane is deliberately one-sided (shortfall-driven); symmetric λ
+decay for over-satisfied constraints is future work.
+
+`refresh()` can be driven synchronously (every N requests — the
+deterministic mode the drift tests use) or from the background thread
+(`start(interval_s)`), which contains crashes: an exception inside the
+loop counts a refresh failure and the lane keeps running — it never
+takes serving down.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "RefreshLane",
+    "dual_refresh_targets",
+    "knn_ring_update",
+    "ridge_refresh",
+    "running_mean_update",
+]
+
+
+# ---------------------------------------------------------------------------
+# Pure update rules (property-tested in tests/test_refresh.py)
+# ---------------------------------------------------------------------------
+
+def dual_refresh_targets(lam, b, exposure, *, eta: float) -> np.ndarray:
+    """Projected dual-subgradient targets: one step of size `eta` along
+    b − exposure (the dual subgradient at the served λ̂), projected onto
+    λ ≥ 0. Under-exposed constraints push λ up, over-exposed ones relax
+    it, exactly-met ones return λ̂ unchanged."""
+    lam = np.asarray(lam, np.float32)
+    step = np.asarray(b, np.float32) - np.asarray(exposure, np.float32)
+    return np.maximum(lam + np.float32(eta) * step, 0.0).astype(np.float32)
+
+
+def knn_ring_update(X_db, lam_db, X_new, lam_new,
+                    cursor: int) -> tuple[np.ndarray, np.ndarray, int]:
+    """Append-with-evict for a frozen-shape KNN db: write the new rows
+    over the oldest ones at `cursor` (wrapping), return host copies of
+    the updated (X_db, lam_db) and the advanced cursor. When more new
+    rows arrive than the db holds, only the newest n_train survive —
+    the same rows a from-scratch fit on the trailing window would hold
+    (the append/evict parity property)."""
+    X_db = np.array(X_db)                   # host copies; inputs untouched
+    lam_db = np.array(lam_db)
+    X_new = np.asarray(X_new, X_db.dtype)
+    lam_new = np.asarray(lam_new, lam_db.dtype)
+    n_train = X_db.shape[0]
+    n = X_new.shape[0]
+    if n == 0:
+        return X_db, lam_db, cursor
+    if n > n_train:                         # only the newest rows survive
+        X_new, lam_new = X_new[n - n_train:], lam_new[n - n_train:]
+        cursor, n = (cursor + (n - n_train)) % n_train, n_train
+    idx = (cursor + np.arange(n)) % n_train
+    X_db[idx] = X_new
+    lam_db[idx] = lam_new
+    return X_db, lam_db, int((cursor + n) % n_train)
+
+
+def ridge_refresh(W, c, X_new, targets, *, mu: float = 32.0
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Anchored ridge re-solve on the augmented design x̃ = [x; 1]:
+    argmin_W̃ Σ‖y − W̃x̃‖² + μ‖W̃ − W̃_0‖²_F with W̃_0 = [W | c] the live
+    weights. Closed form (d+1 × d+1 solve): each sample is a rank-1
+    x̃x̃ᵀ Gram update, and as μ → ∞ the update vanishes — the anchor is
+    what carries history across refreshes."""
+    W = np.asarray(W, np.float64)
+    c = np.asarray(c, np.float64)
+    X_new = np.asarray(X_new, np.float64)
+    Y = np.asarray(targets, np.float64)
+    d = W.shape[1]
+    Xa = np.concatenate([X_new, np.ones((X_new.shape[0], 1))], axis=1)
+    G = mu * np.eye(d + 1) + Xa.T @ Xa                    # (d+1, d+1)
+    W0a = np.concatenate([W, c[:, None]], axis=1)         # (K, d+1)
+    rhs = mu * W0a.T + Xa.T @ Y                           # (d+1, K)
+    Wa = np.linalg.solve(G, rhs).T                        # (K, d+1)
+    return Wa[:, :d].astype(np.float32), Wa[:, d].astype(np.float32)
+
+
+def running_mean_update(mean_lam, weight: float, targets
+                        ) -> tuple[np.ndarray, float]:
+    """Running intercept: the live mean counts as `weight` prior
+    observations, the target rows average in. Returns (new mean,
+    new weight)."""
+    mean_lam = np.asarray(mean_lam, np.float64)
+    Y = np.asarray(targets, np.float64)
+    n = Y.shape[0]
+    new = (weight * mean_lam + Y.sum(axis=0)) / (weight + n)
+    return new.astype(np.float32), float(weight + n)
+
+
+# ---------------------------------------------------------------------------
+# The lane
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _TagBuffer:
+    """Telemetry rows accumulated for one predictor tag since its last
+    refresh. Bounded: only the newest `capacity` rows are kept."""
+
+    X: list = field(default_factory=list)
+    lam: list = field(default_factory=list)
+    exposure: list = field(default_factory=list)
+    b: list = field(default_factory=list)
+
+    def trim(self, capacity: int) -> None:
+        if len(self.X) > capacity:
+            for rows in (self.X, self.lam, self.exposure, self.b):
+                del rows[:len(rows) - capacity]
+
+
+class RefreshLane:
+    """Background refresh lane for one ServingEngine (see module doc).
+
+    eta             dual-subgradient step size.
+    capacity        max telemetry rows buffered per tag (newest win).
+    min_samples     rows required before a refresh will publish.
+    min_shortfall   stationarity gate: publish only if some buffered
+                    row's exposure shortfall sum exceeds this.
+    mu              ridge anchor weight (linear family).
+    mean_weight     prior weight of the live mean (mean family).
+    mlp_steps/lr    warm-start re-fit budget (mlp family).
+    """
+
+    def __init__(self, engine, *, eta: float = 0.5, capacity: int = 4096,
+                 min_samples: int = 8, min_shortfall: float = 0.0,
+                 mu: float = 32.0, mean_weight: float = 32.0,
+                 mlp_steps: int = 50, mlp_lr: float = 1e-2):
+        self.engine = engine
+        self.eta = float(eta)
+        self.capacity = int(capacity)
+        self.min_samples = int(min_samples)
+        self.min_shortfall = float(min_shortfall)
+        self.mu = float(mu)
+        self.mlp_steps = int(mlp_steps)
+        self.mlp_lr = float(mlp_lr)
+        self._lock = threading.Lock()
+        self._buf: dict[str, _TagBuffer] = {}
+        self._mean_weight: dict[str, float] = {}
+        self._default_mean_weight = float(mean_weight)
+        self._knn_cursor: dict[str, int] = {}
+        # the state that was live before the most recent successful
+        # swap, per tag — what rollback() re-publishes.
+        self._last_good: dict[str, dict] = {}
+        self._thread: threading.Thread | None = None
+        self._stop_evt = threading.Event()
+        engine.attach_refresh(self)
+
+    # -- telemetry ingest (called by engine._build_result) -------------------
+
+    def observe(self, tag: str, *, X, lam, exposure, b) -> None:
+        """One served request's telemetry row: covariates, the λ̂ the
+        executable actually used, and the audited exposure against the
+        thresholds — all at the tag's predictor width, all host numpy
+        (the batch's outputs were already materialized)."""
+        with self._lock:
+            buf = self._buf.setdefault(tag, _TagBuffer())
+            buf.X.append(np.asarray(X, np.float32))
+            buf.lam.append(np.asarray(lam, np.float32))
+            buf.exposure.append(np.asarray(exposure, np.float32))
+            buf.b.append(np.asarray(b, np.float32))
+            buf.trim(self.capacity)
+
+    def pending(self, tag: str) -> int:
+        """Telemetry rows buffered for `tag` since its last refresh."""
+        with self._lock:
+            buf = self._buf.get(tag)
+            return 0 if buf is None else len(buf.X)
+
+    # -- refresh -------------------------------------------------------------
+
+    def refresh(self, tag: str | None = None) -> dict:
+        """Drain the buffered telemetry and, where it warrants one,
+        publish a new predictor generation. Never raises on a failed
+        publish: the engine refuses bad state, `refresh_failures`
+        increments, serving stays on last-good, and the report says
+        what happened. Returns {tag: report} (one tag when given)."""
+        tags = ([tag] if tag is not None
+                else sorted(self._buf))
+        return {t: self._refresh_tag(t) for t in tags}
+
+    def _drain(self, tag: str):
+        with self._lock:
+            buf = self._buf.pop(tag, None)
+        if buf is None or not buf.X:
+            return None
+        return (np.stack(buf.X), np.stack(buf.lam),
+                np.stack(buf.exposure), np.stack(buf.b))
+
+    def _refresh_tag(self, tag: str) -> dict:
+        report = {"swapped": False, "epoch": None, "n": 0,
+                  "max_shortfall": 0.0, "reason": None}
+        drained = self._drain(tag)
+        if drained is None:
+            report["reason"] = "no-telemetry"
+            return report
+        X, lam, exposure, b = drained
+        report["n"] = int(X.shape[0])
+        if X.shape[0] < self.min_samples:
+            report["reason"] = "below-min-samples"
+            return report
+        shortfall = np.clip(b - exposure, 0.0, None).sum(axis=1)
+        report["max_shortfall"] = float(shortfall.max())
+        if report["max_shortfall"] <= self.min_shortfall:
+            # stationarity gate: compliant traffic teaches nothing —
+            # publishing would still perturb KNN neighbourhoods, so
+            # don't (bitwise neutrality under a stationary stream).
+            report["reason"] = "no-shortfall"
+            return report
+        targets = dual_refresh_targets(lam, b, exposure, eta=self.eta)
+        try:
+            new_state = self._updated_state(tag, X, targets)
+            prev = self.engine.predictor_state_of(tag)
+            epoch = self.engine.swap_predictor(tag, new_state)
+        except Exception as e:            # noqa: BLE001 — lane must survive
+            self.engine.metrics.on_refresh_failure(tag)
+            report["reason"] = f"refused: {e}"
+            return report
+        self._last_good[tag] = prev
+        report["swapped"] = True
+        report["epoch"] = epoch
+        return report
+
+    def _updated_state(self, tag: str, X: np.ndarray,
+                       targets: np.ndarray) -> dict:
+        """The tag's next-generation state dict, built on the LIVE one
+        — per-family incremental update, frozen shapes throughout."""
+        from repro.core.predictors import (  # deferred: keep DAG flat
+            KNNLambdaPredictor,
+            LinearLambdaPredictor,
+            MeanLambdaPredictor,
+            MLPLambdaPredictor,
+        )
+
+        template = self.engine.predictor_template(tag)
+        state = self.engine.predictor_state_of(tag)
+        if isinstance(template, KNNLambdaPredictor):
+            cursor = self._knn_cursor.get(tag, 0)
+            X_db, lam_db, cursor = knn_ring_update(
+                state["X_db"], state["lam_db"], X, targets, cursor)
+            self._knn_cursor[tag] = cursor
+            return {"X_db": X_db, "lam_db": lam_db}
+        if isinstance(template, LinearLambdaPredictor):
+            W, c = ridge_refresh(state["W"], state["c"], X, targets,
+                                 mu=self.mu)
+            return {"W": W, "c": c}
+        if isinstance(template, MeanLambdaPredictor):
+            weight = self._mean_weight.get(tag, self._default_mean_weight)
+            mean, weight = running_mean_update(
+                state["mean_lam"], weight, targets)
+            self._mean_weight[tag] = weight
+            return {"mean_lam": mean}
+        if isinstance(template, MLPLambdaPredictor):
+            refit = MLPLambdaPredictor.fit(
+                X, targets, init_params=state["params"],
+                num_steps=self.mlp_steps, lr=self.mlp_lr)
+            return {"params": refit.params}
+        raise TypeError(f"no refresh rule for "
+                        f"{type(template).__name__}")
+
+    def rollback(self, tag: str) -> int:
+        """Re-publish the generation that was live before the most
+        recent successful swap (a NEW epoch — the fence still applies;
+        in-flight batches finish on whatever they were dispatched
+        against). Raises KeyError if this lane never swapped `tag`."""
+        prev = self._last_good.get(tag)
+        if prev is None:
+            raise KeyError(f"no pre-swap state recorded for {tag!r}")
+        return self.engine.swap_predictor(tag, prev)
+
+    # -- background thread ---------------------------------------------------
+
+    def start(self, interval_s: float) -> None:
+        """Run `refresh()` every `interval_s` on a daemon thread.
+        Crash containment: an exception inside the loop (refresh() only
+        raises on lane bugs, never on refused swaps) counts one refresh
+        failure and the loop continues — serving is never taken down by
+        its refresh lane."""
+        if self._thread is not None:
+            raise RuntimeError("refresh lane already started")
+        self._stop_evt.clear()
+
+        def loop():
+            while not self._stop_evt.wait(interval_s):
+                try:
+                    self.refresh()
+                except Exception:         # noqa: BLE001 — contain crashes
+                    self.engine.metrics.on_refresh_failure("_lane")
+        self._thread = threading.Thread(
+            target=loop, name="refresh-lane", daemon=True)
+        self._thread.start()
+
+    def stop(self, *, final_refresh: bool = False) -> None:
+        """Stop the background thread (idempotent). With
+        `final_refresh`, drain the remaining telemetry through one last
+        synchronous refresh after the thread exits."""
+        self._stop_evt.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30.0)
+            self._thread = None
+        if final_refresh:
+            self.refresh()

@@ -97,6 +97,36 @@ def make_stream(scenarios=DEFAULT_MIX, *, n_requests: int = 256,
             for rid, i in enumerate(picks)]
 
 
+def make_drift_stream(spec, *, tag: str, n_requests: int = 256,
+                      m1: int = 256, m2: int = 16, K: int = 4,
+                      d_cov: int = 20, topic_rate: float = 0.15,
+                      b_frac: float = 0.03, seed: int = 0
+                      ) -> list[RankRequest]:
+    """A single-surface covariate stream whose distribution drifts
+    mid-stream per `spec` (data.synthetic.DriftSpec): request i sits at
+    stream fraction i/(n-1) on the drift ramp. Fixed geometry — the
+    drift scenarios isolate DISTRIBUTION shift from shape churn, so a
+    refresh-on/refresh-off comparison sees identical bucketing and
+    batch composition. `tag` must name a registered predictor (the
+    stream carries covariates, never raw λ)."""
+    from repro.data.synthetic import drift_request_params  # deferred
+
+    if tag == LAM_TAG:
+        raise ValueError("drift streams are covariate streams: pass a "
+                         "predictor tag, not the raw-lam tag")
+    rng = np.random.default_rng(seed)
+    denom = max(n_requests - 1, 1)
+    reqs = []
+    for rid in range(n_requests):
+        p = drift_request_params(
+            rng, spec, rid / denom, m1=m1, m2=m2, K=K, d_cov=d_cov,
+            topic_rate=topic_rate, b_frac=b_frac)
+        reqs.append(RankRequest(rid=rid, u=p["u"], a=p["a"], b=p["b"],
+                                m2=m2, X=p["X"], tag=tag,
+                                gamma=p["gamma"]))
+    return reqs
+
+
 # ---------------------------------------------------------------------------
 # Paced open-loop load generation
 # ---------------------------------------------------------------------------

@@ -6,6 +6,35 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+class FrozenClock:
+    """Deterministic engine clock for timing-sensitive tests: returns
+    `t`, advancing only by `tick` per call (0 = truly frozen) or by
+    explicit `advance`. Injected as ServingEngine(clock=...) it makes
+    deadline hits, admission EWMA seeding, and flush triggers
+    reproducible on any CI box — a frozen clock never fires deadline
+    flushes, so batch composition is a pure function of the stream."""
+
+    def __init__(self, t0: float = 0.0, tick: float = 0.0):
+        self.t = float(t0)
+        self.tick = float(tick)
+
+    def __call__(self) -> float:
+        t = self.t
+        self.t += self.tick
+        return t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+    def sleep(self, dt: float) -> None:
+        self.advance(dt)
+
+
+@pytest.fixture
+def frozen_clock():
+    return FrozenClock()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.key(0)

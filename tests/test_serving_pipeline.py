@@ -19,12 +19,15 @@ import time
 import numpy as np
 import pytest
 
+from conftest import FrozenClock
+
 from repro.core.constraints import dcg_discount
 from repro.core.predictors import KNNLambdaPredictor, MeanLambdaPredictor
 from repro.serving import (
     AdmissionController,
     ExecutionPipeline,
     RankRequest,
+    RefreshLane,
     Scenario,
     ServingEngine,
     Shed,
@@ -407,3 +410,185 @@ def test_staging_buffers_are_not_rewritten_while_in_flight():
     assert len(seen) == 4
     assert len(set(seen[:2])) == 2              # adjacent flushes differ
     assert len(set(seen)) <= eng.pipeline_depth + 2   # bounded ring: recycled
+
+
+# ---------------------------------------------------------------------------
+# Refresh-lane fault injection: crashes, races, repeated failures
+# ---------------------------------------------------------------------------
+
+
+def _knn_cov_engine(*, depth, max_batch=8, seed=20, admission=None,
+                    clock=None, max_wait_ms=1e9):
+    """Covariate-stream engine + request list for the refresh fault
+    tests (b_frac=0.3 guarantees exposure shortfall, so a healthy
+    refresh always has something to publish)."""
+    rng = np.random.default_rng(seed)
+    d, K = 8, 3
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(32, d)).astype(np.float32),
+        np.abs(rng.normal(size=(32, K))).astype(np.float32), k=5)
+    eng = ServingEngine(max_batch=max_batch, max_wait_ms=max_wait_ms,
+                        pipeline_depth=depth, admission=admission,
+                        clock=clock or time.perf_counter)
+    eng.register_predictor("knn", knn, d_cov=d)
+    mix = (Scenario("cov", m1=128, m2=8, K=K, tag="knn", d_cov=d,
+                    b_frac=0.3),)
+    return eng, make_stream(mix, n_requests=24, seed=seed + 1), knn
+
+
+def test_refresh_crash_mid_swap_leaves_serving_on_last_good():
+    """The update rule explodes while a batch is in flight: the refresh
+    reports the failure, `refresh_failures` increments, the epoch never
+    moves, and every in-flight future resolves to bitwise the result
+    the never-refreshed engine computes."""
+    eng, reqs, knn = _knn_cov_engine(depth=2, clock=FrozenClock())
+    lane = RefreshLane(eng, min_samples=4)
+    eng.warmup(reqs)
+    eng.serve_stream(reqs[:12], warmup=False)    # telemetry accumulates
+    assert lane.pending("knn") == 12
+
+    def boom(tag, X, targets):
+        raise RuntimeError("refresh exploded mid-update")
+
+    lane._updated_state = boom
+    futures = [eng.submit_future(r) for r in reqs[12:20]]  # batch in flight
+    rep = lane.refresh("knn")["knn"]
+    assert not rep["swapped"]
+    assert rep["reason"].startswith("refused: refresh exploded")
+    assert eng.metrics.refresh_failures == 1
+    assert eng.predictor_epoch("knn") == 0       # still on last-good
+    eng.drain()
+    assert all(f.done() for f in futures)
+
+    cold, _, _ = _knn_cov_engine(depth=0, clock=FrozenClock())
+    cold.serve_stream(reqs[:12])
+    ref = {r.rid: r for r in cold.serve_stream(reqs[12:20], warmup=False)}
+    for fut in futures:
+        res = fut.result(timeout=5.0)
+        assert res.epoch == 0
+        np.testing.assert_array_equal(res.perm, ref[res.rid].perm)
+        np.testing.assert_array_equal(res.exposure, ref[res.rid].exposure)
+        assert res.utility == ref[res.rid].utility
+    eng.close()
+
+
+def test_swap_racing_drain_and_sheds_never_deadlocks():
+    """Hot swaps hammering the epoch fence while slow flushes are in
+    flight and admission sheds arrive on top: drain completes, every
+    future resolves exactly once, and the served/shed split is exact."""
+    eng, reqs, knn = _knn_cov_engine(depth=2, max_batch=4, max_wait_ms=2.0,
+                                     admission=AdmissionController())
+    eng.warmup(reqs)
+    _inject_faults(eng, delay_s=0.02)            # every flush 20 ms slow
+    from repro.core.predictors import predictor_state
+    import jax
+    base = jax.device_get(predictor_state(knn))
+
+    stop = threading.Event()
+    swap_errors = []
+
+    def swapper():
+        i = 0
+        while not stop.is_set():
+            i += 1
+            try:
+                eng.swap_predictor("knn", {
+                    "X_db": base["X_db"] + np.float32(1e-4 * i),
+                    "lam_db": base["lam_db"]})
+            except Exception as e:               # noqa: BLE001
+                swap_errors.append(e)
+            time.sleep(0.002)
+
+    t_swap = threading.Thread(target=swapper)
+    t_swap.start()
+    fired = {r.rid: 0 for r in reqs[:16]}
+    futures = []
+    for r in reqs[:8]:                           # generous budget: admitted
+        r.budget_s = 10.0
+        fut = eng.submit_future(r)
+        fut.add_done_callback(lambda f: fired.__setitem__(
+            f.rid, fired[f.rid] + 1))
+        futures.append(fut)
+    for r in reqs[8:16]:                         # impossible budget: shed
+        r.budget_s = 1e-4
+        fut = eng.submit_future(r)
+        fut.add_done_callback(lambda f: fired.__setitem__(
+            f.rid, fired[f.rid] + 1))
+        futures.append(fut)
+    drained = []
+    t_drain = threading.Thread(target=lambda: drained.extend(eng.drain()))
+    t_drain.start()
+    t_drain.join(timeout=30.0)
+    stop.set()
+    t_swap.join(timeout=5.0)
+    assert not t_drain.is_alive()                # drain never deadlocks
+    assert not t_swap.is_alive()
+    assert not swap_errors
+    assert all(f.done() for f in futures)
+    assert all(n == 1 for n in fired.values())   # exactly-once resolution
+    served = [x for x in drained if not isinstance(x, Shed)]
+    sheds = [x for x in drained if isinstance(x, Shed)]
+    assert sorted(x.rid for x in served) == [r.rid for r in reqs[:8]]
+    assert sorted(x.rid for x in sheds) == [r.rid for r in reqs[8:16]]
+    # no generation left pinned once everything materialized
+    assert eng._inflight_gens == {}
+    eng.close()
+
+
+def test_repeated_failed_refreshes_increment_counter_without_wedging():
+    """Poisoned generation after poisoned generation: the engine
+    refuses each one, `refresh_failures` counts them all, the lane
+    never wedges — and the next HEALTHY refresh still swaps."""
+    eng, reqs, knn = _knn_cov_engine(depth=1, max_batch=4,
+                                     clock=FrozenClock())
+    lane = RefreshLane(eng, min_samples=2)
+    eng.warmup(reqs)
+    orig = lane._updated_state
+
+    def poisoned(tag, X, targets):
+        state = orig(tag, X, targets)
+        return {k: np.full_like(np.asarray(v), np.nan)
+                for k, v in state.items()}
+
+    lane._updated_state = poisoned
+    for i in range(3):
+        eng.serve_stream(reqs[4 * i:4 * (i + 1)], warmup=False)
+        rep = lane.refresh("knn")["knn"]
+        assert not rep["swapped"] and "poisoned" in rep["reason"]
+        assert eng.metrics.refresh_failures == i + 1
+        assert eng.predictor_epoch("knn") == 0
+    lane._updated_state = orig                   # lane recovers
+    eng.serve_stream(reqs[12:16], warmup=False)
+    rep = lane.refresh("knn")["knn"]
+    assert rep["swapped"] and rep["epoch"] == 1
+    out = eng.serve_stream(reqs[16:], warmup=False)
+    assert sorted(r.rid for r in out) == [r.rid for r in reqs[16:]]
+    assert all(r.epoch == 1 for r in out)
+    assert eng.metrics.refresh_failures == 3
+    assert eng.metrics.compiles_post_warmup == 0
+    eng.close()
+
+
+def test_background_lane_crash_is_contained():
+    """A crash inside the background loop itself (a lane bug, not a
+    refused swap) counts a failure and the loop keeps running — serving
+    is never taken down by its refresh lane."""
+    eng, reqs, _ = _knn_cov_engine(depth=0, clock=FrozenClock())
+    lane = RefreshLane(eng)
+    crashes = []
+
+    def crashing_refresh(tag=None):
+        crashes.append(1)
+        raise RuntimeError("lane bug")
+
+    lane.refresh = crashing_refresh
+    lane.start(interval_s=0.001)
+    deadline = time.monotonic() + 5.0
+    while len(crashes) < 2 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    lane.stop()
+    assert len(crashes) >= 2                     # crashed, kept looping
+    assert eng.metrics.refresh_failures >= 2
+    out = eng.serve_stream(reqs[:4])             # engine unharmed
+    assert sorted(r.rid for r in out) == [r.rid for r in reqs[:4]]
+    eng.close()
