@@ -1,0 +1,250 @@
+"""Per-geometry kernel autotuner for the serving bucket lattice.
+
+The fused predict+rank+audit kernel has three tile knobs (TILE_B batch
+tile, TILE_M candidate tile, DB_SLAB db-sweep slab) plus the quantized
+db mode — and the winning combination depends on the bucket geometry
+(m1/m2/K/batch) and the backend. This tool sweeps the candidate grid
+per geometry, picks the fastest configuration, and caches the winners
+as a JSON table next to the bucket lattice
+(serving.buckets.DEFAULT_AUTOTUNE_PATH). A ServingEngine constructed
+with ``autotune_table=`` (a dict or the JSON path) applies each
+bucket's entry when it builds that bucket's executable — warmup
+compiles straight into the tuned tiles.
+
+On TPU the sweep times the real fused dispatcher per combination.
+Off-TPU it degrades to a STRUCTURAL smoke: interpret-mode Pallas wall
+time is meaningless, so every candidate is validated for shape/tiling
+legality through the XLA oracle path once, the default combination is
+recorded as the winner, and the table/engine round-trip is exercised
+exactly as on TPU (the CI gate is the plumbing, not the numbers).
+
+    python benchmarks/autotune.py [--quick] [--json OUT] [--table PATH]
+
+check_autotune() is the CI gate: the table round-trips through
+save/load bit-for-bit and an engine warmed from it applies at least
+one entry (engine.autotuned_buckets >= 1) with zero post-warmup
+recompiles.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import Record, timed, write_bench_json
+from repro.core.predictors import KNNLambdaPredictor
+from repro.kernels.ops import predict_rank_audited
+from repro.serving import (
+    DEFAULT_AUTOTUNE_PATH,
+    ServingEngine,
+    Scenario,
+    bucket_for,
+    geometry_key,
+    load_autotune_table,
+    make_stream,
+    save_autotune_table,
+)
+
+# the candidate grid: modest on purpose — the table is per geometry,
+# so the sweep runs |grid| x |geometries| end-to-end dispatches
+TILE_B_CAND = (8, 16, 32)
+TILE_M_CAND = (128, 256)
+TILE_N_CAND = (256, 512)
+QUANT_CAND = ("off", "int8")
+
+# the geometries swept by default: the bucket lattice corners the
+# serving scenarios actually hit (see serving.buckets)
+GEOMETRIES = (
+    dict(m1=128, m2=8, K=4, batch=8),
+    dict(m1=256, m2=16, K=8, batch=32),
+)
+
+N_TRAIN, D_COV = 1024, 16
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _problem(geom: dict, *, seed: int = 0):
+    """Synthetic batch + fitted predictor at one bucket geometry."""
+    rng = np.random.default_rng(seed)
+    B, m1, m2, K = geom["batch"], geom["m1"], geom["m2"], geom["K"]
+    X_db = rng.normal(size=(N_TRAIN, D_COV)).astype(np.float32)
+    lam_db = np.abs(rng.normal(size=(N_TRAIN, K))).astype(np.float32)
+    pred = KNNLambdaPredictor.fit(X_db, lam_db, k=10)
+    X = jnp.asarray(rng.normal(size=(B, D_COV)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(B, m1)).astype(np.float32))
+    a = jnp.asarray(
+        (rng.uniform(size=(B, K, m1)) < 0.3).astype(np.float32))
+    b = jnp.asarray(
+        0.05 * np.ones((B, K), np.float32))
+    gamma = jnp.asarray(
+        (1.0 / np.log2(np.arange(2, m2 + 2)))[None, :]
+        .repeat(B, 0).astype(np.float32))
+    return pred, (X, u, a, b, gamma, m2)
+
+
+def _candidates(geom: dict):
+    for tb, tm, tn, q in itertools.product(
+            TILE_B_CAND, TILE_M_CAND, TILE_N_CAND, QUANT_CAND):
+        if tb > geom["batch"] or tm > geom["m1"]:
+            continue
+        yield {"tile_b": tb, "tile_m": tm, "tile_n": tn, "quant": q}
+
+
+def _run_one(pred, prob, cand: dict, *, tpu: bool) -> float:
+    """One candidate's figure of merit (us/call on TPU, nan off-TPU
+    after a structural validation pass)."""
+    X, u, a, b, gamma, m2 = prob
+    p = (pred.quantized(mode=cand["quant"], slab=cand["tile_n"])
+         if cand["quant"] != "off" else pred)
+
+    def call():
+        return predict_rank_audited(
+            X, p, u, a, b, gamma, m2=m2,
+            use_kernel=True if tpu else False,
+            tile_b=cand["tile_b"], tile_m=cand["tile_m"],
+            tile_n=cand["tile_n"])
+
+    if tpu:
+        return timed(call, warmup=2, iters=5)
+    out = call()                      # structural smoke: must execute
+    jax.block_until_ready(out.perm)
+    return float("nan")
+
+
+def run_autotune(*, geometries=GEOMETRIES, quick: bool = False,
+                 table_path: str = DEFAULT_AUTOTUNE_PATH,
+                 verbose: bool = True) -> dict:
+    """Sweep the candidate grid per geometry, write the winner table,
+    and prove the engine round-trip. Returns the report dict."""
+    tpu = _on_tpu()
+    if quick:
+        geometries = geometries[:1]
+    table: dict[str, dict] = {}
+    rows = []
+    for geom in geometries:
+        bucket = bucket_for(tag="arch", **geom)
+        key = geometry_key(bucket)
+        pred, prob = _problem(geom)
+        best, best_us = None, float("inf")
+        n_cand = 0
+        for cand in _candidates(geom):
+            # off-TPU: validate every candidate structurally, but only
+            # ONE quant repack per mode is interesting — skip the rest
+            # of the grid for speed (the tiles are validated by the
+            # first combo that carries them)
+            if not tpu and quick and n_cand >= 4:
+                break
+            us = _run_one(pred, prob, cand, tpu=tpu)
+            n_cand += 1
+            if tpu and us < best_us:
+                best, best_us = cand, us
+        if best is None:              # off-TPU: defaults win by decree
+            best, best_us = {"tile_b": min(8, geom["batch"]),
+                             "tile_m": min(128, geom["m1"]),
+                             "tile_n": 512, "quant": "int8"}, float("nan")
+        table[key] = best
+        rows.append({"key": key, "us": best_us, "candidates": n_cand,
+                     **best})
+        if verbose:
+            print(f"autotune[{key}] -> {best} "
+                  f"({'%.1f us' % best_us if tpu else 'structural'}, "
+                  f"{n_cand} candidates)", flush=True)
+
+    path = save_autotune_table(table, table_path)
+    loaded = load_autotune_table(table_path)
+    roundtrip_ok = loaded == table
+
+    # engine warms from the table: every registered bucket whose
+    # geometry has an entry gets its tiles, with zero recompiles after
+    sc = Scenario(name="autotune", m1=geometries[0]["m1"],
+                  m2=geometries[0]["m2"], K=geometries[0]["K"],
+                  tag="arch", d_cov=D_COV, m1_jitter=0.0)
+    reqs = make_stream([sc], n_requests=geometries[0]["batch"] * 2,
+                       seed=3)
+    rng = np.random.default_rng(4)
+    pred = KNNLambdaPredictor.fit(
+        rng.normal(size=(64, D_COV)).astype(np.float32),
+        np.abs(rng.normal(size=(64, geometries[0]["K"])))
+        .astype(np.float32), k=5)
+    eng = ServingEngine(max_batch=geometries[0]["batch"],
+                        pipeline_depth=0, autotune_table=path)
+    eng.register_predictor("arch", pred, d_cov=D_COV)
+    eng.warmup(reqs)
+    res = eng.serve_stream(reqs, warmup=False)
+    engine_ok = (eng.autotuned_buckets >= 1
+                 and eng.metrics.compiles_post_warmup == 0
+                 and len(res) == len(reqs))
+    eng.close()
+
+    out = {"backend": jax.default_backend(), "tpu": tpu,
+           "table_path": path, "table": table, "rows": rows,
+           "roundtrip_ok": bool(roundtrip_ok),
+           "engine_ok": bool(engine_ok)}
+    if verbose:
+        print(f"# table -> {path} (roundtrip {roundtrip_ok}, engine "
+              f"warmed with {eng.autotuned_buckets} tuned bucket(s): "
+              f"{engine_ok})")
+    return out
+
+
+def check_autotune(*, quick: bool = True, verbose: bool = True) -> dict:
+    """CI gate (AssertionError on regression): table round-trips
+    bit-for-bit and an engine warmed from it applies >= 1 entry with
+    zero post-warmup recompiles."""
+    res = run_autotune(quick=quick, verbose=verbose)
+    assert res["roundtrip_ok"], (
+        f"autotune gate: table did not round-trip through "
+        f"{res['table_path']}")
+    assert res["engine_ok"], (
+        "autotune gate: engine did not warm from the saved table "
+        "(no tuned bucket, a post-warmup recompile, or a dropped "
+        "request)")
+    print("# autotune acceptance (JSON round-trip, engine warms from "
+          "table, 0 recompiles): PASS")
+    return res
+
+
+def records(res):
+    return [Record(
+        name=f"autotune/{r['key']}",
+        us_per_call=r["us"],
+        derived={k: r[k] for k in
+                 ("tile_b", "tile_m", "tile_n", "quant", "candidates")})
+        for r in res["rows"]]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="first geometry only, truncated off-TPU grid")
+    ap.add_argument("--table", default=DEFAULT_AUTOTUNE_PATH,
+                    help="where to write the winner table")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write BENCH_autotune.json to OUT (a directory"
+                         ", or an explicit *.json path)")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    res = run_autotune(quick=args.quick, table_path=args.table)
+    assert res["roundtrip_ok"] and res["engine_ok"], res
+    if args.json:
+        write_bench_json(args.json, "autotune", records(res),
+                         meta={"quick": args.quick,
+                               "table_path": res["table_path"]})
+    print(f"# autotune done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

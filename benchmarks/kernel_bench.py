@@ -345,6 +345,222 @@ def run_knn_fused(n, m1, K, m2, *, d=20, n_db=8192, k=10, iters=7):
     }
 
 
+def _knn_quant_traffic_model(B: int, N: int, D: int, K: int,
+                              *, slab: int = 512, k: int = 10) -> dict:
+    """Per-micro-batch db-sweep HBM bytes, f32 vs quantized storage.
+
+    The sweep streams, per resident query tile, the db rows plus the λ
+    payload. Quantization changes only the ROW stream: f32 rows are
+    N·D·4 bytes; int8 rows are N·D·1 plus the exact |x̃|² sidecar
+    (N·4) and the per-slab scales (N/slab · 4); bf16 rows are N·D·2
+    plus the same sidecars. The λ payload (N·K·4) and the tiny
+    survivor re-score traffic (B·(k+QUANT_EXTRA)·D·4, already in VMEM
+    as kernel payload — counted 0 here) are identical across modes, so
+    the headline ratio is reported on the row stream (what the
+    tentpole optimizes) and the whole-sweep ratio alongside."""
+    from repro.kernels.ops import knn_lambda_tile_q
+
+    sweeps = -(-B // knn_lambda_tile_q(B))
+    sidecar = N * 4 + -(-N // slab) * 4           # y2_q + per-slab scales
+    rows_f32 = sweeps * N * D * 4
+    rows_int8 = sweeps * (N * D * 1 + sidecar)
+    rows_bf16 = sweeps * (N * D * 2 + sidecar)
+    lam_stream = sweeps * N * K * 4
+    return {
+        "db_rows_f32_bytes": rows_f32,
+        "db_rows_int8_bytes": rows_int8,
+        "db_rows_bf16_bytes": rows_bf16,
+        "rows_ratio_f32_over_int8": round(rows_f32 / rows_int8, 3),
+        "rows_ratio_f32_over_bf16": round(rows_f32 / rows_bf16, 3),
+        "sweep_ratio_f32_over_int8": round(
+            (rows_f32 + lam_stream) / (rows_int8 + lam_stream), 3),
+        "kernel_launches_quant": 1,
+    }
+
+
+def run_knn_quant(n, m1, K, m2, *, d=20, n_db=8192, k=10, iters=7):
+    """Quantized-db sweep section: the storage-traffic model above plus
+    a measured CPU stand-in — the jitted XLA quant-scan path
+    (predictors.knn_predict_quant: int8 slab sweep + exact survivor
+    re-score) against the f32 chunked scan on the same db. CPU wall
+    does not see the MXU/HBM win (interpret-mode Pallas would be
+    meaningless, and XLA CPU widens int8 dots anyway), so the wall
+    numbers are recorded for trajectory, not gated; the byte model is
+    what CI gates (check_knn_quant)."""
+    from repro.core.predictors import (
+        KNNLambdaPredictor, knn_predict_chunked, knn_predict_quant)
+
+    ks = jax.random.split(jax.random.key(37), 3)
+    X = jax.random.normal(ks[0], (n, d))
+    X_tr = jax.random.uniform(ks[1], (n_db, d))
+    lam_tr = jnp.abs(jax.random.normal(ks[2], (n_db, K)))
+    pred = KNNLambdaPredictor.fit(X_tr, lam_tr, k=k)
+    slab = min(512, n_db)
+    predq = pred.quantized(mode="int8", slab=slab)
+
+    f32_j = jax.jit(lambda X: knn_predict_chunked(
+        pred.X_db, pred.lam_db, X, k=k, chunk=slab))
+    q_j = jax.jit(lambda X: knn_predict_quant(
+        predq.X_q, predq.q_scale, predq.y2_q, predq.lam_db, X, k=k,
+        mode="int8"))
+    f32_us = timed(lambda: f32_j(X), iters=iters)
+    q_us = timed(lambda: q_j(X), iters=iters)
+    model = _knn_quant_traffic_model(n, n_db, d, K, slab=slab, k=k)
+    return {
+        "name": f"knn_quant/d={d}/K={K}/n={n}/n_db={n_db}",
+        "us": q_us,
+        "derived": {
+            **model,
+            "us_f32_scan": round(f32_us, 1),
+            "wall_f32_over_quant": round(f32_us / q_us, 3),
+        },
+    }
+
+
+def check_knn_quant() -> None:
+    """Quantized-db kernel health gate (CI smoke): raises on any
+    regression.
+
+    1. parity sweep: the int8 engine path (quantized predictor through
+       ops.predict_rank_audited — the quantized single-grid kernel)
+       matches the quantized oracle (ref.predict_rank_audited_ref over
+       the same packed arrays) BITWISE on perm/utility/exposure/
+       compliant (λ̂ to 1-ulp) for both quant modes, at a slab dividing
+       n_train and one that does not — INCLUDING a db with planted
+       near-ties that force the margin-guard fallback (guard fires,
+       selection still exact).
+    2. lossless bitwise: on an int8-representable db the int8 engine's
+       RankingOutput — λ̂ included — is bit-for-bit the f32 engine's.
+    3. launches: the quantized route engages the quantized single-grid
+       kernel exactly once per batch (kernel_launches_per_batch == 1.0
+       in a fused-executor engine serving a quantized predictor).
+    4. bytes: the storage model gives int8 >= 2x fewer db-row bytes
+       than f32 at every swept geometry.
+    """
+    import repro.kernels.ops as ops_mod
+    from repro.core.predictors import KNNLambdaPredictor
+    from repro.kernels.ops import knn_rank_audited
+    from repro.serving import Scenario, ServingEngine, make_stream
+
+    n, m1, K, m2, d, n_db = 8, 640, 4, 16, 12, 600
+    ks = jax.random.split(jax.random.key(41), 7)
+    u = jax.random.uniform(ks[0], (n, m1), minval=1.0, maxval=5.0)
+    a = (jax.random.uniform(ks[1], (n, K, m1)) < 0.15).astype(jnp.float32)
+    b = jnp.abs(jax.random.normal(ks[2], (n, K)))
+    gamma = jnp.abs(jax.random.normal(ks[3], (n, m2)))
+    X = jax.random.normal(ks[4], (n, d))
+    X_tr = np.asarray(jax.random.uniform(ks[5], (n_db, d)))
+    lam_tr = jnp.abs(jax.random.normal(ks[6], (n_db, K)))
+
+    # planted near-tie: two db rows closer together than the query-
+    # quantization error around query 0's neighbourhood — forces the
+    # margin guard on at least one row of the parity sweep
+    X_adv = X_tr.copy()
+    X_adv[50] = np.asarray(X[0]) + 0.31
+    X_adv[51] = X_adv[50] + 1e-4
+
+    for X_base in (X_tr, X_adv):
+        base = KNNLambdaPredictor.fit(
+            X_base.astype(np.float32), lam_tr, k=5)
+        for mode in ("int8", "bf16"):
+            for slab in (200, 512):        # divides 600 / does not
+                pred = base.quantized(mode=mode, slab=slab)
+                got = ops_mod.predict_rank_audited(
+                    X, pred, u, a, b, gamma, m2=m2)
+                # the oracle under jit: eager jnp.sum reduces in a
+                # different order than the compiled audit (1-ulp in
+                # utility), and the contract is vs the COMPILED oracle
+                want = jax.jit(
+                    lambda X_, u_, a_, b_, g_, p_=pred:
+                    ref.predict_rank_audited_ref(
+                        X_, p_, u_, a_, b_, g_, m2))(X, u, a, b, gamma)
+                w = dict(zip(("vals", "perm", "utility", "exposure",
+                              "compliant", "lam"), want))
+                for f in ("perm", "utility", "exposure", "compliant"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(got, f)), np.asarray(w[f]),
+                        err_msg=f"quant parity broke on {f} "
+                                f"({mode}, slab={slab})")
+                np.testing.assert_allclose(
+                    np.asarray(got.lam), np.asarray(w["lam"]),
+                    rtol=2e-7, atol=2e-7,
+                    err_msg=f"quant λ̂ drifted ({mode}, slab={slab})")
+
+    # forced fallback is observable: the adversarial db fires the guard
+    adv = KNNLambdaPredictor.fit(
+        X_adv.astype(np.float32), lam_tr, k=5).quantized(
+            mode="int8", slab=200)
+    _, guard = knn_rank_audited(
+        X, adv.X_db, adv.lam_db, u, a, b, gamma, k=5, m2=m2,
+        quant="int8", X_q=adv.X_q, q_scale=adv.q_scale, y2_q=adv.y2_q,
+        tile_n=200, return_guard=True)
+    if int(np.asarray(guard).sum()) < 1:
+        raise AssertionError(
+            "quant guard regression: planted near-tie did not force "
+            "the margin-guard fallback")
+
+    # lossless db -> int8 engine bitwise == f32 engine (λ̂ included)
+    rng = np.random.default_rng(7)
+    X_ll = np.clip(np.round(rng.uniform(-63.0, 63.0, size=(n_db, d))
+                            * 2.0) / 2.0, -63.5, 63.5)
+    X_ll[::200] = 63.5                      # every slab hits the absmax
+    ll = KNNLambdaPredictor.fit(X_ll.astype(np.float32), lam_tr, k=5)
+    llq = ll.quantized(mode="int8", slab=200)
+    X_q32 = jnp.asarray(np.round(
+        rng.uniform(-10, 10, size=(n, d)) * 2.0).astype(np.float32) / 2.0)
+    o32 = ops_mod.predict_rank_audited(X_q32, ll, u, a, b, gamma, m2=m2)
+    oq = ops_mod.predict_rank_audited(X_q32, llq, u, a, b, gamma, m2=m2)
+    for f in ("perm", "utility", "exposure", "compliant", "lam"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(o32, f)), np.asarray(getattr(oq, f)),
+            err_msg=f"lossless int8-vs-f32 engine broke on {f}")
+
+    # fused-executor engine on a quantized predictor: exactly one
+    # kernel launch and one executable call per flushed micro-batch
+    knn = KNNLambdaPredictor.fit(
+        rng.normal(size=(96, d)).astype(np.float32),
+        np.abs(rng.normal(size=(96, K))).astype(np.float32),
+        k=5).quantized(mode="int8", slab=32)
+    with _count_kernel_calls(
+            {"quant": "knn_rank_audited_quant_pallas"}) as calls:
+        with ServingEngine(max_batch=8, max_wait_ms=2.0,
+                           executor="fused") as eng:
+            eng.register_predictor("knn_arch", knn, d_cov=d)
+            mix = (Scenario("feed", m1=300, m2=16, K=K, tag="knn_arch",
+                            d_cov=d),)
+            reqs = make_stream(mix, n_requests=24, seed=3)
+            eng.warmup(reqs)
+            results = eng.serve_stream(reqs)
+            m = eng.metrics
+            if len(results) != 24 or m.batches == 0:
+                raise AssertionError("quant engine smoke failed to serve")
+            if m.kernel_launches / m.batches != 1.0:
+                raise AssertionError(
+                    f"quant launch accounting: "
+                    f"{m.kernel_launches / m.batches} launches/batch "
+                    f"(expected exactly 1.0)")
+            if m.executable_calls != m.batches:
+                raise AssertionError(
+                    f"quant dispatch: {m.executable_calls} executable "
+                    f"calls for {m.batches} batches")
+    if calls["quant"] < 1:
+        raise AssertionError(
+            "quant dispatch regression: the fused engine never engaged "
+            "the quantized single-grid kernel")
+
+    # storage model: >= 2x fewer db-row bytes at every geometry
+    for (BB, NN, DD, KK) in ((32, 16384, 20, 5), (64, 65536, 64, 8)):
+        mdl = _knn_quant_traffic_model(BB, NN, DD, KK)
+        if mdl["rows_ratio_f32_over_int8"] < 2.0:
+            raise AssertionError(
+                f"quant traffic regression: f32/int8 db-row byte ratio "
+                f"{mdl['rows_ratio_f32_over_int8']} < 2.0 at "
+                f"B={BB} N={NN} D={DD}")
+    print("# knn_quant acceptance (bitwise parity incl. forced "
+          "fallbacks, lossless int8==f32 engine, 1 launch/batch, "
+          ">=2x db-row bytes): PASS")
+
+
 def run(quick: bool = False):
     rows = []
     key = jax.random.key(0)
@@ -387,6 +603,12 @@ def run(quick: bool = False):
                        (64, 8192, 8, 50, 20, 65536)])
     for n_kf, m1_kf, K_kf, m2_kf, d_kf, ndb_kf in kf_shapes:
         rows.append(run_knn_fused(n_kf, m1_kf, K_kf, m2_kf,
+                                  d=d_kf, n_db=ndb_kf))
+
+    # knn_quant: int8/bf16 db storage vs f32 — the row-stream byte
+    # model plus the XLA quant-scan wall stand-in
+    for n_kf, m1_kf, K_kf, m2_kf, d_kf, ndb_kf in kf_shapes:
+        rows.append(run_knn_quant(n_kf, m1_kf, K_kf, m2_kf,
                                   d=d_kf, n_db=ndb_kf))
 
     # knn_topk: oracle materializes the (B, N) distance matrix
@@ -712,6 +934,7 @@ def main():
     section("check_rank_audited", check_rank_audited)   # hard gates:
     section("check_predict_rank", check_predict_rank)   # raise on
     section("check_knn_fused", check_knn_fused)         # regression
+    section("check_knn_quant", check_knn_quant)
     rows = section("bench_sweep", lambda: run(quick=args.quick))
     recs = records(rows)
     for rec in recs:
@@ -723,6 +946,9 @@ def main():
         out_dir = (args.json if not args.json.endswith(".json")
                    else (os.path.dirname(args.json) or "."))
         write_bench_json(out_dir, "knn_fused", kf_recs,
+                         meta={"quick": args.quick})
+        kq_recs = [r for r in recs if "/knn_quant/" in r.name]
+        write_bench_json(out_dir, "knn_quant", kq_recs,
                          meta={"quick": args.quick})
     ras = [r for r in rows if r["name"].startswith("rank_audit/")]
     if any(r["derived"]["audit_ratio_xla_over_fused"] <= 1.0 for r in ras):

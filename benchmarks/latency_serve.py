@@ -70,11 +70,18 @@ Three measurement modes (docs/benchmarks.md walks through them):
     compliant stationary stream. Writes BENCH_drift.json with
     `--json`.
 
+  * quant (`--only quant`): the quantized-serving gate (`check_quant`)
+    — an engine on an int8-quantized KNN predictor serves a lossless
+    stream bitwise identical to the f32 engine (perm, utility,
+    exposure, compliant per request), with exactly one kernel launch
+    per flushed micro-batch and zero post-warmup recompiles on both
+    sides. Writes BENCH_quant_serve.json with `--json`.
+
 Usage:
 
   python -m benchmarks.latency_serve \\
       [--quick] [--frontier] [--json OUT] \\
-      [--only direct|engine|frontier|deadline|refresh|drift]
+      [--only direct|engine|frontier|deadline|refresh|drift|quant]
 
 `--json OUT` additionally writes a machine-readable
 BENCH_latency_serve.json (medians, geometry, backend — see
@@ -775,8 +782,10 @@ def run_drift(*, n_requests=256, chunk=32, seed=10, verbose=True):
     exposure shortfall against the requests' REAL thresholds;
     refresh-on folds the dual-subgradient telemetry back between
     chunks and must strictly reduce it — with zero recompiles. On a
-    compliant stationary stream the lane must publish nothing and
-    serving must stay bitwise identical to refresh-off.
+    stationary stream with no dual pressure (compliant, and served
+    with λ̂ = 0 so the symmetric decay side of the gate is quiet too)
+    the lane must publish nothing and serving must stay bitwise
+    identical to refresh-off.
     """
     def shortfall_run(reqs, *, refresh_on, eta=1.0, knn_scale=0.0,
                       knn_seed=9):
@@ -818,9 +827,12 @@ def run_drift(*, n_requests=256, chunk=32, seed=10, verbose=True):
         DriftSpec(kind="none"), tag=REFRESH_TAG, n_requests=96, m1=128,
         m2=16, K=REFRESH_K, d_cov=REFRESH_D, topic_rate=0.45,
         b_frac=0.01, seed=seed + 1)
-    s_off = shortfall_run(stat, refresh_on=False, knn_scale=0.1,
+    # knn_scale=0.0: a compliant stream served with positive λ̂ now
+    # legitimately publishes (decay pressure relaxes over-satisfied
+    # constraints), so the bitwise-neutrality control serves unpriced
+    s_off = shortfall_run(stat, refresh_on=False, knn_scale=0.0,
                           knn_seed=seed + 2)
-    s_on = shortfall_run(stat, refresh_on=True, knn_scale=0.1,
+    s_on = shortfall_run(stat, refresh_on=True, knn_scale=0.0,
                          knn_seed=seed + 2)
     ref = {r.rid: r for r in s_off["results"]}
     neutral = (s_on["swaps"] == 0
@@ -868,8 +880,9 @@ def check_drift(*, quick=False, verbose=True):
         f"drift gate: {res['compiles_post_warmup']} recompiles after "
         f"warmup across the drift runs")
     assert res["stationary_neutral"], (
-        f"drift gate: refresh was not a bitwise no-op on the compliant "
-        f"stationary stream ({res['stationary_swaps']} swaps)")
+        f"drift gate: refresh was not a bitwise no-op on the "
+        f"no-pressure stationary stream ({res['stationary_swaps']} "
+        f"swaps)")
     print("# drift acceptance (refresh-on < refresh-off shortfall under "
           "tighten drift, 0 recompiles, bitwise-neutral when "
           "stationary): PASS")
@@ -887,6 +900,99 @@ def records_drift(res):
                  "swaps_on": res["swaps_on"],
                  "compiles_post_warmup": res["compiles_post_warmup"],
                  "stationary_neutral": res["stationary_neutral"]})]
+
+
+QUANT_TAG, QUANT_D, QUANT_K, QUANT_SLAB = "quant_arch", 12, 4, 32
+
+
+def run_quant(*, n_requests=96, n_db=96, max_batch=8, seed=21,
+              verbose=True):
+    """Serve one stream through TWO fused-executor engines — one on the
+    f32 KNN predictor, one on its int8-quantized twin — and compare the
+    served results request by request. The train db is LOSSLESS under
+    int8 (values on the 0.5 grid inside [-63.5, 63.5] with the absmax
+    planted in every slab, so each slab scale is exactly 0.5): the
+    quantized sweep then reconstructs the db bitwise and every served
+    field (perm, utility, exposure, compliant) must match the f32
+    engine exactly — the 'unchanged RankingOutput' contract measured at
+    the serving boundary rather than the kernel boundary."""
+    rng = np.random.default_rng(seed)
+    X_db = np.clip(np.round(rng.uniform(
+        -63.0, 63.0, size=(n_db, QUANT_D)) * 2.0) / 2.0, -63.5, 63.5)
+    X_db[::QUANT_SLAB] = 63.5            # every slab sees the absmax
+    lam_db = np.abs(rng.normal(size=(n_db, QUANT_K))).astype(np.float32)
+    base = KNNLambdaPredictor.fit(X_db.astype(np.float32), lam_db, k=5)
+    quant = base.quantized(mode="int8", slab=QUANT_SLAB)
+
+    mix = (Scenario("feed", m1=300, m2=16, K=QUANT_K, tag=QUANT_TAG,
+                    d_cov=QUANT_D),)
+    reqs = make_stream(mix, n_requests=n_requests, seed=seed + 1)
+    served, metrics = {}, {}
+    for name, pred in (("f32", base), ("int8", quant)):
+        with ServingEngine(max_batch=max_batch, max_wait_ms=1e9,
+                           executor="fused") as eng:
+            eng.register_predictor(QUANT_TAG, pred, d_cov=QUANT_D)
+            eng.warmup(reqs)
+            results = eng.serve_stream(reqs, warmup=False)
+            m = eng.metrics
+            served[name] = {r.rid: r for r in results}
+            metrics[name] = {
+                "batches": m.batches,
+                "launches_per_batch": (m.kernel_launches / m.batches
+                                       if m.batches else float("nan")),
+                "compiles_post_warmup": m.compiles_post_warmup,
+                "p50_ms": m.summary()["latency_ms"]["p50"]}
+    bitwise = (sorted(served["f32"]) == sorted(served["int8"])
+               and all(_bitwise_same(served["int8"][rid],
+                                     served["f32"][rid])
+                       for rid in served["f32"]))
+    out = {"n_requests": n_requests, "n_db": n_db, "slab": QUANT_SLAB,
+           "bitwise_vs_f32": bool(bitwise), "metrics": metrics}
+    if verbose:
+        print(f"# quant serve: int8 engine bitwise == f32 engine: "
+              f"{bitwise}; launches/batch "
+              f"f32={metrics['f32']['launches_per_batch']:.2f} "
+              f"int8={metrics['int8']['launches_per_batch']:.2f}; "
+              f"recompiles f32={metrics['f32']['compiles_post_warmup']} "
+              f"int8={metrics['int8']['compiles_post_warmup']}",
+              flush=True)
+    return out
+
+
+def check_quant(*, quick=False, verbose=True):
+    """Quantized-serving health gate (AssertionError on regression):
+    the int8 engine serves the lossless stream bitwise identical to
+    the f32 engine, both keep exactly one kernel launch per flushed
+    micro-batch, and neither recompiles after warmup."""
+    kw = dict(n_requests=48) if quick else {}
+    res = run_quant(verbose=verbose, **kw)
+    assert res["bitwise_vs_f32"], (
+        "quant gate: int8 engine diverged from the f32 engine on a "
+        "lossless db (served RankingOutput must be unchanged)")
+    for name, m in res["metrics"].items():
+        assert m["launches_per_batch"] == 1.0, (
+            f"quant gate: {name} engine at {m['launches_per_batch']} "
+            f"kernel launches per batch (expected exactly 1.0)")
+        assert m["compiles_post_warmup"] == 0, (
+            f"quant gate: {name} engine recompiled "
+            f"{m['compiles_post_warmup']}x after warmup")
+    print("# quant serve acceptance (int8 engine bitwise == f32 engine"
+          ", 1 launch/batch, 0 recompiles): PASS")
+    return res
+
+
+def records_quant(res):
+    m = res["metrics"]
+    return [Record(
+        name=f"serve_quant/n={res['n_requests']}/db={res['n_db']}"
+             f"/slab={res['slab']}",
+        us_per_call=float("nan"),
+        derived={"bitwise_vs_f32": res["bitwise_vs_f32"],
+                 "p50_ms_f32": m["f32"]["p50_ms"],
+                 "p50_ms_int8": m["int8"]["p50_ms"],
+                 "launches_per_batch": m["int8"]["launches_per_batch"],
+                 "compiles_post_warmup":
+                     m["int8"]["compiles_post_warmup"]})]
 
 
 def records(rows):
@@ -936,7 +1042,7 @@ def main():
                     help="CI-sized: small direct sweep, 256-request stream")
     ap.add_argument("--only", default="all",
                     choices=["all", "direct", "engine", "frontier",
-                             "deadline", "refresh", "drift"])
+                             "deadline", "refresh", "drift", "quant"])
     ap.add_argument("--frontier", action="store_true",
                     help="also sweep p99 vs offered load (paced open-loop "
                          "Poisson arrivals below/around saturation)")
@@ -993,6 +1099,17 @@ def main():
             print(rec.csv())
         if args.json:
             write_bench_json(args.json, "drift", recs,
+                             meta={"quick": args.quick})
+        return
+
+    if args.only == "quant":
+        # the quantized-serving gate writes its own BENCH_quant_serve.json
+        res = check_quant(quick=args.quick)
+        recs = records_quant(res)
+        for rec in recs:
+            print(rec.csv())
+        if args.json:
+            write_bench_json(args.json, "quant_serve", recs,
                              meta={"quick": args.quick})
         return
 

@@ -30,9 +30,9 @@ the trace (lax.top_k needs a Python int, not a tracer).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -77,11 +77,25 @@ class KNNLambdaPredictor:
       d2(x, xi) = |x|^2 - 2 x.xi + |xi|^2  -> top-k -> 1/d weights.
     The train database (X_db, lam_db) rides along in the pytree so the
     predictor can be donated/sharded like any other model state.
+
+    Optionally the predictor also owns a QUANTIZED copy of the db
+    (`quantized()` / pack_knn_db): per-slab int8 or bf16 rows (X_q),
+    the per-slab dequant scales (q_scale), and the exact |x̃|^2 of the
+    dequantized rows (y2_q, PAD_Y2 on slab-padding rows). The quantized
+    sweep is exact ON x̃ — the dequantized rows are the ground truth of
+    the packed representation — and the final selection is always
+    re-scored in f32 (kernels/common.py). `quant` names the storage
+    mode and is a STATIC field: it shapes the trace (kernel routing),
+    never travels as a jit argument.
     """
 
     X_db: Array    # (n_train, d)
     lam_db: Array  # (n_train, K)
     k: int
+    X_q: Optional[Array] = None      # (n_pad, d) packed db rows
+    q_scale: Optional[Array] = None  # (n_slabs, 1) per-slab scales
+    y2_q: Optional[Array] = None     # (n_pad, 1) exact |x̃|^2
+    quant: str = field(default="off", metadata=dict(static=True))
 
     @staticmethod
     def fit(X_train: Array, lam_train: Array, k: int = 10) -> "KNNLambdaPredictor":
@@ -89,7 +103,31 @@ class KNNLambdaPredictor:
             X_db=jnp.asarray(X_train), lam_db=jnp.asarray(lam_train), k=int(k)
         )
 
+    def quantized(self, mode: str = "int8",
+                  slab: int = None) -> "KNNLambdaPredictor":
+        """A copy of this predictor carrying the packed db for the
+        quantized sweep. `slab` MUST equal the serving tile_n (the
+        per-slab scales are indexed by serving slab) — defaults to the
+        kernel-wide DB_SLAB."""
+        from repro.kernels.common import DB_SLAB, QUANT_MODES
+        if mode not in QUANT_MODES or mode == "off":
+            raise ValueError(f"quantized(): mode must be one of "
+                             f"{[m for m in QUANT_MODES if m != 'off']}, "
+                             f"got {mode!r}")
+        slab = DB_SLAB if slab is None else int(slab)
+        X_q, q_scale, y2_q = pack_knn_db(self.X_db, mode=mode, slab=slab)
+        return dataclasses.replace(
+            self, X_q=X_q, q_scale=q_scale, y2_q=y2_q, quant=mode)
+
     def predict(self, X: Array) -> Array:
+        # Quantized predictors predict through the same quantized-sweep
+        # + exact-survivor-rescore selection the serving kernels run, so
+        # every consumer of this predictor sees one estimator (exact on
+        # the dequantized db x̃), kernel path or not.
+        if self.X_q is not None:
+            return knn_predict_quant(
+                self.X_q, self.q_scale, self.y2_q, self.lam_db, X,
+                k=self.k, mode=self.quant)
         # Above the threshold the (b, n_train) distance matrix of the
         # one-matmul path stops fitting comfortably in cache/HBM
         # headroom; the chunked variant streams the train database in
@@ -205,6 +243,178 @@ def knn_predict_chunked(
     x2 = jnp.sum(Xq * Xq, axis=-1, keepdims=True)           # (b, 1)
     y2 = jnp.sum(X_db * X_db, axis=-1)                      # (n,) — cheap
     out = _idw_lambda(-neg_top, x2, y2[idx], lam_db[idx])
+    return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Quantized db pack + the XLA quantized-sweep selection
+# ---------------------------------------------------------------------------
+# The Pallas quantized kernels (kernels/knn_topk.py) and the XLA scan
+# below consume the SAME packed arrays and the SAME shared math
+# (kernels/common.py), so their selections agree bitwise. The pack is a
+# Python loop of per-slab jnp programs — repack_knn_slabs re-runs the
+# identical per-slab program on touched slabs only, making an
+# incremental repack bitwise-equal to a full repack BY CONSTRUCTION
+# (no numpy-vs-jnp reduction-order drift possible).
+
+def _pack_one_slab(x_slab: Array, *, mode: str):
+    """Pack one db slab. x_slab (s, d) f32 (already padded to the slab
+    size; padding rows must be all-zero) -> (rows_q (s, d) stored,
+    scale (1, 1) f32, y2 (s, 1) f32 exact |x̃|^2 of the DEQUANTIZED
+    rows)."""
+    x = jnp.asarray(x_slab, jnp.float32)
+    if mode == "int8":
+        scale = jnp.max(jnp.abs(x)) / 127.0
+        scale = jnp.where(scale > 0, scale, jnp.float32(1.0))
+        rows_q = jnp.clip(jnp.round(x / scale), -127.0, 127.0
+                          ).astype(jnp.int8)
+        xt = rows_q.astype(jnp.float32) * scale
+    elif mode == "bf16":
+        rows_q = x.astype(jnp.bfloat16)
+        scale = jnp.float32(1.0)
+        xt = rows_q.astype(jnp.float32)
+    else:
+        raise ValueError(f"_pack_one_slab: bad mode {mode!r}")
+    y2 = jnp.sum(xt * xt, axis=-1, keepdims=True)           # (s, 1)
+    return rows_q, scale.reshape(1, 1), y2
+
+
+def pack_knn_db(X_db: Array, *, mode: str = "int8", slab: int = 512):
+    """Quantize the KNN train db into per-slab low-precision storage.
+
+    Returns (X_q (n_pad, d), q_scale (n_slabs, 1) f32, y2_q (n_pad, 1)
+    f32) with n_pad = n rounded up to a slab multiple. Padding rows
+    store zero and get y2 = PAD_Y2 so they can never survive a sweep
+    (int8 cannot encode the f32 path's 1e15 far-away padding). The slab
+    size MUST equal the serving tile_n — q_scale rows are the kernel's
+    slab blocks."""
+    from repro.kernels.common import PAD_Y2
+    X = jnp.asarray(X_db, jnp.float32)
+    n, d = X.shape
+    pad = (-n) % slab
+    rows, scales, y2s = [], [], []
+    for s in range(0, n + pad, slab):
+        x = X[s:s + slab]
+        short = slab - x.shape[0]
+        if short:
+            x = jnp.pad(x, ((0, short), (0, 0)))
+        rows_q, scale, y2 = _pack_one_slab(x, mode=mode)
+        if short:
+            y2 = y2.at[slab - short:].set(PAD_Y2)
+        rows.append(rows_q)
+        scales.append(scale)
+        y2s.append(y2)
+    return (jnp.concatenate(rows, axis=0),
+            jnp.concatenate(scales, axis=0),
+            jnp.concatenate(y2s, axis=0))
+
+
+def repack_knn_slabs(X_db: Array, X_q: Array, q_scale: Array, y2_q: Array,
+                     rows, *, mode: str, slab: int):
+    """Incremental repack after a ring write: re-quantize ONLY the
+    slabs containing the touched `rows` (host ints / array of row
+    indices into X_db), writing fresh rows AND the slab's fresh scale —
+    a stale scale is never served. Each touched slab runs the exact
+    per-slab program of pack_knn_db, so the result is bitwise equal to
+    a full repack of the updated db."""
+    from repro.kernels.common import PAD_Y2
+    import numpy as np
+    X = jnp.asarray(X_db, jnp.float32)
+    n = X.shape[0]
+    touched = sorted({int(r) // slab for r in np.asarray(rows).ravel()})
+    for s_idx in touched:
+        s = s_idx * slab
+        x = X[s:s + slab]
+        short = slab - x.shape[0]
+        if short:
+            x = jnp.pad(x, ((0, short), (0, 0)))
+        rows_q, scale, y2 = _pack_one_slab(x, mode=mode)
+        if short:
+            y2 = y2.at[slab - short:].set(PAD_Y2)
+        X_q = X_q.at[s:s + slab].set(rows_q)
+        q_scale = q_scale.at[s_idx:s_idx + 1].set(scale)
+        y2_q = y2_q.at[s:s + slab].set(y2)
+    del n
+    return X_q, q_scale, y2_q
+
+
+def knn_quant_scan(X_q: Array, q_scale: Array, y2_q: Array, Xq: Array,
+                   *, k: int = 10, k_extra: int = None, mode: str = "int8"):
+    """Quantized-sweep selection under XLA: scan the packed db in slab
+    blocks at low precision carrying a top-(k + k_extra) survivor set,
+    then gather the survivors' dequantized rows, re-score them EXACTLY
+    in f32, and re-rank to the final k with ties to the lowest global
+    index (the f32 oracle's rule). Returns (d2_top (b, k) ascending
+    exact-on-x̃, idx (b, k), guard (b, 1) i32 margin-guard flags).
+
+    This is knn_topk_scan's quantized twin and the per-shard sweep of
+    the distributed quantized path: same shared math as the Pallas
+    kernels (kernels/common.py), so the selections agree bitwise."""
+    from repro.kernels.common import (
+        QUANT_EXTRA, bottomk_rerank, exact_rescore, quant_d2_err,
+        quant_d2_tile)
+    if k_extra is None:
+        k_extra = QUANT_EXTRA
+    k_keep = k + k_extra
+    b = Xq.shape[0]
+    n_pad, d = X_q.shape
+    n_slabs = q_scale.shape[0]
+    slab = n_pad // n_slabs
+    db_slabs = X_q.reshape(n_slabs, slab, d)
+    y2_slabs = y2_q.reshape(n_slabs, slab)
+    bases = jnp.arange(n_slabs, dtype=jnp.int32) * slab
+
+    def body(carry, xs):
+        run_v, run_i = carry                                # (b, k_keep)
+        db, y2_row, scale, base = xs
+        d2q = quant_d2_tile(
+            Xq, db, scale[0], jnp.broadcast_to(y2_row[None, :], (b, slab)),
+            mode=mode)
+        cand_v = jnp.concatenate([run_v, -d2q], axis=-1)
+        gidx = base + jnp.broadcast_to(
+            jnp.arange(slab, dtype=jnp.int32), (b, slab))
+        cand_i = jnp.concatenate([run_i, gidx], axis=-1)
+        new_v, sel = jax.lax.top_k(cand_v, k_keep)
+        new_i = jnp.take_along_axis(cand_i, sel, axis=-1)
+        return (new_v, new_i), None
+
+    init = (jnp.full((b, k_keep), -jnp.inf, jnp.float32),
+            jnp.zeros((b, k_keep), jnp.int32))
+    (neg_v, idx), _ = jax.lax.scan(
+        body, init, (db_slabs, y2_slabs, q_scale, bases))
+
+    # exact f32 re-score of the survivors (gathers are fine under XLA)
+    scale_rows = q_scale[idx // slab, 0]                    # (b, k_keep)
+    x_sel = X_q[idx].astype(jnp.float32) * scale_rows[..., None]
+    y2_sel = y2_q[idx, 0]                                   # (b, k_keep)
+    x_cols = x_sel.transpose(0, 2, 1)                       # (b, d, k_keep)
+    d2x = exact_rescore(Xq, x_cols, y2_sel)
+
+    # margin guard on the QUANTIZED order (observability — the exact
+    # re-score is always applied): gap vs the boundary pair's EXACT
+    # quantization errors, the kernels' rule verbatim
+    d2q_sorted = -neg_v                                     # (b, k_keep) asc
+    gap = d2q_sorted[:, k:k + 1] - d2q_sorted[:, k - 1:k]
+    errs = quant_d2_err(Xq, x_cols, mode=mode)              # (b, k_keep)
+    guard = (gap <= errs[:, k - 1:k] + errs[:, k:k + 1]).astype(jnp.int32)
+    d2_top, idx_top = bottomk_rerank(d2x, idx, k)
+    return d2_top, idx_top, guard
+
+
+@partial(jax.jit, static_argnames=("k", "mode"))
+def knn_predict_quant(X_q: Array, q_scale: Array, y2_q: Array,
+                      lam_db: Array, X: Array, *, k: int = 10,
+                      mode: str = "int8") -> Array:
+    """knn_predict through the quantized sweep + exact survivor
+    re-score: the estimator every quantized consumer (XLA predict,
+    Pallas kernels, distributed shards) agrees on, exact on the
+    dequantized db x̃."""
+    squeeze = X.ndim == 1
+    Xq = jnp.atleast_2d(jnp.asarray(X, jnp.float32))
+    d2_top, idx, _guard = knn_quant_scan(
+        X_q, q_scale, y2_q, Xq, k=k, mode=mode)
+    x2 = jnp.sum(Xq * Xq, axis=-1, keepdims=True)           # (b, 1)
+    out = _idw_lambda(d2_top, x2, y2_q[idx, 0], lam_db[idx])
     return out[0] if squeeze else out
 
 
@@ -337,13 +547,25 @@ PREDICTOR_REGISTRY = {
 # The ARRAY fields of each family — the refreshable state the serving
 # engine threads through its bucket executables as a jit argument.
 # Deliberately NOT tree_flatten: KNN's `k` is registered as pytree data
-# but must stay a static Python int in the trace.
+# but must stay a static Python int in the trace. Optional fields (KNN's
+# packed-db triple) participate only when PRESENT on the instance —
+# state_fields() filters out None-valued entries, so an unquantized
+# predictor's state stays exactly {X_db, lam_db} (and its swap
+# validation errors unchanged) while a quantized one threads all five
+# arrays through the executables and the refresh lane.
 STATE_FIELDS = {
     MeanLambdaPredictor: ("mean_lam",),
-    KNNLambdaPredictor: ("X_db", "lam_db"),
+    KNNLambdaPredictor: ("X_db", "lam_db", "X_q", "q_scale", "y2_q"),
     LinearLambdaPredictor: ("W", "c"),
     MLPLambdaPredictor: ("params",),
 }
+
+
+def state_fields(predictor) -> tuple:
+    """The refreshable array fields PRESENT on this instance: the
+    family's STATE_FIELDS minus any optional field currently None."""
+    return tuple(f for f in STATE_FIELDS.get(type(predictor), ())
+                 if getattr(predictor, f, None) is not None)
 
 
 def predictor_state(predictor) -> dict:
@@ -351,17 +573,17 @@ def predictor_state(predictor) -> dict:
     (duck-typed) predictor families have no registered state and return
     {} — the engine then closes over them whole, exactly the
     pre-refresh behavior: they serve fine but cannot be hot-swapped."""
-    fields = STATE_FIELDS.get(type(predictor), ())
-    return {f: getattr(predictor, f) for f in fields}
+    return {f: getattr(predictor, f) for f in state_fields(predictor)}
 
 
 def with_state(predictor, state: dict):
     """The predictor with its array state replaced by `state` (same
-    keys as predictor_state). Non-array statics (KNN's k) carry over
-    from the template, so a jit trace through the result keeps them as
-    Python constants while the state arrays may be tracers. An empty
-    state (unknown family) returns the predictor unchanged."""
-    fields = STATE_FIELDS.get(type(predictor), ())
+    keys as predictor_state). Non-array statics (KNN's k, quant mode)
+    carry over from the template, so a jit trace through the result
+    keeps them as Python constants while the state arrays may be
+    tracers. An empty state (unknown family) returns the predictor
+    unchanged."""
+    fields = state_fields(predictor)
     if set(state) != set(fields):
         raise ValueError(f"state keys {sorted(state)} != "
                          f"{sorted(fields)} for "

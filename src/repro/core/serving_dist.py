@@ -94,6 +94,73 @@ def knn_predict_distributed(
     )(X, X_db, lam_db)
 
 
+def knn_predict_quant_distributed(
+    mesh: Mesh,
+    X_q: Array,      # (n_db, d) packed db rows, row-sharded over `db_axis`
+    q_scale: Array,  # (n_slabs, 1) per-slab scales, row-sharded likewise
+    y2_q: Array,     # (n_db, 1) exact |x̃|^2, row-sharded likewise
+    lam_db: Array,   # (n_db, K) REPLICATED (tiny: n_db*K floats)
+    X: Array,        # (B, d) sharded over batch axes
+    *,
+    k: int = 10,
+    mode: str = "int8",
+    db_axis: str = "model",
+    batch_axes=("pod", "data"),
+) -> Array:
+    """knn_predict_distributed over a QUANTIZED row-sharded db: each
+    shard runs the quantized slab sweep + exact f32 survivor re-score
+    (core.predictors.knn_quant_scan) on its rows, so the values that
+    cross the interconnect are already EXACT-on-x̃ — the k·shards
+    merge (gather_merge_top_k) and the inline IDW tail are untouched
+    from the f32 path, and the result matches the dense
+    knn_predict_quant selection bitwise (each shard's exact local
+    top-k is a superset of its contribution to the global top-k; ties
+    resolve to the lowest global index on both paths).
+
+    Contract: pack with pack_knn_db at a slab that divides the
+    per-shard row count so the global pack row-shards cleanly with no
+    pad rows (X_q.shape[0] == lam_db.shape[0]) and each shard holds
+    whole slabs with their scales.
+    """
+    if X_q.shape[0] != lam_db.shape[0]:
+        raise ValueError(
+            f"sharded quantized db must carry no pad rows: X_q has "
+            f"{X_q.shape[0]} rows but lam_db {lam_db.shape[0]} — pack "
+            f"with a slab dividing the per-shard row count")
+    batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def body(xq, dbq_l, scale_l, y2q_l, lam_all):
+        from repro.core.predictors import knn_quant_scan  # deferred
+
+        n_l = dbq_l.shape[0]
+        kk = min(k, n_l)
+        x2 = jnp.sum(xq * xq, axis=-1, keepdims=True)        # (B_l, 1)
+        # exact-on-x̃ local top-k: quantized sweep, exact re-score
+        d2_l, idx_l, _ = knn_quant_scan(dbq_l, scale_l, y2q_l, xq,
+                                        k=kk, mode=mode)
+        y2_sel_l = y2q_l[idx_l, 0]                           # (B_l, kk)
+        gidx = idx_l + jax.lax.axis_index(db_axis) * n_l
+        neg_d2, idx, y2_sel = gather_merge_top_k(
+            -d2_l, gidx, k, db_axis, payload=y2_sel_l)
+        d2k = -neg_d2                                        # (B_l, k) asc
+        lam_nb = lam_all[idx]                                # (B_l, k, K)
+        scale2 = x2 + y2_sel + 1e-12
+        exact = d2k <= 1e-6 * scale2
+        any_exact = jnp.any(exact, axis=-1, keepdims=True)
+        w_inv = 1.0 / jnp.maximum(jnp.sqrt(d2k), 1e-12)
+        w = jnp.where(any_exact, exact.astype(d2k.dtype), w_inv)
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+        return jnp.einsum("bk,bkc->bc", w, lam_nb)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch_axes, None), P(db_axis, None),
+                  P(db_axis, None), P(db_axis, None), P()),
+        out_specs=P(batch_axes, None),
+        check_vma=False,
+    )(X, X_q, q_scale, y2_q, lam_db)
+
+
 def rank_distributed(
     mesh: Mesh,
     u: Array,        # (B, m1) items sharded over `item_axis`

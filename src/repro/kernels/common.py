@@ -133,3 +133,171 @@ def topk_merge(
     if has_payload:
         return out_v, out_i, out_p
     return out_v, out_i
+
+
+# ---------------------------------------------------------------------------
+# Quantized db-sweep primitives.
+#
+# The KNN kernels' runtime is dominated by the (B, d) x (d, n_train)
+# distance dot of the db-slab sweep. Storing the db as int8 (or bf16)
+# cuts the HBM bytes streamed per sweep 4x (2x) and moves the dot onto
+# the low-precision MXU path; a small survivor set (k + QUANT_EXTRA per
+# row) is then re-scored EXACTLY in f32 at the flush step, so the final
+# selection — and everything derived from it (λ̂, permutation, utility,
+# exposure, compliance) — is computed at full precision.
+#
+# Semantics: the quantized path's ground truth is the DEQUANTIZED db
+# x̃ = int8_row * slab_scale. Quantization of the stored rows is a
+# representation choice (lossy vs the original f32 db unless the db was
+# int8-representable to begin with); everything downstream of the pack is
+# exact-on-x̃, and ref.knn_quant_select_ref reproduces the selection
+# bitwise from the same packed arrays. The query stays f32 in the bf16
+# mode and is symmetrically int8-quantized (per-row scale) in the int8
+# mode; quant_d2_err computes, per survivor, the EXACT d2 error
+# introduced by the QUERY quantization, which is what the margin guard
+# tests.
+#
+# Every helper below is shared verbatim by the Pallas kernels
+# (knn_topk.py), the XLA scan path (predictors.knn_quant_scan), and the
+# oracle (ref.py) — single-source math is what makes bitwise
+# kernel/oracle parity hold on both interpret and compiled backends.
+# ---------------------------------------------------------------------------
+
+QUANT_MODES = ("off", "bf16", "int8")
+
+# Survivor over-retention: the quantized sweep keeps k + QUANT_EXTRA
+# candidates so that quantization-induced rank inversions near the k-th
+# place are repaired by the exact re-score instead of lost.
+QUANT_EXTRA = 8
+
+# Exact |x̃|^2 streamed alongside the quantized slabs; padding rows get
+# this sentinel so they can never survive the sweep (int8 cannot encode
+# a far-away row the way the f32 path's 1e15 padding does).
+PAD_Y2 = float(1e30)
+
+
+def quantize_query(q: jnp.ndarray):
+    """Symmetric per-row int8 quantization of the query block.
+
+    q (B, d) f32 -> (qi (B, d) f32 holding integer values in [-127, 127],
+    sq (B, 1) f32 scale). qi stays f32: the MXU consumes it directly and
+    f32 dots of integer-valued operands are exact for d * 127^2 < 2^24,
+    so interpret-mode (CPU f32) and compiled int8-MXU (int32 accumulate)
+    agree bitwise."""
+    sq = jnp.max(jnp.abs(q), axis=-1, keepdims=True) / 127.0
+    sq = jnp.where(sq > 0, sq, jnp.ones_like(sq))
+    qi = jnp.clip(jnp.round(q / sq), -127.0, 127.0)
+    return qi, sq
+
+
+def dequant_rows(rows_q: jnp.ndarray, scale) -> jnp.ndarray:
+    """x̃ = stored rows * slab scale. rows_q (n, d) int8-or-f32,
+    scale scalar or broadcastable; returns f32."""
+    return rows_q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+
+
+def quant_d2_tile(q: jnp.ndarray, db_q: jnp.ndarray, scale,
+                  y2_row: jnp.ndarray, *, mode: str) -> jnp.ndarray:
+    """Quantized squared distances of a query block to one db slab.
+
+    q (B, d) f32, db_q (T, d) stored slab, scale scalar slab scale,
+    y2_row (B, T) exact |x̃|^2 broadcast across the batch -> (B, T) f32.
+
+    int8: the query is quantized per-row and the cross term is a single
+    integer-valued dot scaled back by (2 * sq * scale); d2 is exact in
+    the db term (y2 streamed at f32) and approximate only through the
+    query rounding. bf16: the slab is dequantized and the dot runs at
+    f32 on the already-rounded values — no query error (bound 0)."""
+    if mode == "int8":
+        qi, sq = quantize_query(q)
+        cross = jax.lax.dot_general(
+            qi, db_q.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (B, T)
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+        d2 = q2 - (2.0 * sq * jnp.asarray(scale, jnp.float32)) * cross \
+            + y2_row
+    elif mode == "bf16":
+        xt = dequant_rows(db_q, scale)                   # (T, d) f32
+        cross = jax.lax.dot_general(
+            q, xt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+        d2 = q2 - 2.0 * cross + y2_row
+    else:  # pragma: no cover - callers gate on mode
+        raise ValueError(f"quant_d2_tile: bad mode {mode!r}")
+    return jnp.maximum(d2, 0.0)
+
+
+def exact_rescore(q: jnp.ndarray, x_sel: jnp.ndarray,
+                  y2_sel: jnp.ndarray) -> jnp.ndarray:
+    """Exact f32 squared distances of each row's survivor set.
+
+    q (B, d), x_sel (B, d, k') dequantized survivor rows,
+    y2_sel (B, k') their exact |x̃|^2 -> (B, k') f32."""
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)          # (B, 1)
+    cross = jnp.einsum("bd,bdk->bk", q, x_sel)           # (B, k')
+    return jnp.maximum(q2 - 2.0 * cross + y2_sel, 0.0)
+
+
+def quant_d2_err(q: jnp.ndarray, x_sel: jnp.ndarray, *,
+                 mode: str) -> jnp.ndarray:
+    """EXACT per-survivor quantization error of the sweep distances.
+
+    The int8 cross term uses q̃ = sq * round(q / sq), so for a survivor
+    with dequantized row x̃:  d2_quant - d2_exact = 2 (q - q̃) · x̃ —
+    and at the flush the survivors' x̃ columns are VMEM-resident
+    (x_sel (B, d, k')), so the error needs no bound at all: one small
+    einsum computes it exactly. The margin guard compares the quantized
+    k/(k+1) gap against the two boundary candidates' |err| sum — the
+    precise condition under which query rounding could have swapped
+    their order. bf16 mode rounds the db only (no query error) -> 0.
+    Returns (B, k') f32 = |d2q - d2x| per survivor."""
+    if mode != "int8":
+        return jnp.zeros(x_sel.shape[:1] + x_sel.shape[-1:], jnp.float32)
+    qi, sq = quantize_query(q)
+    e = q - sq * qi                                          # (B, d)
+    return jnp.abs(2.0 * jnp.einsum("bd,bdk->bk", e, x_sel))
+
+
+def bottomk_rerank(d2: jnp.ndarray, gidx: jnp.ndarray, k: int,
+                   payload=None):
+    """Exact ascending top-k over a small candidate set, ties to the
+    LOWEST GLOBAL INDEX — the stable-argsort tie rule of the f32 oracle.
+
+    d2 (B, k') exact distances, gidx (B, k') global indices -> (d2_top
+    (B, k), idx_top (B, k)[, payload_top]). k passes of (min-d2, then
+    min-gidx among the tied, onehot select, mask +inf); every op is a
+    lane reduction, so it runs identically in-kernel and under XLA."""
+    B, kp = d2.shape
+    INF = jnp.float32(jnp.inf)
+    has_payload = payload is not None
+    out_v = jnp.zeros((B, k), jnp.float32)
+    out_i = jnp.zeros((B, k), jnp.int32)
+    out_p = (jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-1] + (k,), p.dtype), payload)
+        if has_payload else None)
+    big = jnp.iinfo(jnp.int32).max
+
+    def body(j, carry):
+        d2c, out_v, out_i, out_p = carry
+        m = jnp.min(d2c, axis=-1, keepdims=True)                 # (B, 1)
+        tied = d2c <= m                                          # (B, k')
+        gi_sel = jnp.min(jnp.where(tied, gidx, big), axis=-1)    # (B,)
+        onehot = jnp.logical_and(tied, gidx == gi_sel[:, None])  # (B, k')
+        v = jnp.min(jnp.where(onehot, d2c, INF), axis=-1)
+        col = jax.lax.broadcasted_iota(jnp.int32, (B, k), dimension=1) == j
+        out_v = jnp.where(col, v[:, None], out_v)
+        out_i = jnp.where(col, gi_sel[:, None], out_i)
+        if has_payload:
+            out_p = jax.tree.map(
+                lambda op, cp: _write_col(op, _select_one(cp, onehot), col),
+                out_p, payload)
+        d2c = jnp.where(onehot, INF, d2c)
+        return d2c, out_v, out_i, out_p
+
+    _, out_v, out_i, out_p = jax.lax.fori_loop(
+        0, k, body, (d2, out_v, out_i, out_p))
+    if has_payload:
+        return out_v, out_i, out_p
+    return out_v, out_i

@@ -18,7 +18,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.common import DB_SLAB, LANE, NEG_INF, TILE_B, TILE_M
+from repro.kernels.common import (
+    DB_SLAB,
+    LANE,
+    NEG_INF,
+    QUANT_EXTRA,
+    QUANT_MODES,
+    TILE_B,
+    TILE_M,
+)
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fused_rank import (
     MAX_KERNEL_M2,
@@ -28,7 +36,9 @@ from repro.kernels.fused_rank import (
 )
 from repro.kernels.knn_topk import (
     knn_lambda_pallas,
+    knn_lambda_quant_pallas,
     knn_rank_audited_pallas,
+    knn_rank_audited_quant_pallas,
     knn_topk_pallas,
 )
 
@@ -285,12 +295,23 @@ def predict_rank_audited(
             compliant=comp[:n, 0].astype(bool), lam=lam[:n])
 
     if isinstance(predictor, KNNLambdaPredictor):
+        # a packed predictor (KNNLambdaPredictor.quantized) routes to
+        # the quantized sweep; quant is a STATIC predictor field, so
+        # the jit trace through the stateful seam branches on it as a
+        # Python constant — no recompiles on state swaps.
+        quant = predictor.quant if predictor.X_q is not None else "off"
+        if quant != "off":
+            # the per-slab scales ARE the kernel's slab blocks: the
+            # pack geometry dictates the serving slab, so the sweep
+            # tile follows the predictor rather than the default
+            tile_n = predictor.X_q.shape[0] // predictor.q_scale.shape[0]
         if not knn_chain:
             return knn_rank_audited(
                 X, predictor.X_db, predictor.lam_db, u, a, b, gamma,
                 k=predictor.k, m2=m2, eps=eps, tol=tol,
                 interpret=interpret, tile_b=tile_b, tile_n=tile_n,
-                tile_m=tile_m)
+                tile_m=tile_m, quant=quant, X_q=predictor.X_q,
+                q_scale=predictor.q_scale, y2_q=predictor.y2_q)
         # the pre-fusion two-kernel chain: knn_lambda_pallas emits λ̂
         # through an HBM buffer, rank_audited_pallas reads it back —
         # kept as the single-grid kernel's bitwise parity oracle (and
@@ -298,7 +319,9 @@ def predict_rank_audited(
         # tile so the slab sweeps see identical tile geometry.
         lam = knn_lambda(X, predictor.X_db, predictor.lam_db,
                          k=predictor.k, interpret=interpret,
-                         tile_q=tile_b, tile_n=tile_n)
+                         tile_q=tile_b, tile_n=tile_n, quant=quant,
+                         X_q=predictor.X_q, q_scale=predictor.q_scale,
+                         y2_q=predictor.y2_q)
         ref.check_pred_width(lam.shape[-1], Kp)
         lam = jnp.pad(lam, ((0, 0), (0, Kp - lam.shape[-1])))
     else:
@@ -336,6 +359,26 @@ def predict_rank_audited_stateful(
                                 u, a, b, gamma, **kwargs)
 
 
+def _quant_db(X_db, X_q, q_scale, y2_q, *, quant: str, tile_n: int):
+    """Resolve the packed-db triple for the quantized sweep: validate
+    the pack-slab == serving-tile_n contract (the per-slab scales ARE
+    the kernel's slab blocks) or auto-pack at tile_n when the caller
+    hands only the f32 db. Returns (X_q, q_scale, y2_q)."""
+    from repro.core.predictors import pack_knn_db  # deferred: no cycle
+
+    if quant not in QUANT_MODES:
+        raise ValueError(f"quant must be one of {QUANT_MODES}, got {quant!r}")
+    if X_q is None:
+        return pack_knn_db(X_db, mode=quant, slab=tile_n)
+    n_pad = X_q.shape[0]
+    if n_pad % tile_n or q_scale.shape[0] * tile_n != n_pad:
+        raise ValueError(
+            f"quantized db packed at slab={n_pad // max(q_scale.shape[0], 1)}"
+            f" but serving tile_n={tile_n}: repack with slab=tile_n "
+            f"(KNNLambdaPredictor.quantized(slab=tile_n))")
+    return X_q, q_scale, y2_q
+
+
 def knn_rank_audited(
     X: Array,            # (n, d) query covariates
     X_db: Array,         # (n_train, d) train database
@@ -353,6 +396,12 @@ def knn_rank_audited(
     tile_b: int | None = None,
     tile_n: int = DB_SLAB,
     tile_m: int = TILE_M,
+    quant: str = "off",
+    X_q: Array | None = None,       # packed db (predictors.pack_knn_db)
+    q_scale: Array | None = None,   # (n_slabs, 1) per-slab scales
+    y2_q: Array | None = None,      # (n_pad, 1) exact |x̃|^2
+    k_extra: int = QUANT_EXTRA,
+    return_guard: bool = False,
 ):
     """The single-grid KNN online stage (knn_rank_audited_pallas) with
     the padding contract of the other dispatchers: rows to tile_b
@@ -364,7 +413,15 @@ def knn_rank_audited(
     candidates to tile_m with NEG_INF utilities, and bucket-padded
     constraint rows beyond the predictor's width priced at exactly 0.0
     (zero lam_db columns make the flush-step einsum emit 0.0). Returns
-    a complete RankingOutput."""
+    a complete RankingOutput.
+
+    quant='int8'|'bf16' routes to the quantized-sweep twin
+    (knn_rank_audited_quant_pallas): the db streams in low precision
+    (4x / 2x fewer HBM bytes) and the top-(k + k_extra) survivors are
+    re-scored exactly in f32 at the flush. The packed triple comes from
+    the caller (pack slab MUST equal tile_n) or is packed here at
+    tile_n. ``return_guard=True`` appends the per-row margin-guard
+    fallback flags ((n, 1) i32) to the return."""
     from repro.core.ranking import AUDIT_TOL, RankingOutput  # deferred: no cycle
 
     if tol is None:
@@ -386,20 +443,41 @@ def knn_rank_audited(
     k_pred = lam_db.shape[1]
     ref.check_pred_width(k_pred, Kp)
     Xq_p = _pad_to(jnp.asarray(X, jnp.float32), 0, tile_b, 0.0)
-    xdb_p = _pad_to(X_db, 0, tile_n, 1e15)
-    lamdb_p = _pad_to(
-        jnp.pad(lam_db, ((0, 0), (0, Kp - k_pred))), 0, tile_n, 0.0)
     u_p = _pad_to(_pad_to(u, 0, tile_b, 0.0), 1, tile_m, NEG_INF)
     a_p = _pad_to(_pad_to(a, 0, tile_b, 0.0), 2, tile_m, 0.0)
     b_p = _pad_to(b, 0, tile_b, 0.0)
     gamma_p = _pad_to(gamma, 0, tile_b, 0.0)
+
+    if quant != "off":
+        X_q, q_scale, y2_q = _quant_db(
+            X_db, X_q, q_scale, y2_q, quant=quant, tile_n=tile_n)
+        # lam rows pad to the PACKED row count (pack pads with zero
+        # rows + PAD_Y2, which the sweep can never select)
+        lamdb_p = jnp.pad(
+            lam_db, ((0, X_q.shape[0] - lam_db.shape[0]), (0, Kp - k_pred)))
+        _, idx, util, expo, comp, lam, guard = knn_rank_audited_quant_pallas(
+            Xq_p, X_q, q_scale, y2_q, lamdb_p, u_p, a_p, b_p, gamma_p,
+            k=k, k_extra=k_extra, mode=quant, m2=m2, eps=eps, tol=tol,
+            tile_b=tile_b, tile_n=tile_n, tile_m=tile_m,
+            interpret=interpret)
+        out = RankingOutput(
+            perm=idx[:n], utility=util[:n, 0], exposure=expo[:n],
+            compliant=comp[:n, 0].astype(bool), lam=lam[:n])
+        return (out, guard[:n]) if return_guard else out
+
+    xdb_p = _pad_to(X_db, 0, tile_n, 1e15)
+    lamdb_p = _pad_to(
+        jnp.pad(lam_db, ((0, 0), (0, Kp - k_pred))), 0, tile_n, 0.0)
     _, idx, util, expo, comp, lam = knn_rank_audited_pallas(
         Xq_p, xdb_p, lamdb_p, u_p, a_p, b_p, gamma_p, k=k, m2=m2,
         eps=eps, tol=tol, tile_b=tile_b, tile_n=tile_n, tile_m=tile_m,
         interpret=interpret)
-    return RankingOutput(
+    out = RankingOutput(
         perm=idx[:n], utility=util[:n, 0], exposure=expo[:n],
         compliant=comp[:n, 0].astype(bool), lam=lam[:n])
+    if return_guard:
+        return out, jnp.zeros((n, 1), jnp.int32)
+    return out
 
 
 def kernel_launch_count(predictor, m2: int, *,
@@ -458,12 +536,17 @@ def knn_lambda(
     X: Array, X_db: Array, lam_db: Array, *, k: int = 10,
     use_kernel: bool = True, interpret: bool | None = None,
     tile_q: int | None = None, tile_n: int = DB_SLAB,
+    quant: str = "off",
+    X_q: Array | None = None, q_scale: Array | None = None,
+    y2_q: Array | None = None, k_extra: int = QUANT_EXTRA,
 ) -> Array:
     """λ̂ (B, K) from the fused KNN kernel (knn_lambda_pallas): one db
     sweep per query tile, weighting at the flush step, no d2/idx or
     distance-matrix HBM traffic. tile_q defaults to 32 when the batch
     allows it — a bigger resident query tile divides the db-streaming
-    cost by 4 vs the top-k kernel's default of 8."""
+    cost by 4 vs the top-k kernel's default of 8. quant='int8'|'bf16'
+    streams the packed db instead (knn_lambda_quant_pallas — exact f32
+    survivor re-score at the flush, see kernels/common.py)."""
     if X_db.shape[0] < k:
         # same contract every other KNN path enforces — without it the
         # far-away db padding rows would silently enter the top-k
@@ -476,6 +559,15 @@ def knn_lambda(
         tile_q = knn_lambda_tile_q(X.shape[0])
     B = X.shape[0]
     Xq_p = _pad_to(jnp.asarray(X, jnp.float32), 0, tile_q, 0.0)
+    if quant != "off":
+        X_q, q_scale, y2_q = _quant_db(
+            X_db, X_q, q_scale, y2_q, quant=quant, tile_n=tile_n)
+        lamdb_p = jnp.pad(lam_db, ((0, X_q.shape[0] - lam_db.shape[0]),
+                                   (0, 0)))
+        lam, _guard = knn_lambda_quant_pallas(
+            Xq_p, X_q, q_scale, y2_q, lamdb_p, k=k, k_extra=k_extra,
+            mode=quant, tile_q=tile_q, tile_n=tile_n, interpret=interpret)
+        return lam[:B]
     # far-away padding rows can never enter a top-k (requires the KNN
     # contract N >= k real rows); their λ rows are zeroed for hygiene
     xdb_p = _pad_to(X_db, 0, tile_n, 1e15)

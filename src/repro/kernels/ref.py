@@ -100,6 +100,83 @@ def knn_lambda_ref(xq: Array, xdb: Array, lam_db: Array, k: int) -> Array:
     return _idw_lambda(d2, x2, y2, lam_db.astype(jnp.float32)[idx])
 
 
+def knn_quant_select_ref(
+    xq: Array,       # (B, D) queries, f32
+    X_q: Array,      # (n_pad, D) packed db (predictors.pack_knn_db)
+    q_scale: Array,  # (n_slabs, 1) per-slab dequant scales
+    y2_q: Array,     # (n_pad, 1) exact |x̃|^2 (PAD_Y2 on pad rows)
+    k: int,
+    *,
+    k_extra: int | None = None,
+    mode: str = "int8",
+):
+    """Oracle for the QUANTIZED selection path: build the full quantized
+    distance matrix slab by slab with the SAME shared math the kernels
+    run (common.quant_d2_tile), take the top-(k + k_extra) survivors by
+    stable argsort, re-score them exactly in f32 on the dequantized
+    rows, and re-rank to the final k with ties to the lowest global
+    index. Returns (d2 (B, k) ascending exact-on-x̃, idx (B, k),
+    guard (B, 1) i32) — bitwise the kernels' selection, λ̂ inputs, and
+    margin-guard flags.
+    """
+    from repro.kernels.common import (  # deferred: no cycle
+        QUANT_EXTRA, bottomk_rerank, exact_rescore, quant_d2_err,
+        quant_d2_tile)
+
+    if k_extra is None:
+        k_extra = QUANT_EXTRA
+    k_keep = k + k_extra
+    xq = xq.astype(jnp.float32)
+    B, D = xq.shape
+    n_pad = X_q.shape[0]
+    n_slabs = q_scale.shape[0]
+    slab = n_pad // n_slabs
+    d2q_cols = []
+    for s in range(n_slabs):
+        db = X_q[s * slab:(s + 1) * slab]
+        y2_row = jnp.broadcast_to(y2_q[s * slab:(s + 1) * slab, 0][None, :],
+                                  (B, slab))
+        d2q_cols.append(
+            quant_d2_tile(xq, db, q_scale[s, 0], y2_row, mode=mode))
+    d2q = jnp.concatenate(d2q_cols, axis=-1)                 # (B, n_pad)
+    order = jnp.argsort(d2q, axis=-1, stable=True)[:, :k_keep]
+    d2q_keep = jnp.take_along_axis(d2q, order, axis=-1)
+
+    scale_rows = q_scale[order // slab, 0]                   # (B, k_keep)
+    x_sel = X_q[order].astype(jnp.float32) * scale_rows[..., None]
+    y2_sel = y2_q[order, 0]
+    x_cols = x_sel.transpose(0, 2, 1)                        # (B, D, k_keep)
+    d2x = exact_rescore(xq, x_cols, y2_sel)
+
+    # margin guard on the QUANTIZED order (same rule as the kernels):
+    # gap vs the boundary pair's EXACT quantization errors
+    gap = d2q_keep[:, k:k + 1] - d2q_keep[:, k - 1:k]
+    errs = quant_d2_err(xq, x_cols, mode=mode)
+    guard = (gap <= errs[:, k - 1:k] + errs[:, k:k + 1]).astype(jnp.int32)
+    d2_top, idx_top = bottomk_rerank(d2x, order, k)
+    return d2_top, idx_top, guard
+
+
+def knn_quant_lambda_ref(
+    xq: Array, X_q: Array, q_scale: Array, y2_q: Array, lam_db: Array,
+    k: int, *, k_extra: int | None = None, mode: str = "int8",
+):
+    """λ̂ through the quantized selection oracle: knn_quant_select_ref's
+    neighbours weighted by the predictor's own _idw_lambda — the
+    semantics contract for knn_lambda_quant_pallas and the quantized
+    phase of knn_rank_audited_quant_pallas. Returns (lam_hat (B, K),
+    guard (B, 1) i32)."""
+    from repro.core.predictors import _idw_lambda  # deferred: no cycle
+
+    xq = xq.astype(jnp.float32)
+    d2, idx, guard = knn_quant_select_ref(
+        xq, X_q, q_scale, y2_q, k, k_extra=k_extra, mode=mode)
+    x2 = jnp.sum(xq * xq, axis=-1, keepdims=True)
+    lam = _idw_lambda(d2, x2, y2_q[idx, 0],
+                      lam_db.astype(jnp.float32)[idx])
+    return lam, guard
+
+
 def check_pred_width(k_pred: int, k_bucket: int) -> None:
     """The one place the predictor-width contract is enforced: a
     predictor may emit FEWER shadow prices than the problem has

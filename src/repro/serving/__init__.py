@@ -6,6 +6,7 @@ for the full semantics).
 
 from repro.serving.buckets import (
     Bucket,
+    DEFAULT_AUTOTUNE_PATH,
     K_TIERS,
     MIN_M1,
     MIN_M2,
@@ -15,7 +16,10 @@ from repro.serving.buckets import (
     bucket_for,
     ceil_pow2,
     fill_staging,
+    geometry_key,
     k_tier,
+    load_autotune_table,
+    save_autotune_table,
     unpad_result,
 )
 from repro.serving.admission import (

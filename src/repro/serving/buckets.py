@@ -40,6 +40,8 @@ tests/test_serving.py against the unpadded path):
 
 from __future__ import annotations
 
+import json
+import os
 from dataclasses import dataclass
 
 import numpy as np
@@ -83,6 +85,50 @@ class Bucket:
     @property
     def name(self) -> str:
         return f"{self.tag}/m1={self.m1}/m2={self.m2}/K={self.K}/B={self.batch}"
+
+
+# ---------------------------------------------------------------------------
+# Per-geometry kernel autotune table
+# ---------------------------------------------------------------------------
+# benchmarks/autotune.py sweeps TILE_B / TILE_M / DB_SLAB / quant mode
+# per bucket geometry on the target backend and caches the winners as
+# JSON next to the bucket lattice; the engine loads the table at
+# construction and applies each bucket's entry when it builds that
+# bucket's executable. Keys are tag-independent (the kernel geometry is
+# what the tiles tune, not the predictor identity).
+
+DEFAULT_AUTOTUNE_PATH = "experiments/bench/autotune_table.json"
+
+# the tunable knobs an autotune entry may carry; anything else in an
+# entry is ignored by the engine (forward compatibility)
+AUTOTUNE_KEYS = ("tile_b", "tile_m", "tile_n", "quant")
+
+
+def geometry_key(bucket: Bucket) -> str:
+    """The autotune-table key for a bucket: its padded kernel geometry,
+    without the tag (two tags sharing a geometry share tiles)."""
+    return f"m1={bucket.m1}/m2={bucket.m2}/K={bucket.K}/B={bucket.batch}"
+
+
+def save_autotune_table(table: dict, path: str = DEFAULT_AUTOTUNE_PATH
+                        ) -> str:
+    """Write {geometry_key: {tile_b/tile_m/tile_n/quant, ...}} as JSON.
+    Round-trips through load_autotune_table bit-for-bit (str keys, int
+    tiles, str quant mode)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"version": 1, "table": table}, f, indent=1, sort_keys=True)
+    return path
+
+
+def load_autotune_table(path: str = DEFAULT_AUTOTUNE_PATH) -> dict:
+    """Load a saved autotune table; {} when the file is absent (an
+    engine without a table serves on the defaults)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        payload = json.load(f)
+    return payload.get("table", {})
 
 
 def bucket_for(*, m1: int, m2: int, K: int, tag: str, batch: int) -> Bucket:

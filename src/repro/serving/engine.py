@@ -63,11 +63,14 @@ from repro.core.predictors import predictor_state, with_state
 from repro.core.ranking import RankingOutput, rank_given_lambda
 from repro.serving.admission import SHED_RUNG, AdmissionController
 from repro.serving.buckets import (
+    AUTOTUNE_KEYS,
     Bucket,
     assemble_batch,
     bucket_for,
     fill_staging,
     fill_stats,
+    geometry_key,
+    load_autotune_table,
     unpad_result,
 )
 from repro.serving.metrics import EngineMetrics
@@ -209,6 +212,7 @@ class ServingEngine:
         pipeline_depth: int = 1,
         admission: AdmissionController | bool | None = None,
         default_budget_s: float = DEFAULT_BUDGET_S,
+        autotune_table: dict | str | None = None,
         clock: Callable[[], float] = time.perf_counter,
     ):
         if executor not in ("xla", "fused", "dist"):
@@ -236,6 +240,14 @@ class ServingEngine:
             admission = None
         self.admission: AdmissionController | None = admission
         self.default_budget_s = float(default_budget_s)
+        # per-geometry kernel autotune table (benchmarks/autotune.py):
+        # a dict {geometry_key: {tile_b/tile_m/tile_n/quant}}, or a
+        # path to a saved JSON table (loaded here — absent file = empty
+        # table = defaults). Applied per bucket in _build_executor.
+        if isinstance(autotune_table, str):
+            autotune_table = load_autotune_table(autotune_table)
+        self.autotune_table: dict = dict(autotune_table or {})
+        self.autotuned_buckets: int = 0
         self.clock = clock
         self.metrics = EngineMetrics()
         self._predictors: dict[str, _PredictorEntry] = {}
@@ -549,11 +561,22 @@ class ServingEngine:
 
         m2, eps = bucket.m2, self.eps
         use_kernel = None if self.executor == "fused" else False
+        # autotuned tile geometry for this bucket (benchmarks/autotune):
+        # tile_* feed the dispatcher's kernel tiling; a 'quant' entry is
+        # advisory — the packed predictor's own static quant field (and
+        # its pack slab) route the quantized sweep, so the table entry
+        # documents the winning mode rather than forcing a repack here.
+        tune = self.autotune_table.get(geometry_key(bucket), {})
+        tiles = {kk: int(v) for kk, v in tune.items()
+                 if kk in AUTOTUNE_KEYS and kk != "quant"}
+        if tune:
+            self.autotuned_buckets += 1
 
         def fn(state, b, gamma, u, a, X):
             return predict_rank_audited_stateful(state, pred, X, u, a, b,
                                                  gamma, m2=m2, eps=eps,
-                                                 use_kernel=use_kernel)
+                                                 use_kernel=use_kernel,
+                                                 **tiles)
 
         return jax.jit(fn, donate_argnums=donate)
 

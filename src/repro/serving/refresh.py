@@ -39,13 +39,17 @@ one generation, and a refused (poisoned) generation leaves serving on
 last-good with `refresh_failures` incremented. `rollback` re-publishes
 the state that was live before the most recent successful swap.
 
-Stationarity gate: a refresh only publishes when the drained telemetry
-actually shows exposure shortfall (`min_shortfall`). Compliant traffic
-teaches the lane nothing — λ_target degenerates to λ̂_served — so under
-a stationary compliant stream the lane never swaps and serving is
-bitwise identical to refresh-off (tests/test_refresh.py asserts this).
-The lane is deliberately one-sided (shortfall-driven); symmetric λ
-decay for over-satisfied constraints is future work.
+Stationarity gate (two-sided): a refresh only publishes when the
+drained telemetry shows dual PRESSURE in either direction —
+under-exposure shortfall (clip(b − exposure, 0), pushes λ up) or
+over-satisfaction decay (clip(exposure − b, 0) on rows whose served
+λ̂ > 0: a constraint exceeded while still paying a utility boost, so
+the symmetric step in dual_refresh_targets relaxes its λ toward 0 and
+recovers utility). Traffic with neither — compliant AND either
+exactly-met or unpriced (λ̂ = 0) — teaches the lane nothing: λ_target
+degenerates to λ̂_served, the lane never swaps, and serving is bitwise
+identical to refresh-off (tests/test_refresh.py asserts both the
+neutrality and the decay-toward-zero direction).
 
 `refresh()` can be driven synchronously (every N requests — the
 deterministic mode the drift tests use) or from the background thread
@@ -84,14 +88,18 @@ def dual_refresh_targets(lam, b, exposure, *, eta: float) -> np.ndarray:
     return np.maximum(lam + np.float32(eta) * step, 0.0).astype(np.float32)
 
 
-def knn_ring_update(X_db, lam_db, X_new, lam_new,
-                    cursor: int) -> tuple[np.ndarray, np.ndarray, int]:
+def knn_ring_update(X_db, lam_db, X_new, lam_new, cursor: int,
+                    *, return_written: bool = False):
     """Append-with-evict for a frozen-shape KNN db: write the new rows
     over the oldest ones at `cursor` (wrapping), return host copies of
     the updated (X_db, lam_db) and the advanced cursor. When more new
     rows arrive than the db holds, only the newest n_train survive —
     the same rows a from-scratch fit on the trailing window would hold
-    (the append/evict parity property)."""
+    (the append/evict parity property). With `return_written`, a fourth
+    element carries the sorted unique row indices actually written —
+    the quantized-db refresh repacks exactly those rows' slabs and no
+    others, so a swap can never publish a scale that predates its
+    slab's rows."""
     X_db = np.array(X_db)                   # host copies; inputs untouched
     lam_db = np.array(lam_db)
     X_new = np.asarray(X_new, X_db.dtype)
@@ -99,14 +107,19 @@ def knn_ring_update(X_db, lam_db, X_new, lam_new,
     n_train = X_db.shape[0]
     n = X_new.shape[0]
     if n == 0:
-        return X_db, lam_db, cursor
+        idx = np.zeros((0,), np.int64)
+        return ((X_db, lam_db, cursor, idx) if return_written
+                else (X_db, lam_db, cursor))
     if n > n_train:                         # only the newest rows survive
         X_new, lam_new = X_new[n - n_train:], lam_new[n - n_train:]
         cursor, n = (cursor + (n - n_train)) % n_train, n_train
     idx = (cursor + np.arange(n)) % n_train
     X_db[idx] = X_new
     lam_db[idx] = lam_new
-    return X_db, lam_db, int((cursor + n) % n_train)
+    cursor = int((cursor + n) % n_train)
+    if return_written:
+        return X_db, lam_db, cursor, np.unique(idx)
+    return X_db, lam_db, cursor
 
 
 def ridge_refresh(W, c, X_new, targets, *, mu: float = 32.0
@@ -168,7 +181,9 @@ class RefreshLane:
     capacity        max telemetry rows buffered per tag (newest win).
     min_samples     rows required before a refresh will publish.
     min_shortfall   stationarity gate: publish only if some buffered
-                    row's exposure shortfall sum exceeds this.
+                    row's exposure shortfall sum — or its λ-weighted
+                    over-satisfaction (decay pressure) sum — exceeds
+                    this.
     mu              ridge anchor weight (linear family).
     mean_weight     prior weight of the live mean (mean family).
     mlp_steps/lr    warm-start re-fit budget (mlp family).
@@ -241,7 +256,7 @@ class RefreshLane:
 
     def _refresh_tag(self, tag: str) -> dict:
         report = {"swapped": False, "epoch": None, "n": 0,
-                  "max_shortfall": 0.0, "reason": None}
+                  "max_shortfall": 0.0, "max_decay": 0.0, "reason": None}
         drained = self._drain(tag)
         if drained is None:
             report["reason"] = "no-telemetry"
@@ -252,12 +267,20 @@ class RefreshLane:
             report["reason"] = "below-min-samples"
             return report
         shortfall = np.clip(b - exposure, 0.0, None).sum(axis=1)
+        # decay pressure: over-satisfied constraints that still carry a
+        # positive served λ̂ — the symmetric subgradient step relaxes
+        # them toward 0, recovering the utility the boost was costing.
+        decay = (np.clip(exposure - b, 0.0, None)
+                 * (lam > 0.0)).sum(axis=1)
         report["max_shortfall"] = float(shortfall.max())
-        if report["max_shortfall"] <= self.min_shortfall:
-            # stationarity gate: compliant traffic teaches nothing —
-            # publishing would still perturb KNN neighbourhoods, so
-            # don't (bitwise neutrality under a stationary stream).
-            report["reason"] = "no-shortfall"
+        report["max_decay"] = float(decay.max())
+        if (report["max_shortfall"] <= self.min_shortfall
+                and report["max_decay"] <= self.min_shortfall):
+            # stationarity gate: traffic with no dual pressure in
+            # either direction teaches nothing — publishing would
+            # still perturb KNN neighbourhoods, so don't (bitwise
+            # neutrality under a stationary stream).
+            report["reason"] = "no-pressure"
             return report
         targets = dual_refresh_targets(lam, b, exposure, eta=self.eta)
         try:
@@ -288,10 +311,26 @@ class RefreshLane:
         state = self.engine.predictor_state_of(tag)
         if isinstance(template, KNNLambdaPredictor):
             cursor = self._knn_cursor.get(tag, 0)
-            X_db, lam_db, cursor = knn_ring_update(
-                state["X_db"], state["lam_db"], X, targets, cursor)
+            X_db, lam_db, cursor, written = knn_ring_update(
+                state["X_db"], state["lam_db"], X, targets, cursor,
+                return_written=True)
             self._knn_cursor[tag] = cursor
-            return {"X_db": X_db, "lam_db": lam_db}
+            if template.X_q is None:
+                return {"X_db": X_db, "lam_db": lam_db}
+            # quantized db: repack ONLY the slabs the ring write
+            # touched — each touched slab gets a fresh scale computed
+            # from its post-write rows (bitwise what a full repack
+            # would produce), untouched slabs keep their buffers. The
+            # swap therefore can never serve a scale that is stale
+            # relative to its slab's rows.
+            from repro.core.predictors import repack_knn_slabs
+            slab = (state["X_q"].shape[0]
+                    // max(state["q_scale"].shape[0], 1))
+            X_q, q_scale, y2_q = repack_knn_slabs(
+                X_db, state["X_q"], state["q_scale"], state["y2_q"],
+                written, mode=template.quant, slab=slab)
+            return {"X_db": X_db, "lam_db": lam_db, "X_q": X_q,
+                    "q_scale": q_scale, "y2_q": y2_q}
         if isinstance(template, LinearLambdaPredictor):
             W, c = ridge_refresh(state["W"], state["c"], X, targets,
                                  mu=self.mu)

@@ -103,6 +103,24 @@ _PROG = textwrap.dedent("""
     lam_dist = knn_predict_distributed(mesh, X_db, lam_db, X, k=5)
     np.testing.assert_allclose(lam_dist, lam_dense, rtol=1e-4, atol=1e-5)
 
+    # ---- sharded QUANTIZED sweep == dense quantized predict ---------------
+    # pack at a slab that divides the per-shard row count (128 rows over
+    # 4 model shards -> 32/shard, slab=16): the global pack row-shards
+    # cleanly, each shard holds whole slabs with their scales, and the
+    # exact-on-x-tilde per-shard values make the k*shards merge bitwise
+    # the dense selection.
+    from repro.core.predictors import knn_predict_quant, pack_knn_db
+    from repro.core.serving_dist import knn_predict_quant_distributed
+    Xp_q, sc_q, y2q_q = pack_knn_db(X_db, mode="int8", slab=16)
+    assert Xp_q.shape[0] == n_db  # no pad rows under this geometry
+    lam_qd = knn_predict_quant(Xp_q, sc_q, y2q_q, lam_db, X, k=5,
+                               mode="int8")
+    lam_qdist = knn_predict_quant_distributed(
+        mesh, Xp_q, sc_q, y2q_q, lam_db, X, k=5, mode="int8")
+    np.testing.assert_allclose(np.asarray(lam_qdist), np.asarray(lam_qd),
+                               rtol=5e-7, atol=1e-7)
+    print("sharded quantized sweep OK")
+
     # the slab-streaming shard body vs the retired dense-matrix body:
     # the old body materialized the per-shard (B_l, n_l) distance
     # matrix; the new one streams knn_topk_scan slabs. Selection is

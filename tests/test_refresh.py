@@ -423,16 +423,19 @@ def test_refresh_reduces_shortfall_under_tighten_drift():
 
 
 def test_refresh_is_bitwise_neutral_on_stationary_compliant_stream():
-    """The stationarity gate: on a compliant stationary stream the lane
-    never publishes (nothing to learn), so refresh-on serving is
-    bitwise identical to refresh-off."""
+    """The stationarity gate: on a stationary stream with no dual
+    pressure — compliant (no shortfall) AND served with λ̂ = 0 (no
+    decay pressure: the symmetric side of the gate only counts
+    over-satisfaction on rows whose served λ̂ > 0) — the lane never
+    publishes, so refresh-on serving is bitwise identical to
+    refresh-off."""
     reqs = make_drift_stream(
         DriftSpec(kind="none"), tag=TAG, n_requests=96, m1=128, m2=16,
         K=K, d_cov=D_COV, topic_rate=0.45, b_frac=0.01, seed=11)
     rng = np.random.default_rng(12)
     pred = KNNLambdaPredictor.fit(
         rng.normal(size=(64, D_COV)).astype(np.float32),
-        0.1 * np.abs(rng.normal(size=(64, K))).astype(np.float32), k=5)
+        np.zeros((64, K), np.float32), k=5)
 
     def run(on):
         eng = _engine(pred, max_batch=8)
@@ -444,7 +447,7 @@ def test_refresh_is_bitwise_neutral_on_stationary_compliant_stream():
             if lane is not None:
                 for rep in lane.refresh().values():
                     assert not rep["swapped"]
-                    assert rep["reason"] in ("no-shortfall",
+                    assert rep["reason"] in ("no-pressure",
                                              "below-min-samples")
         return results, eng
 
@@ -460,6 +463,85 @@ def test_refresh_is_bitwise_neutral_on_stationary_compliant_stream():
     for r in got:
         assert r.epoch == 0
         _assert_same(r, ref_by_rid[r.rid])
+
+
+def test_quantized_knn_refresh_never_serves_stale_scales():
+    """Satellite contract for the quantized db under the refresh lane:
+    a mid-stream ring-write swap repacks exactly the touched slabs, so
+    the published (X_q, q_scale, y2_q) is bitwise what a from-scratch
+    pack of the updated f32 db would produce — a swap can never leave
+    a slab's scale predating its rows."""
+    from repro.core.predictors import pack_knn_db
+
+    reqs = _stream(48, seed=31)
+    rng = np.random.default_rng(32)
+    pred = KNNLambdaPredictor.fit(
+        rng.normal(size=(64, D_COV)).astype(np.float32),
+        np.abs(rng.normal(size=(64, K))).astype(np.float32),
+        k=5).quantized(mode="int8", slab=16)
+
+    eng = _engine(pred, max_batch=8)
+    lane = RefreshLane(eng, min_samples=8)
+    eng.warmup(reqs)
+    swaps = 0
+    for i in range(0, len(reqs), 16):
+        eng.serve_stream(reqs[i:i + 16], warmup=False)
+        rep = lane.refresh()[TAG]
+        if not rep["swapped"]:
+            continue
+        swaps += 1
+        state = eng.predictor_state_of(TAG)
+        X_q, q_scale, y2_q = pack_knn_db(
+            jnp.asarray(state["X_db"]), mode="int8", slab=16)
+        for name, live, full in (("X_q", state["X_q"], X_q),
+                                 ("q_scale", state["q_scale"], q_scale),
+                                 ("y2_q", state["y2_q"], y2_q)):
+            assert (np.asarray(live) == np.asarray(full)).all(), (
+                f"{name} diverged from a from-scratch repack after "
+                f"swap {swaps}")
+    assert swaps >= 1, "the shortfall-heavy stream never published"
+    eng.close()
+
+
+def test_refresh_decays_oversatisfied_lambda_toward_zero():
+    """The symmetric side of the gate: a predictor serving POSITIVE λ̂
+    on a compliant stationary stream is over-boosting — exposure
+    exceeds the thresholds while utility pays for the boost. The lane
+    must now publish (decay pressure), and each generation's predicted
+    λ̂ must move toward 0, never below it."""
+    reqs = make_drift_stream(
+        DriftSpec(kind="none"), tag=TAG, n_requests=96, m1=128, m2=16,
+        K=K, d_cov=D_COV, topic_rate=0.45, b_frac=0.01, seed=21)
+    rng = np.random.default_rng(22)
+    X_fit = rng.normal(size=(64, D_COV)).astype(np.float32)
+    pred = KNNLambdaPredictor.fit(
+        X_fit, 0.5 * np.abs(rng.normal(size=(64, K))).astype(np.float32),
+        k=5)
+    probe = jnp.asarray(X_fit[:16])
+
+    eng = _engine(pred, max_batch=8)
+    lane = RefreshLane(eng, min_samples=8, eta=0.5)
+    eng.warmup(reqs)
+    means = [float(np.mean(np.asarray(
+        with_state(pred, eng.predictor_state_of(TAG)).predict(probe))))]
+    saw_decay_swap = False
+    for i in range(0, len(reqs), 16):
+        eng.serve_stream(reqs[i:i + 16], warmup=False)
+        rep = lane.refresh()[TAG]
+        if rep["swapped"]:
+            assert rep["max_decay"] > 0.0
+            saw_decay_swap = True
+        means.append(float(np.mean(np.asarray(
+            with_state(pred, eng.predictor_state_of(TAG))
+            .predict(probe)))))
+    assert saw_decay_swap, "no decay-driven refresh ever published"
+    # λ̂ relaxes toward 0 under sustained over-satisfaction and the
+    # projection keeps it non-negative throughout
+    assert means[-1] < means[0]
+    final = np.asarray(
+        with_state(pred, eng.predictor_state_of(TAG)).predict(probe))
+    assert (final >= 0.0).all()
+    eng.close()
 
 
 # ---------------------------------------------------------------------------
