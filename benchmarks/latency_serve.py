@@ -77,6 +77,17 @@ Three measurement modes (docs/benchmarks.md walks through them):
     per flushed micro-batch and zero post-warmup recompiles on both
     sides. Writes BENCH_quant_serve.json with `--json`.
 
+  * fleet (`--only fleet`): the fault-tolerance gate (`check_fleet`) —
+    a 3-replica FleetRouter serves a 512-request mixed stream under
+    the seeded chaos plan (crash-at-batch-k, heartbeat blackhole,
+    slow replica, partial-drain kill), armed AFTER a fault-free
+    prefix + refresh so an epoch checkpoint exists before the first
+    crash. Asserts zero orphaned futures, zero lost requests, every
+    rid served exactly once, the restarted replica resuming at the
+    last-good checkpointed epoch (not cold), zero post-warmup
+    recompiles on every incarnation, and p99 within the latency
+    budget x a CI tolerance. Writes BENCH_fleet.json with `--json`.
+
 Usage:
 
   python -m benchmarks.latency_serve \\
@@ -114,9 +125,14 @@ from repro.core.predictors import (
 )
 from repro.core.ranking import rank_given_lambda
 from repro.data.synthetic import DriftSpec
+from repro.checkpoint import CheckpointStore
 from repro.serving import (
     DEFAULT_MIX,
     AdmissionController,
+    FaultInjector,
+    FaultPlan,
+    FleetRouter,
+    HealthConfig,
     RefreshLane,
     Scenario,
     ServingEngine,
@@ -995,6 +1011,223 @@ def records_quant(res):
                      m["int8"]["compiles_post_warmup"]})]
 
 
+FLEET_TAG = "fleet_arch"
+FLEET_D, FLEET_K = 12, 4
+
+
+def _fleet_step_clock(step_s=1e-3):
+    """Router clock for the fleet gate: advances a fixed step per call,
+    so health deadlines and restart backoff depend on the CALL pattern
+    (deterministic given the stream + plan), not wall time. Engines
+    keep their real clocks — the p99 the gate reports is real."""
+    t = [0.0]
+
+    def clock():
+        t[0] += step_s
+        return t[0]
+    return clock
+
+
+def run_fleet(*, n_requests=512, max_batch=8, seed=17, slow_ms=1.0,
+              ckpt_dir=None, verbose=True):
+    """Chaos probe for the replica fleet (serving/fleet.py).
+
+    Builds a 3-replica FleetRouter (each replica a full engine +
+    RefreshLane + per-replica CheckpointStore), serves a fault-free
+    prefix (n/4 requests) and runs one refresh so the busiest
+    replica publishes AND checkpoints epoch 1, then arms the seeded
+    chaos plan — crash-at-batch-k and a partial-drain kill on the
+    primary of the busiest bucket, a heartbeat blackhole + poisoned
+    swap on the second, injected latency on the third — and serves
+    the remaining 3n/4 through the failures, with periodic refreshes
+    so the poisoned swap actually fires. The fault schedule is
+    derived from `seed` and the router runs on a step clock, so the
+    same failures replay on every box."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(96, FLEET_D)).astype(np.float32)
+    lam = np.abs(rng.normal(size=(96, FLEET_K))).astype(np.float32)
+    if ckpt_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="fleet-gate-")
+        ckpt_dir = tmp.name
+    else:
+        tmp = None
+
+    def factory(name):
+        eng = ServingEngine(max_batch=max_batch, max_wait_ms=1e9,
+                            pipeline_depth=1)
+        eng.register_predictor(
+            FLEET_TAG, KNNLambdaPredictor.fit(X, lam, k=5), d_cov=FLEET_D)
+        store = CheckpointStore(os.path.join(ckpt_dir, name), keep_last=3)
+        lane = RefreshLane(eng, eta=0.5, min_samples=8, checkpoint=store)
+        return eng, lane
+
+    mix = (Scenario("feed", m1=128, m2=16, K=FLEET_K, tag=FLEET_TAG,
+                    d_cov=FLEET_D, m1_jitter=0.0, b_frac=0.25, weight=2.0,
+                    surface="feed"),
+           Scenario("strip", m1=192, m2=16, K=FLEET_K, tag=FLEET_TAG,
+                    d_cov=FLEET_D, m1_jitter=0.0, b_frac=0.25, weight=1.0,
+                    surface="strip"))
+    reqs = make_stream(mix, n_requests=n_requests, seed=seed + 1)
+
+    router = FleetRouter(
+        factory, 3, clock=_fleet_step_clock(),
+        health=HealthConfig(suspect_after_s=0.02, dead_after_s=0.5),
+        heartbeat_interval_s=float("inf"),
+        backoff_base_s=0.02, backoff_cap_s=0.2, seed=seed)
+    router.warmup(reqs)
+
+    def serve(chunk, out):
+        for r in chunk:
+            out += router.submit(r)
+            out += router.poll()
+            router.tick()
+
+    # ---- fault-free prefix: a checkpointed epoch must exist before
+    # the first planned crash, or "restart resumes at last-good λ̂"
+    # would be vacuous.
+    results = []
+    prefix = n_requests // 4
+    serve(reqs[:prefix], results)
+    results += router.drain()
+    # crash target: the primary of the busiest bucket — the chaos plan
+    # is keyed by name, the ring decides who that is.
+    order = []
+    for r in reqs:
+        name = router.replicas[
+            router._owners(router._bucket_key(r))[0]].name
+        if name not in order:
+            order.append(name)
+    order += [rep.name for rep in router.replicas if rep.name not in order]
+    pre = router.refresh()[order[0]][FLEET_TAG]
+    assert pre["swapped"] and pre["checkpointed"], (
+        f"fleet gate setup: prefix refresh did not checkpoint: {pre}")
+    last_good = pre["epoch"]
+
+    # ---- arm the chaos plan and serve the remainder through it
+    plan = FaultPlan.chaos(order, seed=seed, slow_ms=slow_ms)
+    router.fault_plan = plan
+    for rep in router.replicas:
+        rep.injector = FaultInjector(plan.faults_for(rep.name), rep.name)
+        if rep.lane is not None:
+            rep.lane.publish_filter = (
+                lambda tag, state, inj=rep.injector: inj.poison_state(state))
+    router.arm_faults()
+    rest = reqs[prefix:]
+    refused = 0
+    step = max(1, len(rest) // 3)
+    for i in range(0, len(rest), step):
+        serve(rest[i:i + step], results)
+        for reports in router.refresh().values():   # poisoned swap fires
+            rep = reports.get(FLEET_TAG, {})        # on a planned index
+            refused += int(str(rep.get("reason", "")).startswith("refused"))
+    results += router.drain()
+
+    s = router.fleet_summary()
+    served = sorted(r.rid for r in results if not isinstance(r, Shed))
+    crash_rep = next(r for r in router.replicas if r.name == order[0])
+    restored = (crash_rep.restore_history[0].get(FLEET_TAG)
+                if crash_rep.restore_history else None)
+    out = {
+        "n_requests": n_requests,
+        "replicas": 3,
+        "exactly_once": served == list(range(n_requests)),
+        "orphaned_futures": s["orphaned_futures"],
+        "lost": s["lost"],
+        "crashes": s["crashes"],
+        "restarts": s["restarts"],
+        "failovers": s["failovers"],
+        "hedges": s["hedges"],
+        "duplicates_deduped": s["duplicates_deduped"],
+        "retries": s["retries"],
+        "heartbeats_missed": s["heartbeats_missed"],
+        "poisoned_swaps_refused": refused,
+        "last_good_epoch": last_good,
+        "restored_epoch": restored,
+        "compiles_post_warmup": sum(
+            rep.engine.metrics.compiles_post_warmup
+            for rep in router.replicas),
+        "p50_ms": s.get("latency_ms", {}).get("p50", float("nan")),
+        "p99_ms": s.get("latency_ms", {}).get("p99", float("nan")),
+    }
+    router.close()
+    if tmp is not None:
+        tmp.cleanup()
+    if verbose:
+        print(f"fleet: served {len(served)}/{n_requests}  crashes "
+              f"{out['crashes']}  restarts {out['restarts']}  failovers "
+              f"{out['failovers']}  hedges {out['hedges']}  retries "
+              f"{out['retries']}  lost {out['lost']}  orphans "
+              f"{out['orphaned_futures']}  restored epoch "
+              f"{out['restored_epoch']} (last-good {out['last_good_epoch']})"
+              f"  p99 {out['p99_ms']:.2f} ms", flush=True)
+    save_json("latency_fleet", out)
+    return out
+
+
+# CI boxes are noisy shared CPUs, and a supervised restart re-warms
+# (recompiles) the replica's bucket subset on the caller thread, which
+# stalls requests queued on the HEALTHY replicas for the duration —
+# so the fleet gate checks the budget with a generous multiple. The
+# tight per-request budget is the deadline gate's job; here the p99
+# bound only catches pathological stalls (a failover path that
+# serializes the fleet, a drain that spins) well past that restart
+# pause.
+FLEET_P99_TOLERANCE = 40.0
+
+
+def check_fleet(*, quick=False, verbose=True):
+    """Fleet fault-tolerance gate (AssertionError on regression): under
+    the full seeded chaos plan, every request is served exactly once,
+    nothing is lost or orphaned, the crashed replica restarts and
+    resumes at the last-good checkpointed epoch, no incarnation
+    recompiles after warmup, and p99 stays within budget x tolerance."""
+    kw = dict(n_requests=256) if quick else {}
+    res = run_fleet(verbose=verbose, **kw)
+    assert res["exactly_once"], (
+        "fleet gate: served rids != submitted rids (dropped or "
+        "duplicated requests)")
+    assert res["orphaned_futures"] == 0, (
+        f"fleet gate: {res['orphaned_futures']} fleet futures never "
+        f"settled")
+    assert res["lost"] == 0, (
+        f"fleet gate: {res['lost']} requests exhausted their retry "
+        f"budget")
+    assert res["crashes"] >= 1 and res["restarts"] >= 1, (
+        f"fleet gate: chaos plan did not exercise crash+restart "
+        f"(crashes={res['crashes']}, restarts={res['restarts']})")
+    assert res["restored_epoch"] == res["last_good_epoch"], (
+        f"fleet gate: restarted replica resumed at epoch "
+        f"{res['restored_epoch']}, expected last-good "
+        f"{res['last_good_epoch']} (cold restart?)")
+    assert res["compiles_post_warmup"] == 0, (
+        f"fleet gate: {res['compiles_post_warmup']} recompiles after "
+        f"warmup across the fleet — a failover path hit a cold bucket")
+    budget = LATENCY_BUDGET_MS * FLEET_P99_TOLERANCE
+    assert res["p99_ms"] <= budget, (
+        f"fleet gate: p99 {res['p99_ms']:.1f} ms over {budget:.0f} ms "
+        f"(budget x {FLEET_P99_TOLERANCE:g} CI tolerance)")
+    print("# fleet acceptance (exactly-once under chaos, 0 orphans, "
+          "0 lost, restart resumes last-good epoch, 0 recompiles, "
+          "p99 within tolerance): PASS")
+    return res
+
+
+def records_fleet(res):
+    return [Record(
+        name=f"serve_fleet/chaos/n={res['n_requests']}"
+             f"/replicas={res['replicas']}",
+        us_per_call=res["p99_ms"] * 1e3,
+        derived={"p50_ms": res["p50_ms"], "p99_ms": res["p99_ms"],
+                 "exactly_once": res["exactly_once"],
+                 "orphaned_futures": res["orphaned_futures"],
+                 "lost": res["lost"], "crashes": res["crashes"],
+                 "restarts": res["restarts"],
+                 "failovers": res["failovers"],
+                 "hedges": res["hedges"], "retries": res["retries"],
+                 "restored_epoch": res["restored_epoch"],
+                 "compiles_post_warmup": res["compiles_post_warmup"]})]
+
+
 def records(rows):
     return [Record(
         name=f"serve/m1={r['m1']}/K={r['K']}/m2={r['m2']}/B={r['batch']}",
@@ -1042,7 +1275,8 @@ def main():
                     help="CI-sized: small direct sweep, 256-request stream")
     ap.add_argument("--only", default="all",
                     choices=["all", "direct", "engine", "frontier",
-                             "deadline", "refresh", "drift", "quant"])
+                             "deadline", "refresh", "drift", "quant",
+                             "fleet"])
     ap.add_argument("--frontier", action="store_true",
                     help="also sweep p99 vs offered load (paced open-loop "
                          "Poisson arrivals below/around saturation)")
@@ -1110,6 +1344,17 @@ def main():
             print(rec.csv())
         if args.json:
             write_bench_json(args.json, "quant_serve", recs,
+                             meta={"quick": args.quick})
+        return
+
+    if args.only == "fleet":
+        # the fleet fault-tolerance gate writes its own BENCH_fleet.json
+        res = check_fleet(quick=args.quick)
+        recs = records_fleet(res)
+        for rec in recs:
+            print(rec.csv())
+        if args.json:
+            write_bench_json(args.json, "fleet", recs,
                              meta={"quick": args.quick})
         return
 

@@ -154,6 +154,123 @@ class CheckpointStore:
                 if time.time() - os.path.getmtime(path) > 3600:
                     shutil.rmtree(path, ignore_errors=True)
 
+    # -- per-epoch predictor state (the serving fleet's restart path) --------
+    #
+    # The refresh lane writes one checkpoint per published predictor
+    # generation (save_predictor_epoch after every successful
+    # engine.swap_predictor), keyed (tag, epoch) under
+    # <dir>/predictors/<tag>/step_<epoch>/ — the same atomic
+    # manifest+npz format, so a crashed writer never corrupts the
+    # newest epoch. A restarted replica restores the newest LOADABLE
+    # epoch: load_predictor_epoch validates each candidate (readable
+    # manifest/npz, complete leaves, manifest-consistent shapes,
+    # finite floats) and on corruption REFUSES it and falls back to
+    # the previous epoch rather than serving a half-written λ̂.
+
+    def _predictor_store(self, tag: str) -> "CheckpointStore":
+        return CheckpointStore(
+            os.path.join(self.directory, "predictors", tag),
+            keep_last=self.keep_last)
+
+    def predictor_epochs(self, tag: str) -> list[int]:
+        """Epochs checkpointed for `tag`, ascending (post-GC: only the
+        newest keep_last survive)."""
+        d = os.path.join(self.directory, "predictors", tag)
+        if not os.path.isdir(d):
+            return []
+        return self._predictor_store(tag).steps()
+
+    def save_predictor_epoch(self, tag: str, epoch: int, state: PyTree,
+                             *, extra: dict | None = None) -> str:
+        """Checkpoint one predictor generation: `state` is the tag's
+        state dict (core.predictors.predictor_state) as published at
+        `epoch`. Synchronous — the refresh lane calls this after the
+        swap flips, off the serving hot path."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        sub = self._predictor_store(tag)
+        return sub._write(int(epoch), host,
+                          {"tag": tag, "epoch": int(epoch), **(extra or {})})
+
+    def load_predictor_epoch(self, tag: str, *, epoch: int | None = None,
+                             like: PyTree | None = None
+                             ) -> tuple[PyTree, int]:
+        """Load the newest loadable epoch for `tag` (or exactly
+        `epoch`), returning (state, epoch). Corrupted checkpoints are
+        refused — unreadable manifest/npz, leaves missing or extra vs
+        the manifest, shapes disagreeing with the manifest, non-finite
+        float values, or (with `like`) structure/shape mismatch — and
+        the previous epoch is tried instead. Raises FileNotFoundError
+        only when no epoch is loadable at all."""
+        epochs = self.predictor_epochs(tag)
+        candidates = ([int(epoch)] if epoch is not None
+                      else list(reversed(epochs)))
+        if not candidates:
+            raise FileNotFoundError(
+                f"no predictor checkpoints for tag {tag!r} in "
+                f"{self.directory}")
+        sub = self._predictor_store(tag)
+        errors = []
+        for e in candidates:
+            try:
+                return self._load_predictor_step(sub, e, like), e
+            except Exception as err:  # noqa: BLE001 — refuse + fall back
+                errors.append(f"epoch {e}: {err}")
+        raise FileNotFoundError(
+            f"no loadable predictor checkpoint for tag {tag!r}: "
+            + "; ".join(errors))
+
+    @staticmethod
+    def _load_predictor_step(sub: "CheckpointStore", step: int,
+                             like: PyTree | None) -> PyTree:
+        d = sub._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaf_meta = manifest["leaves"]
+        with np.load(os.path.join(d, "arrays.npz")) as data:
+            buffers = {}
+            for name in data.files:
+                key = _npz_to_key(name)
+                if key not in leaf_meta:
+                    raise ValueError(f"leaf {key} absent from manifest")
+                arr = _decode(data[name], leaf_meta[key]["dtype"])
+                if list(arr.shape) != leaf_meta[key]["shape"]:
+                    raise ValueError(
+                        f"leaf {key}: array shape {list(arr.shape)} != "
+                        f"manifest {leaf_meta[key]['shape']}")
+                if np.issubdtype(arr.dtype, np.floating) \
+                        and not bool(np.all(np.isfinite(arr))):
+                    raise ValueError(f"leaf {key}: non-finite values")
+                buffers[key] = arr
+        missing = set(leaf_meta) - set(buffers)
+        if missing:
+            raise ValueError(f"missing leaves: {sorted(missing)[:5]}")
+        if like is not None:
+            flat_like, treedef = _flatten_with_paths(like)
+            absent = set(flat_like) - set(buffers)
+            if absent:
+                raise KeyError(f"missing leaves vs template: "
+                               f"{sorted(absent)[:5]}")
+            leaves = []
+            for key, ref in flat_like.items():
+                buf = buffers[key]
+                if tuple(buf.shape) != tuple(ref.shape):
+                    raise ValueError(
+                        f"leaf {key}: shape {buf.shape} != template "
+                        f"{tuple(ref.shape)}")
+                leaves.append(buf.astype(ref.dtype)
+                              if str(buf.dtype) != str(ref.dtype) else buf)
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+        # no template: rebuild the (possibly nested) state dict from
+        # the flattened '/'-joined keys.
+        out: dict = {}
+        for key, buf in buffers.items():
+            parts = key.split(_SEP)
+            node = out
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = buf
+        return out
+
     # -- restore ---------------------------------------------------------------
 
     def restore(

@@ -34,7 +34,7 @@ from repro.core.predictors import KNNLambdaPredictor, MeanLambdaPredictor
 from repro.data.batches import make_deepfm_batch, make_seqrec_batch
 from repro.models.recsys import RECSYS_REGISTRY
 from repro.optim import adam_init
-from repro.serving import RankRequest, RankResult, ServingEngine
+from repro.serving import FleetRouter, RankRequest, RankResult, ServingEngine
 
 
 def _request_batch(cfg, B, seed):
@@ -73,6 +73,11 @@ def main():
                          "KNN -> mean degradation ladder")
     ap.add_argument("--budget-ms", type=float, default=50.0,
                     help="per-request latency budget (the paper's SLA)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a fault-tolerant FleetRouter "
+                         "over N engine replicas (health-checked "
+                         "consistent-hash routing, hedged retries, "
+                         "supervised restart); 1 = single engine")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -125,20 +130,23 @@ def main():
     knn = KNNLambdaPredictor.fit(X_off, sol.lam, k=10)
 
     # --- 3. streaming online stage -----------------------------------------
-    engine = ServingEngine(max_batch=args.max_batch,
-                           max_wait_ms=args.max_wait_ms,
-                           executor=args.executor,
-                           pipeline_depth=args.pipeline_depth,
-                           admission=args.admission,
-                           default_budget_s=args.budget_ms / 1e3)
-    engine.register_predictor(args.arch, knn, d_cov=int(X_off.shape[1]))
-    if args.admission:
-        # Cheapest rung: intercept-only predictor over the same duals.
-        # Pre-warmed like every other bucket, so degrading never compiles.
-        mean = MeanLambdaPredictor.fit(X_off, sol.lam)
-        engine.register_predictor(f"{args.arch}_mean", mean,
-                                  d_cov=int(X_off.shape[1]))
-        engine.set_degradation_ladder(args.arch, [f"{args.arch}_mean"])
+    def make_engine(_name=None):
+        eng = ServingEngine(max_batch=args.max_batch,
+                            max_wait_ms=args.max_wait_ms,
+                            executor=args.executor,
+                            pipeline_depth=args.pipeline_depth,
+                            admission=args.admission,
+                            default_budget_s=args.budget_ms / 1e3)
+        eng.register_predictor(args.arch, knn, d_cov=int(X_off.shape[1]))
+        if args.admission:
+            # Cheapest rung: intercept-only predictor over the same
+            # duals. Pre-warmed like every other bucket, so degrading
+            # never compiles.
+            mean = MeanLambdaPredictor.fit(X_off, sol.lam)
+            eng.register_predictor(f"{args.arch}_mean", mean,
+                                   d_cov=int(X_off.shape[1]))
+            eng.set_degradation_ladder(args.arch, [f"{args.arch}_mean"])
+        return eng
 
     # materialize the arrival stream: chunked backbone scoring, then one
     # RankRequest per user with a jittered candidate-subset size.
@@ -157,32 +165,62 @@ def main():
                 rid=c * chunk + i, u=u[i, :m1], a=topics[:, :m1], b=b,
                 m2=m2_req, X=X[i], tag=args.arch, gamma=gamma[:m2_req]))
 
-    warm = engine.warmup(requests)
-    results = engine.serve_stream(requests)
-    engine.close()
-
-    served = [r for r in results if isinstance(r, RankResult)]
-    s = engine.metrics.summary()
-    print(json.dumps({
-        "arch": args.arch, "requests": len(results),
-        "served": len(served), "shed": len(results) - len(served),
+    report = {
+        "arch": args.arch,
         "n_candidates": n_cand, "m2": m2, "K": K,
         "executor": args.executor,
         "max_batch": args.max_batch, "max_wait_ms": args.max_wait_ms,
         "pipeline_depth": args.pipeline_depth,
         "admission": args.admission, "budget_ms": args.budget_ms,
+        "replicas": args.replicas,
         "offline_compliance": round(float(sol.compliant.mean()), 3),
-        "buckets": warm["buckets"],
-        "compiles": s["compiles"],
-        "compiles_post_warmup": s["compiles_post_warmup"],
-        "fill_rate": s["fill_rate"],
-        "latency_ms": s["latency_ms"],
-        "queue_wait_ms": s["queue_wait_ms"],
-        "pipeline": s["pipeline"],
-        "online_compliance": s["compliance"],
-        "deadline": s["deadline"],
-        "within_budget": bool(s["latency_ms"]["p99"] <= args.budget_ms),
-    }, indent=1))
+    }
+    if args.replicas > 1:
+        # fleet path: health-checked consistent-hash routing over N
+        # replica engines — each warms only its bucket subset (+ backup).
+        router = FleetRouter(make_engine, args.replicas)
+        warm = router.warmup(requests)
+        results = router.serve_stream(requests, warmup=False)
+        router.close()
+        served = [r for r in results if isinstance(r, RankResult)]
+        s = router.fleet_summary()
+        lat = s.get("latency_ms", {"p99": float("nan")})
+        report.update({
+            "requests": len(results),
+            "served": len(served), "shed": len(results) - len(served),
+            "buckets": {n: w["buckets"] for n, w in warm.items()},
+            "compiles_post_warmup": sum(
+                r["compiles_post_warmup"] for r in s["replicas"].values()),
+            "latency_ms": lat,
+            "fleet": {k: s[k] for k in (
+                "failovers", "hedges", "duplicates_deduped", "retries",
+                "crashes", "restarts", "lost", "orphaned_futures")},
+            "replica_states": {n: r["state"]
+                               for n, r in s["replicas"].items()},
+            "within_budget": bool(lat["p99"] <= args.budget_ms),
+        })
+    else:
+        engine = make_engine()
+        warm = engine.warmup(requests)
+        results = engine.serve_stream(requests)
+        engine.close()
+        served = [r for r in results if isinstance(r, RankResult)]
+        s = engine.metrics.summary()
+        report.update({
+            "requests": len(results),
+            "served": len(served), "shed": len(results) - len(served),
+            "buckets": warm["buckets"],
+            "compiles": s["compiles"],
+            "compiles_post_warmup": s["compiles_post_warmup"],
+            "fill_rate": s["fill_rate"],
+            "latency_ms": s["latency_ms"],
+            "queue_wait_ms": s["queue_wait_ms"],
+            "pipeline": s["pipeline"],
+            "online_compliance": s["compliance"],
+            "deadline": s["deadline"],
+            "within_budget": bool(s["latency_ms"]["p99"] <= args.budget_ms),
+        })
+    print(json.dumps(report, indent=1))
 
 
 if __name__ == "__main__":

@@ -35,6 +35,22 @@ from repro.serving.engine import (
     ServingEngine,
     Shed,
 )
+from repro.serving.faults import (
+    FaultInjector,
+    FaultPlan,
+    ReplicaCrash,
+    ReplicaFaults,
+)
+from repro.serving.fleet import FleetMetrics, FleetRouter, Replica
+from repro.serving.health import (
+    DEAD,
+    HEALTHY,
+    RECOVERING,
+    SUSPECT,
+    HealthConfig,
+    ReplicaHealth,
+    backoff_s,
+)
 from repro.serving.metrics import EngineMetrics
 from repro.serving.pipeline import (
     ExecutionPipeline,
@@ -66,6 +82,10 @@ __all__ = [
     "SHED_RUNG", "AdmissionController", "AdmissionDecision",
     "DEFAULT_BUDGET_S", "LAM_TAG", "RankRequest", "RankResult",
     "ServingEngine", "Shed",
+    "FaultInjector", "FaultPlan", "ReplicaCrash", "ReplicaFaults",
+    "FleetMetrics", "FleetRouter", "Replica",
+    "DEAD", "HEALTHY", "RECOVERING", "SUSPECT",
+    "HealthConfig", "ReplicaHealth", "backoff_s",
     "EngineMetrics",
     "ExecutionPipeline", "PendingBatch", "RankFuture", "StagingRing",
     "RefreshLane", "dual_refresh_targets", "knn_ring_update",

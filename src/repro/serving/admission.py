@@ -61,6 +61,8 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass
 
+import numpy as np
+
 __all__ = ["AdmissionController", "AdmissionDecision", "SHED_RUNG"]
 
 # Rung index reported for a shed decision (no rung served).
@@ -102,24 +104,66 @@ class AdmissionController:
                   (warmup seeds real values; the prior only matters for
                   traffic hitting an unwarmed bucket)
 
+    Measured-trend ladder (the windowed p99 tracker): per-request
+    prediction is optimistic exactly when it matters — under load the
+    EWMAs trail the true service rate, so requests keep being admitted
+    on rung 0 while measured latency is already blowing budgets. The
+    tracker accumulates each result's latency/budget RATIO
+    (`observe_result`, fed by the engine at result-build time); every
+    `p99_window` results it takes the window p99 and compares it to
+    1.0 (= the budget):
+
+      p99 over budget for `p99_patience` CONSECUTIVE windows
+          → `default_rung` += 1: first-fit decisions start one rung
+            further down the ladder (prediction has been lying — stop
+            trusting rung 0);
+      p99 under `p99_hysteresis` (strictly BELOW budget, not merely
+          at it) for `p99_patience` consecutive windows
+          → `default_rung` -= 1.
+
+    The patience requirement plus the hysteresis band is the anti-flap
+    design: a transient spike fills at most one window and resets
+    nothing permanent, and a p99 hovering between hysteresis·budget
+    and budget moves the rung in NEITHER direction.
+    `rung_shifts` records every shift (for tests and dashboards).
+
     Thread-safety: `observe_service` runs on the completion worker,
-    `observe_lag` on whichever thread drives the open-loop pacing, and
+    `observe_lag` on whichever thread drives the open-loop pacing,
+    `observe_result` on whichever consumer thread builds results, and
     `predict_ms`/`decide` on the submission thread — all touch shared
     EWMAs, so updates take a small lock (reads of a stale EWMA are
     harmless; torn dict updates are not).
     """
 
     def __init__(self, *, headroom: float = 0.85, ewma_alpha: float = 0.25,
-                 prior_exec_ms: float = 5.0):
+                 prior_exec_ms: float = 5.0, p99_window: int = 64,
+                 p99_patience: int = 3, p99_hysteresis: float = 0.7,
+                 max_default_rung: int = 8):
         if not 0.0 < headroom <= 1.0:
             raise ValueError(f"headroom must be in (0, 1], got {headroom}")
         if not 0.0 < ewma_alpha <= 1.0:
             raise ValueError(f"ewma_alpha must be in (0, 1], got {ewma_alpha}")
+        if p99_window < 1:
+            raise ValueError(f"p99_window must be >= 1, got {p99_window}")
+        if p99_patience < 1:
+            raise ValueError(f"p99_patience must be >= 1, got {p99_patience}")
+        if not 0.0 < p99_hysteresis < 1.0:
+            raise ValueError(f"p99_hysteresis must be in (0, 1), got "
+                             f"{p99_hysteresis}")
         self.headroom = float(headroom)
         self.ewma_alpha = float(ewma_alpha)
         self.prior_exec_ms = float(prior_exec_ms)
+        self.p99_window = int(p99_window)
+        self.p99_patience = int(p99_patience)
+        self.p99_hysteresis = float(p99_hysteresis)
+        self.max_default_rung = int(max_default_rung)
         self.lag_ms = 0.0
+        self.default_rung = 0
+        self.rung_shifts: list[tuple[str, int, float]] = []
         self._exec_ms: dict[str, float] = {}
+        self._ratio_win: list[float] = []
+        self._over_windows = 0
+        self._under_windows = 0
         self._lock = threading.Lock()
         # decision tallies (the engine's metrics carry the per-request
         # accounting; these are the controller's own view for debugging)
@@ -147,6 +191,40 @@ class AdmissionController:
         with self._lock:
             a = self.ewma_alpha
             self.lag_ms = (1.0 - a) * self.lag_ms + a * lag_ms
+
+    def observe_result(self, latency_ms: float, budget_ms: float) -> None:
+        """One served result's MEASURED latency against its own budget
+        — the windowed p99 tracker's feed (see class doc). Called by
+        the engine at result-build time; requests without a positive
+        budget are skipped (nothing to compare against)."""
+        if budget_ms <= 0.0:
+            return
+        with self._lock:
+            self._ratio_win.append(float(latency_ms) / float(budget_ms))
+            if len(self._ratio_win) < self.p99_window:
+                return
+            r99 = float(np.percentile(self._ratio_win, 99))
+            self._ratio_win = []
+            if r99 > 1.0:
+                self._over_windows += 1
+                self._under_windows = 0
+                if (self._over_windows >= self.p99_patience
+                        and self.default_rung < self.max_default_rung):
+                    self.default_rung += 1
+                    self._over_windows = 0
+                    self.rung_shifts.append(("down", self.default_rung, r99))
+            elif r99 < self.p99_hysteresis:
+                self._under_windows += 1
+                self._over_windows = 0
+                if (self._under_windows >= self.p99_patience
+                        and self.default_rung > 0):
+                    self.default_rung -= 1
+                    self._under_windows = 0
+                    self.rung_shifts.append(("up", self.default_rung, r99))
+            else:
+                # the hysteresis band: neither trend accumulates.
+                self._over_windows = 0
+                self._under_windows = 0
 
     def service_ms(self, bucket_name: str) -> float:
         with self._lock:
@@ -176,18 +254,30 @@ class AdmissionController:
         first. First-fit makes the chosen rung monotone non-decreasing
         in any uniform lag shift: a rung that fits under more lag also
         fit under less.
+
+        The measured-trend floor: rungs above `default_rung` (shifted
+        by the windowed p99 tracker) are skipped — when trailing
+        MEASURED p99 has been blowing budgets, per-request prediction
+        has lost the benefit of the doubt. A ladder too short to reach
+        the floor keeps its deepest rung eligible (the floor degrades,
+        it never turns into a shed).
         """
         rung_predictions = list(rung_predictions)
         if not rung_predictions:
             raise ValueError("decide() needs at least rung 0")
+        with self._lock:
+            floor = self.default_rung
+        eligible = [(r, p) for r, p in rung_predictions if r >= floor]
+        if not eligible:
+            eligible = [rung_predictions[-1]]
         limit = self.headroom * float(budget_ms)
-        for rung, predicted in rung_predictions:
+        for rung, predicted in eligible:
             if predicted <= limit:
                 action = "admit" if rung == 0 else "degrade"
                 self.decisions[action] += 1
                 return AdmissionDecision(action, rung, float(predicted),
                                          float(budget_ms))
         self.decisions["shed"] += 1
-        cheapest = min(p for _, p in rung_predictions)
+        cheapest = min(p for _, p in eligible)
         return AdmissionDecision("shed", SHED_RUNG, float(cheapest),
                                  float(budget_ms))

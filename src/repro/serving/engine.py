@@ -109,6 +109,7 @@ class RankRequest:
     gamma: np.ndarray | None = None  # (m2,) slot discounts; default DCG
     deadline: float | None = None    # absolute deadline (engine clock)
     budget_s: float | None = None    # relative budget (enqueue + budget_s)
+    surface: str = "default"         # budget class (engine.surface_budgets)
 
     def __post_init__(self):
         if self.lam is None and self.X is None:
@@ -212,6 +213,7 @@ class ServingEngine:
         pipeline_depth: int = 1,
         admission: AdmissionController | bool | None = None,
         default_budget_s: float = DEFAULT_BUDGET_S,
+        surface_budgets: dict[str, float] | None = None,
         autotune_table: dict | str | None = None,
         clock: Callable[[], float] = time.perf_counter,
     ):
@@ -240,6 +242,13 @@ class ServingEngine:
             admission = None
         self.admission: AdmissionController | None = admission
         self.default_budget_s = float(default_budget_s)
+        # per-surface budget classes: a request that carries neither a
+        # deadline nor a budget_s gets its SURFACE's default budget
+        # (e.g. {"feed": 0.05, "search": 0.1}); surfaces not listed
+        # fall back to default_budget_s. Deadline hit/miss/shed/degrade
+        # are reported per class in metrics.deadline_summary().
+        self.surface_budgets = {str(k): float(v)
+                                for k, v in (surface_budgets or {}).items()}
         # per-geometry kernel autotune table (benchmarks/autotune.py):
         # a dict {geometry_key: {tile_b/tile_m/tile_n/quant}}, or a
         # path to a saved JSON table (loaded here — absent file = empty
@@ -337,6 +346,11 @@ class ServingEngine:
         """The tag's current predictor generation (0 = as registered)."""
         return self._pred_epoch[tag]
 
+    def predictor_tags(self) -> tuple[str, ...]:
+        """Registered predictor tags — what a fleet supervisor iterates
+        when restoring a restarted replica from epoch checkpoints."""
+        return tuple(self._predictors)
+
     def predictor_state_of(self, tag: str) -> dict:
         """The tag's LIVE state dict (device arrays) — what the next
         flush will dispatch against. The refresh lane builds its
@@ -350,7 +364,8 @@ class ServingEngine:
         state, NOT necessarily the live one)."""
         return self._predictors[tag].predictor
 
-    def swap_predictor(self, tag: str, new) -> int:
+    def swap_predictor(self, tag: str, new, *, epoch: int | None = None
+                       ) -> int:
         """Epoch-fenced two-phase hot swap of `tag`'s predictor state.
 
         `new` is a state dict (core.predictors.predictor_state) or a
@@ -368,6 +383,13 @@ class ServingEngine:
 
         Returns the new epoch. Never recompiles: the state enters the
         warmed executables as an argument with unchanged treedef.
+
+        `epoch` pins the published generation's number instead of
+        current+1 — the checkpoint-restore path: a restarted replica
+        swapping in its last-good state must RESUME that state's epoch,
+        so results it serves are labeled with the same generation the
+        pre-crash replica's were. Epochs stay monotone: a pinned epoch
+        at or below the live one raises.
         """
         if tag not in self._predictors:
             raise KeyError(f"no predictor registered for tag {tag!r}")
@@ -404,12 +426,18 @@ class ServingEngine:
         state = jax.device_put(state)     # phase 1: publish new buffers
         with self._swap_lock:             # phase 2: flip at batch boundary
             old_epoch = self._pred_epoch[tag]
+            new_epoch = old_epoch + 1 if epoch is None else int(epoch)
+            if new_epoch <= old_epoch:
+                raise ValueError(
+                    f"swap {tag!r}: pinned epoch {new_epoch} <= live epoch "
+                    f"{old_epoch} — epochs are monotone (restore resumes, "
+                    f"never rewinds)")
             self._old_states.setdefault(tag, {})[old_epoch] = cur
             self._pred_state[tag] = state
-            self._pred_epoch[tag] = old_epoch + 1
+            self._pred_epoch[tag] = new_epoch
             self._retire_unpinned(tag)
         self.metrics.on_swap(tag)
-        return old_epoch + 1
+        return new_epoch
 
     def _current_gen(self, tag: str) -> tuple[dict, int]:
         """The (state, epoch) pair a flush dispatches against, read
@@ -677,8 +705,11 @@ class ServingEngine:
     def _deadline_of(self, req: RankRequest, now: float) -> float:
         if req.deadline is not None:
             return float(req.deadline)
-        budget = (req.budget_s if req.budget_s is not None
-                  else self.default_budget_s)
+        if req.budget_s is not None:
+            budget = req.budget_s
+        else:
+            budget = self.surface_budgets.get(req.surface,
+                                              self.default_budget_s)
         return now + float(budget)
 
     def _enqueue(self, req: RankRequest, now: float | None) -> RankFuture:
@@ -701,7 +732,7 @@ class ServingEngine:
             decision = self.admission.decide(
                 budget_ms=(deadline - now) * 1e3, rung_predictions=preds)
             if not decision.admitted:
-                self.metrics.on_shed(bucket)
+                self.metrics.on_shed(bucket, surface=req.surface)
                 shed = Shed(rid=req.rid, bucket=bucket.name,
                             predicted_ms=decision.predicted_ms,
                             budget_ms=decision.budget_ms)
@@ -711,7 +742,7 @@ class ServingEngine:
             if decision.rung > 0:
                 rung = decision.rung
                 bucket = dict(rungs)[rung]
-                self.metrics.on_degrade(rung)
+                self.metrics.on_degrade(rung, surface=req.surface)
         q = self._queues.setdefault(bucket, [])
         q.append(_QueueEntry(req=req, t_enq=now, fut=fut,
                              deadline=deadline, rung=rung))
@@ -742,6 +773,26 @@ class ServingEngine:
                 results += pending.results()
             return results
         return self._collect()
+
+    def handoff_queued(self, error: BaseException | None = None) -> list:
+        """Evict every QUEUED (not yet flushed) request — the fleet's
+        drain/handoff primitive, generalizing the pipeline's drain: a
+        draining or crashed replica first lets its in-flight batches
+        retire (they were dispatched; their futures resolve normally),
+        while its queued-but-unflushed requests must MOVE to another
+        replica instead of being flushed into a dying engine. Each
+        evicted entry's future fails with `error` (so a fleet router's
+        failure path picks it up uniformly) and the request objects are
+        returned for resubmission elsewhere."""
+        if error is None:
+            error = RuntimeError("request evicted for handoff")
+        evicted = []
+        for bucket in list(self._queues):
+            entries, self._queues[bucket] = self._queues[bucket], []
+            for e in entries:
+                evicted.append(e.req)
+                e.fut._fail(error)
+        return evicted
 
     def close(self) -> None:
         """Graceful shutdown: drain in-flight work and stop the
@@ -888,7 +939,15 @@ class ServingEngine:
         self.metrics.on_result((pending.t_done - t_enq) * 1e3,
                                (pending.t_launch - t_enq) * 1e3, compliant,
                                deadline_hit=deadline_hit, rung=entry.rung,
-                               shortfall=shortfall)
+                               shortfall=shortfall, surface=req.surface)
+        if self.admission is not None:
+            # measured-trend feed: the controller's windowed p99-vs-
+            # budget tracker shifts the default degradation rung when
+            # trailing MEASURED latency (not the submit-time
+            # prediction) blows the budget for consecutive windows.
+            self.admission.observe_result(
+                (pending.t_done - t_enq) * 1e3,
+                (entry.deadline - t_enq) * 1e3)
         if self._refresh is not None and pending.bucket.tag != LAM_TAG:
             # feed the refresh lane: covariates + the λ̂ / exposure /
             # threshold rows at the SERVED tag's predictor width (the

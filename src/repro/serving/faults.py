@@ -1,0 +1,243 @@
+"""Deterministic seed-driven fault injection for the serving fleet.
+
+A fault tolerance claim is only as good as the failures it was tested
+against, and ad-hoc monkeypatching (the style the pipeline tests use
+for single-engine faults) doesn't compose into a fleet-wide scenario
+you can replay. This module makes every failure mode a *plan*: a
+`FaultPlan` maps replica names to `ReplicaFaults`, `FaultPlan.chaos`
+derives the canonical five-fault scenario deterministically from a
+seed, and a `FaultInjector` attached to a replica's engine executes
+the plan at the same seams the real failures would hit:
+
+  crash-at-batch-k      the replica's k-th post-warmup micro-batch
+                        flush raises ReplicaCrash from inside the
+                        bucket executable — exactly where a device
+                        reset or OOM surfaces — and the replica stays
+                        down (every later call raises too) until the
+                        supervisor restarts it.
+  heartbeat blackhole   heartbeats in [blackhole_after, blackhole_until)
+                        (tick indices) are silently dropped: the
+                        replica serves fine but looks SUSPECT, then
+                        DEAD — the partition/GC-pause failure mode, and
+                        the one that exercises hedging + dedup rather
+                        than retry.
+  slow replica          every flush sleeps slow_ms first: a wedged-but-
+                        alive replica that heartbeats on time and blows
+                        every latency budget — caught by the lag EWMA,
+                        not the heartbeat deadline.
+  poisoned swap         the replica's n-th refresh publishes non-finite
+                        state; the engine's swap validation must refuse
+                        it and keep serving (and checkpointing) the
+                        last good generation.
+  partial-drain kill    the replica crashes on the first flush of its
+                        drain — queued-but-unflushed requests must be
+                        handed off to another replica, not orphaned.
+
+The injector never reaches around the engine's machinery: crashes
+raise through `_flush_bucket`'s existing failure path (futures fail,
+staging buffers recycle, generations unpin), so what the chaos tests
+prove is the recovery behavior of the REAL code, not of a mock.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+__all__ = ["ReplicaCrash", "ReplicaFaults", "FaultPlan", "FaultInjector"]
+
+
+class ReplicaCrash(RuntimeError):
+    """A replica process died mid-operation. Fatal for the replica: its
+    health machine goes straight to DEAD and only a supervised restart
+    brings it back."""
+
+
+@dataclass(frozen=True)
+class ReplicaFaults:
+    """The faults scheduled for ONE replica. All indices count
+    post-warmup events on that replica, so a plan replays identically
+    whenever the request stream (and therefore flush order) does."""
+
+    crash_at_batch: int | None = None   # k-th flush raises ReplicaCrash
+    blackhole_after: int | None = None  # heartbeat ticks >= this dropped...
+    blackhole_until: int | None = None  # ...until this tick (None = forever)
+    slow_ms: float = 0.0                # injected latency per flush
+    poison_swap_at: int | None = None   # n-th refresh publishes NaNs
+    kill_during_drain: bool = False     # crash on the first drain flush
+
+    def any(self) -> bool:
+        return (self.crash_at_batch is not None
+                or self.blackhole_after is not None
+                or self.slow_ms > 0.0
+                or self.poison_swap_at is not None
+                or self.kill_during_drain)
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A replayable fleet-wide failure scenario: {replica_name:
+    ReplicaFaults} plus the seed it was derived from."""
+
+    replicas: dict
+    seed: int = 0
+
+    def faults_for(self, name: str) -> ReplicaFaults:
+        return self.replicas.get(name, ReplicaFaults())
+
+    @staticmethod
+    def none(names) -> "FaultPlan":
+        return FaultPlan(replicas={n: ReplicaFaults() for n in names})
+
+    @staticmethod
+    def chaos(names, *, seed: int = 0, slow_ms: float = 5.0) -> "FaultPlan":
+        """The canonical five-fault scenario over >= 3 replicas, every
+        parameter drawn from `seed`:
+
+          names[0]  crash-at-batch-k (k in [2, 5)) AND, once restarted,
+                    a kill on the first flush of its drain (the
+                    partial-drain kill);
+          names[1]  heartbeat blackhole over a tick window, plus a
+                    poisoned swap on its first post-blackhole refresh;
+          names[2]  slow replica (`slow_ms` per flush).
+
+        Replicas beyond the third stay clean — they are the capacity
+        the failover story needs.
+        """
+        names = list(names)
+        if len(names) < 3:
+            raise ValueError(
+                f"the chaos plan needs >= 3 replicas, got {len(names)}")
+        rng = np.random.default_rng(seed)
+        crash_k = int(rng.integers(2, 5))
+        hole_at = int(rng.integers(2, 5))
+        hole_len = int(rng.integers(4, 8))
+        poison_at = int(rng.integers(1, 3))
+        replicas = {n: ReplicaFaults() for n in names}
+        replicas[names[0]] = ReplicaFaults(
+            crash_at_batch=crash_k, kill_during_drain=True)
+        replicas[names[1]] = ReplicaFaults(
+            blackhole_after=hole_at, blackhole_until=hole_at + hole_len,
+            poison_swap_at=poison_at)
+        replicas[names[2]] = ReplicaFaults(slow_ms=float(slow_ms))
+        return FaultPlan(replicas=replicas, seed=seed)
+
+
+@dataclass
+class _WrappedExec:
+    """One bucket executable under injection. Crash/slow decisions are
+    made by the shared injector so the batch counter spans buckets —
+    'crash at batch k' means the replica's k-th flush, whichever
+    bucket it lands in."""
+
+    fn: object
+    injector: "FaultInjector"
+
+    def __call__(self, *args):
+        self.injector._before_flush()
+        return self.fn(*args)
+
+    # the engine's no-recompile assertions read per-bucket jit cache
+    # sizes through the executor table; forward to the real jit fn.
+    def _cache_size(self):
+        return self.fn._cache_size()
+
+
+@dataclass
+class FaultInjector:
+    """Executes one replica's ReplicaFaults at the engine's seams.
+    Attach with `wrap_engine(engine)` AFTER warmup (warmup flushes are
+    not traffic); re-attach after a restart only if the plan says the
+    fault recurs — the chaos plan's faults are one-shot, so a restarted
+    replica comes back clean."""
+
+    faults: ReplicaFaults
+    name: str = "replica"
+    sleep: object = time.sleep
+    flushes: int = 0                    # post-warmup flushes seen
+    heartbeat_ticks: int = 0
+    refreshes: int = 0
+    crashed: bool = False
+    draining: bool = False
+    drain_killed: bool = False
+    wrapped: dict = field(default_factory=dict)
+
+    # -- attachment ----------------------------------------------------------
+
+    def wrap_engine(self, engine) -> None:
+        """Interpose on every warmed bucket executable of `engine`."""
+        for bucket, fn in list(engine._exec.items()):
+            if isinstance(fn, _WrappedExec):      # idempotent
+                continue
+            wrapped = _WrappedExec(fn=fn, injector=self)
+            engine._exec[bucket] = wrapped
+            self.wrapped[bucket] = wrapped
+
+    # -- seams ---------------------------------------------------------------
+
+    def _before_flush(self) -> None:
+        if self.crashed:
+            raise ReplicaCrash(
+                f"{self.name}: call into a crashed replica")
+        if self.faults.kill_during_drain and self.draining \
+                and not self.drain_killed:
+            self.drain_killed = True
+            self.crashed = True
+            raise ReplicaCrash(f"{self.name}: killed mid-drain")
+        i = self.flushes
+        self.flushes += 1
+        if self.faults.slow_ms > 0.0:
+            self.sleep(self.faults.slow_ms / 1e3)
+        if self.faults.crash_at_batch is not None \
+                and i == self.faults.crash_at_batch:
+            self.crashed = True
+            raise ReplicaCrash(
+                f"{self.name}: crashed at batch {i} (planned)")
+
+    def heartbeat_delivered(self) -> bool:
+        """One heartbeat tick: True if it reaches the router, False if
+        the replica is crashed or the tick falls inside the blackhole
+        window."""
+        i = self.heartbeat_ticks
+        self.heartbeat_ticks += 1
+        if self.crashed:
+            return False
+        after = self.faults.blackhole_after
+        if after is not None and i >= after:
+            until = self.faults.blackhole_until
+            if until is None or i < until:
+                return False
+        return True
+
+    def poison_state(self, state: dict) -> dict:
+        """Applied to each refresh's candidate state before publish: on
+        the planned refresh index, every float leaf is replaced with
+        NaNs of the same shape/dtype — structurally valid, so only the
+        engine's finiteness validation stands between it and serving."""
+        i = self.refreshes
+        self.refreshes += 1
+        if self.faults.poison_swap_at is None \
+                or i != self.faults.poison_swap_at:
+            return state
+
+        def poison(leaf):
+            arr = np.asarray(leaf)
+            if np.issubdtype(arr.dtype, np.floating):
+                return np.full_like(arr, np.nan)
+            return arr
+        import jax
+        return jax.tree.map(poison, dict(state))
+
+    def restore(self) -> None:
+        """Post-restart reset: the restarted incarnation serves clean
+        (the chaos plan's faults are one-shot per replica), except that
+        kill_during_drain stays armed until it has fired — the plan
+        schedules it for the restarted incarnation's drain."""
+        self.crashed = False
+        self.draining = False
+        self.wrapped = {}
+        self.faults = replace(
+            self.faults, crash_at_batch=None, blackhole_after=None,
+            blackhole_until=None, slow_ms=0.0, poison_swap_at=None)

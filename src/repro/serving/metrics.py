@@ -96,6 +96,12 @@ class EngineMetrics:
     swaps_by_tag: dict = field(default_factory=lambda: defaultdict(int))
     rung_stats: dict = field(default_factory=lambda: defaultdict(
         lambda: {"served": 0, "compliant": 0.0, "shortfall": 0.0}))
+    # per-surface budget classes (RankRequest.surface): every deadline
+    # outcome — hit/miss at build time, shed/degrade at submit time —
+    # is also attributed to the request's surface, so a feed-vs-search
+    # SLA split is readable straight off deadline_summary()['surfaces'].
+    surface_stats: dict = field(default_factory=lambda: defaultdict(
+        lambda: {"hits": 0, "misses": 0, "sheds": 0, "degrades": 0}))
     # on_result runs on whichever consumer thread builds a result
     # (future.result() is a public API), so unlike the submission/
     # completion pair its read-modify-writes need a real lock.
@@ -154,7 +160,8 @@ class EngineMetrics:
 
     def on_result(self, latency_ms: float, wait_ms: float,
                   compliant: bool, *, deadline_hit: bool | None = None,
-                  rung: int = 0, shortfall: float = 0.0) -> None:
+                  rung: int = 0, shortfall: float = 0.0,
+                  surface: str = "default") -> None:
         with self._result_lock:
             self.results += 1
             self.latencies_ms.append(latency_ms)
@@ -163,25 +170,29 @@ class EngineMetrics:
             if deadline_hit is not None:
                 if deadline_hit:
                     self.deadline_hits += 1
+                    self.surface_stats[surface]["hits"] += 1
                 else:
                     self.deadline_misses += 1
+                    self.surface_stats[surface]["misses"] += 1
             rs = self.rung_stats[int(rung)]
             rs["served"] += 1
             rs["compliant"] += float(compliant)
             rs["shortfall"] += float(shortfall)
 
-    def on_shed(self, bucket) -> None:
+    def on_shed(self, bucket, *, surface: str = "default") -> None:
         """Submission side: a request was shed at admission (its
         RankFuture resolved with a typed Shed result — it never
         entered a queue, so it appears in no other counter)."""
         with self._result_lock:
             self.sheds += 1
+            self.surface_stats[surface]["sheds"] += 1
 
-    def on_degrade(self, rung: int) -> None:
+    def on_degrade(self, rung: int, *, surface: str = "default") -> None:
         """Submission side: a request was admitted on a cheaper
         degradation-ladder rung instead of its own bucket."""
         with self._result_lock:
             self.degrades += 1
+            self.surface_stats[surface]["degrades"] += 1
 
     def on_swap(self, tag: str) -> None:
         """Refresh lane: a new predictor generation was published and
@@ -295,6 +306,15 @@ class EngineMetrics:
                         if tracked else float("nan"),
             "sheds": self.sheds,
             "degrades": self.degrades,
+            "surfaces": {
+                surface: {
+                    **ss,
+                    "hit_rate": round(
+                        ss["hits"] / (ss["hits"] + ss["misses"]), 4)
+                        if ss["hits"] + ss["misses"] else float("nan"),
+                }
+                for surface, ss in sorted(self.surface_stats.items())
+            },
             "rungs": {
                 str(rung): {
                     "served": rs["served"],

@@ -65,6 +65,13 @@ class RankFuture:
     async mode, the submitting thread in sync mode — so they must be
     cheap; call `result()` inside one only if doing the unpadding work
     on that thread is acceptable.
+
+    Settlement is FIRST-WINS: `_finish`/`_resolve`/`_fail` each return
+    True only for the call that settled the future; later calls are
+    no-ops returning False. Exactly-once resolution is what the fleet
+    layer's hedging leans on — a hedged request holds one fleet-level
+    future that both replica attempts race to settle, and the loser's
+    completion (or crash) must never overwrite the winner's result.
     """
 
     __slots__ = ("rid", "bucket_name", "_event", "_batch", "_index",
@@ -113,25 +120,35 @@ class RankFuture:
         for cb in callbacks:
             cb(self)
 
-    def _finish(self, batch: "PendingBatch", index: int) -> None:
-        self._batch, self._index = batch, index
+    def _finish(self, batch: "PendingBatch", index: int) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._batch, self._index = batch, index
         self._event.set()
         self._fire_callbacks()
+        return True
 
-    def _resolve(self, result) -> None:
-        """Resolve immediately with a pre-built result — the shed path:
-        an admission-shed request never joins a batch, but its future
-        must still resolve exactly once (with the typed Shed result,
-        not an exception)."""
+    def _resolve(self, result) -> bool:
+        """Resolve immediately with a pre-built result — the shed path
+        (typed Shed, not an exception) and the fleet's hedge-winner
+        path. First caller wins; a settled future is never rewritten."""
         with self._lock:
+            if self._event.is_set():
+                return False
             self._result = result
         self._event.set()
         self._fire_callbacks()
+        return True
 
-    def _fail(self, error: BaseException) -> None:
-        self._error = error
+    def _fail(self, error: BaseException) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._error = error
         self._event.set()
         self._fire_callbacks()
+        return True
 
 
 class StagingRing:

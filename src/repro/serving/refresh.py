@@ -187,12 +187,26 @@ class RefreshLane:
     mu              ridge anchor weight (linear family).
     mean_weight     prior weight of the live mean (mean family).
     mlp_steps/lr    warm-start re-fit budget (mlp family).
+    checkpoint      optional checkpoint.CheckpointStore: every
+                    successfully published generation is ALSO written
+                    as a per-(tag, epoch) checkpoint
+                    (save_predictor_epoch) — what a fleet supervisor
+                    restores a restarted replica from, so it resumes
+                    at last-good λ̂ instead of the cold generation 0.
+                    A failed checkpoint write never un-publishes the
+                    swap (the report carries `checkpointed`).
+    publish_filter  optional hook (tag, state) -> state applied to the
+                    candidate state just before the swap — the fault
+                    harness's poisoned-swap seam (serving/faults.py);
+                    a filter that returns poisoned state exercises the
+                    engine's refusal path, not a mock of it.
     """
 
     def __init__(self, engine, *, eta: float = 0.5, capacity: int = 4096,
                  min_samples: int = 8, min_shortfall: float = 0.0,
                  mu: float = 32.0, mean_weight: float = 32.0,
-                 mlp_steps: int = 50, mlp_lr: float = 1e-2):
+                 mlp_steps: int = 50, mlp_lr: float = 1e-2,
+                 checkpoint=None, publish_filter=None):
         self.engine = engine
         self.eta = float(eta)
         self.capacity = int(capacity)
@@ -201,7 +215,15 @@ class RefreshLane:
         self.mu = float(mu)
         self.mlp_steps = int(mlp_steps)
         self.mlp_lr = float(mlp_lr)
+        self.checkpoint = checkpoint
+        self.publish_filter = publish_filter
         self._lock = threading.Lock()
+        # serializes whole refresh passes: the background loop, any
+        # synchronous refresh() caller, and stop()'s final refresh
+        # must never interleave — two concurrent _refresh_tag calls on
+        # one tag would read the same live state and double-publish
+        # one telemetry window (racing _knn_cursor / _mean_weight).
+        self._refresh_lock = threading.Lock()
         self._buf: dict[str, _TagBuffer] = {}
         self._mean_weight: dict[str, float] = {}
         self._default_mean_weight = float(mean_weight)
@@ -241,10 +263,15 @@ class RefreshLane:
         publish a new predictor generation. Never raises on a failed
         publish: the engine refuses bad state, `refresh_failures`
         increments, serving stays on last-good, and the report says
-        what happened. Returns {tag: report} (one tag when given)."""
-        tags = ([tag] if tag is not None
-                else sorted(self._buf))
-        return {t: self._refresh_tag(t) for t in tags}
+        what happened. Returns {tag: report} (one tag when given).
+
+        Whole passes are serialized (`_refresh_lock`): a synchronous
+        caller — including stop()'s final refresh — never interleaves
+        with the background loop's in-flight pass."""
+        with self._refresh_lock:
+            tags = ([tag] if tag is not None
+                    else sorted(self._buf))
+            return {t: self._refresh_tag(t) for t in tags}
 
     def _drain(self, tag: str):
         with self._lock:
@@ -285,6 +312,8 @@ class RefreshLane:
         targets = dual_refresh_targets(lam, b, exposure, eta=self.eta)
         try:
             new_state = self._updated_state(tag, X, targets)
+            if self.publish_filter is not None:
+                new_state = self.publish_filter(tag, new_state)
             prev = self.engine.predictor_state_of(tag)
             epoch = self.engine.swap_predictor(tag, new_state)
         except Exception as e:            # noqa: BLE001 — lane must survive
@@ -294,6 +323,17 @@ class RefreshLane:
         self._last_good[tag] = prev
         report["swapped"] = True
         report["epoch"] = epoch
+        if self.checkpoint is not None:
+            # persist the published generation for the fleet's restart
+            # path. The swap already flipped — a failed write degrades
+            # restartability, never liveness, so it only marks the
+            # report (and counts a refresh failure for observability).
+            try:
+                self.checkpoint.save_predictor_epoch(tag, epoch, new_state)
+                report["checkpointed"] = True
+            except Exception:             # noqa: BLE001
+                self.engine.metrics.on_refresh_failure(tag)
+                report["checkpointed"] = False
         return report
 
     def _updated_state(self, tag: str, X: np.ndarray,
@@ -384,10 +424,21 @@ class RefreshLane:
     def stop(self, *, final_refresh: bool = False) -> None:
         """Stop the background thread (idempotent). With
         `final_refresh`, drain the remaining telemetry through one last
-        synchronous refresh after the thread exits."""
+        synchronous refresh AFTER the thread has fully exited.
+
+        The lane thread is drained to completion — joined in a loop,
+        never abandoned on a timeout. The old bounded join could give
+        up while a background refresh pass was still in flight and run
+        the final refresh concurrently with it: both passes would
+        build on the same live state and double-publish one telemetry
+        window (tests/test_refresh.py has the regression). Belt and
+        braces, `refresh()` itself is also serialized on
+        `_refresh_lock`, so even a pathological scheduler cannot
+        interleave two passes."""
         self._stop_evt.set()
-        if self._thread is not None:
-            self._thread.join(timeout=30.0)
-            self._thread = None
+        thread, self._thread = self._thread, None
+        if thread is not None:
+            while thread.is_alive():
+                thread.join(timeout=1.0)
         if final_refresh:
             self.refresh()

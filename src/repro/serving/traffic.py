@@ -53,6 +53,7 @@ class Scenario:
     m1_jitter: float = 0.5     # m1 sampled from [m1*(1-jitter), m1]
     topic_rate: float = 0.15   # sparsity of the constraint attributes
     b_frac: float = 0.06       # threshold as fraction of sum(gamma)
+    surface: str = "default"   # budget class (engine.surface_budgets)
 
 
 # A default mix spanning >= 3 geometries and 2 "archs" (surfaces): the
@@ -83,7 +84,8 @@ def make_request(rng: np.random.Generator, scenario: Scenario,
     else:
         X = rng.normal(size=scenario.d_cov).astype(np.float32)
     return RankRequest(rid=rid, u=u, a=a, b=b, m2=m2, lam=lam, X=X,
-                       tag=scenario.tag, gamma=gamma)
+                       tag=scenario.tag, gamma=gamma,
+                       surface=scenario.surface)
 
 
 def make_stream(scenarios=DEFAULT_MIX, *, n_requests: int = 256,

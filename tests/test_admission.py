@@ -345,3 +345,156 @@ def test_raw_lam_requests_have_no_ladder():
     assert req.lam is not None
     assert eng._rung_buckets(req, eng.bucket_of(req)) == [
         (0, eng.bucket_of(req))]
+
+
+# ---------------------------------------------------------------------------
+# Windowed p99 tracker: measured-trend default rung with hysteresis
+# ---------------------------------------------------------------------------
+
+
+def _feed_window(ctrl, ratio, n=None):
+    """Feed one full window of identical latency/budget ratios."""
+    for _ in range(n or ctrl.p99_window):
+        ctrl.observe_result(ratio * 100.0, 100.0)
+
+
+def test_p99_tracker_shifts_default_rung_after_patience():
+    ctrl = AdmissionController(p99_window=8, p99_patience=3)
+    assert ctrl.default_rung == 0
+    _feed_window(ctrl, 1.5)
+    _feed_window(ctrl, 1.5)
+    assert ctrl.default_rung == 0               # patience not yet met
+    _feed_window(ctrl, 1.5)
+    assert ctrl.default_rung == 1               # 3 consecutive over-windows
+    assert ctrl.rung_shifts == [("down", 1, pytest.approx(1.5))]
+    # decisions now skip rung 0 even when it would fit
+    d = ctrl.decide(budget_ms=100, rung_predictions=[(0, 1.0), (1, 2.0)])
+    assert (d.action, d.rung) == ("degrade", 1)
+
+
+def test_p99_tracker_recovers_through_hysteresis():
+    ctrl = AdmissionController(p99_window=8, p99_patience=2,
+                               p99_hysteresis=0.7)
+    for _ in range(2):
+        _feed_window(ctrl, 2.0)
+    assert ctrl.default_rung == 1
+    # hovering in the hysteresis band (0.7 <= r < 1.0): NO recovery
+    for _ in range(10):
+        _feed_window(ctrl, 0.85)
+    assert ctrl.default_rung == 1
+    # clearly under the hysteresis threshold: recovery after patience
+    _feed_window(ctrl, 0.3)
+    assert ctrl.default_rung == 1
+    _feed_window(ctrl, 0.3)
+    assert ctrl.default_rung == 0
+    assert ctrl.rung_shifts[-1][0] == "up"
+
+
+def test_transient_spike_does_not_flap_the_rung():
+    """The anti-flap regression: a single over-budget window (a GC
+    pause, one slow batch) inside an otherwise-healthy stream must not
+    move the default rung — and alternating spikes never accumulate
+    because every healthy window resets the over-counter."""
+    ctrl = AdmissionController(p99_window=8, p99_patience=3)
+    for _ in range(20):                         # spike, recover, spike, ...
+        _feed_window(ctrl, 5.0)
+        _feed_window(ctrl, 0.2)
+    assert ctrl.default_rung == 0
+    assert ctrl.rung_shifts == []
+
+
+def test_p99_floor_degrades_but_never_sheds():
+    """A ladder too short to reach the floor keeps its deepest rung —
+    the measured-trend floor turns into MORE degradation, never into a
+    shed the per-request prediction wouldn't have made."""
+    ctrl = AdmissionController(p99_window=4, p99_patience=1,
+                               max_default_rung=8)
+    for _ in range(6):
+        _feed_window(ctrl, 3.0)
+    assert ctrl.default_rung == 6               # far beyond this ladder
+    d = ctrl.decide(budget_ms=100, rung_predictions=[(0, 1.0), (1, 2.0)])
+    assert (d.action, d.rung) == ("degrade", 1)
+
+
+def test_p99_tracker_ignores_unbudgeted_results():
+    ctrl = AdmissionController(p99_window=2, p99_patience=1)
+    for _ in range(64):
+        ctrl.observe_result(500.0, 0.0)         # no budget: no ratio
+    assert ctrl.default_rung == 0 and ctrl._ratio_win == []
+
+
+def test_p99_parameters_validated():
+    with pytest.raises(ValueError, match="p99_window"):
+        AdmissionController(p99_window=0)
+    with pytest.raises(ValueError, match="p99_patience"):
+        AdmissionController(p99_patience=0)
+    with pytest.raises(ValueError, match="p99_hysteresis"):
+        AdmissionController(p99_hysteresis=1.0)
+
+
+def test_engine_feeds_tracker_from_measured_results():
+    """The engine wires every SERVED result's measured latency/budget
+    ratio into the tracker at result-build time: with a window too
+    large to ever close, the ratio buffer holds exactly one sample per
+    served result (and on a ticking clock each ratio is positive)."""
+    ctrl = AdmissionController(p99_window=10_000)
+    eng = ServingEngine(max_batch=4, pipeline_depth=0, admission=ctrl,
+                        clock=FrozenClock(tick=1e-3))
+    res = eng.serve_stream(make_stream(n_requests=16, seed=6))
+    served = [r for r in res if not isinstance(r, Shed)]
+    assert served
+    assert len(ctrl._ratio_win) == len(served)
+    assert all(r > 0.0 for r in ctrl._ratio_win)
+
+
+# ---------------------------------------------------------------------------
+# Per-surface budget classes
+# ---------------------------------------------------------------------------
+
+
+def test_surface_budget_classes_set_deadlines():
+    """A request without deadline/budget_s gets its SURFACE's default
+    budget; unknown surfaces fall back to default_budget_s; an explicit
+    budget_s still wins over the surface class."""
+    eng = ServingEngine(max_batch=4, pipeline_depth=0,
+                        default_budget_s=0.050,
+                        surface_budgets={"feed": 0.025, "search": 0.100})
+    req = make_stream(n_requests=1, seed=7)[0]
+    req.surface = "feed"
+    assert eng._deadline_of(req, 1.0) == pytest.approx(1.025)
+    req.surface = "search"
+    assert eng._deadline_of(req, 1.0) == pytest.approx(1.100)
+    req.surface = "unknown"
+    assert eng._deadline_of(req, 1.0) == pytest.approx(1.050)
+    req.surface, req.budget_s = "feed", 0.200
+    assert eng._deadline_of(req, 1.0) == pytest.approx(1.200)
+
+
+def test_surface_stats_reported_per_class():
+    """hit/miss accounting lands in the submitting request's surface
+    class, and deadline_summary reports per-surface hit rates."""
+    mix = (Scenario("f", m1=64, m2=8, K=3, surface="feed", weight=1.0),
+           Scenario("s", m1=64, m2=8, K=3, surface="search", weight=1.0))
+    eng = ServingEngine(max_batch=4, pipeline_depth=0,
+                        surface_budgets={"feed": 0.05, "search": 1.0},
+                        clock=FrozenClock())
+    res = eng.serve_stream(make_stream(mix, n_requests=24, seed=8))
+    ss = eng.metrics.surface_stats
+    assert set(ss) == {"feed", "search"}
+    assert sum(s["hits"] + s["misses"] for s in ss.values()) == len(res)
+    surf = eng.metrics.deadline_summary()["surfaces"]
+    for name in ("feed", "search"):
+        assert 0.0 <= surf[name]["hit_rate"] <= 1.0
+
+
+def test_surface_sheds_counted_per_class():
+    ctrl = AdmissionController()
+    eng, reqs = _knn_mean_engine(pipeline_depth=0, admission=ctrl)
+    for r in reqs:
+        r.surface = "feed"
+    eng.warmup(reqs)
+    for b in eng._warmed:
+        ctrl.observe_service(b.name, 1e6)       # every rung predicted late
+    res = eng.serve_stream(reqs, warmup=False)
+    assert all(isinstance(r, Shed) for r in res)
+    assert eng.metrics.surface_stats["feed"]["sheds"] == len(reqs)

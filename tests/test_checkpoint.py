@@ -1,4 +1,9 @@
-"""Checkpoint store + fault-tolerant runner."""
+"""Checkpoint store + fault-tolerant runner + per-epoch predictor
+checkpoints (the serving fleet's restart path): every predictor
+family's epoch state must round-trip bitwise — a hot engine and an
+engine RESTORED from the epoch checkpoint serve identical results —
+and a corrupted newest epoch must be refused in favor of the previous
+one, never served half-written."""
 
 import os
 
@@ -7,8 +12,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import FrozenClock
+
 from repro.checkpoint import CheckpointStore
+from repro.core.predictors import (
+    KNNLambdaPredictor,
+    LinearLambdaPredictor,
+    MeanLambdaPredictor,
+    MLPLambdaPredictor,
+    predictor_state,
+)
+from repro.data.synthetic import DriftSpec
 from repro.distributed.runner import FaultTolerantRunner
+from repro.serving import RefreshLane, ServingEngine, make_drift_stream
 
 
 @pytest.fixture
@@ -102,3 +118,140 @@ def test_runner_resumes_from_checkpoint(store):
     state2, report2 = runner.run({"w": jnp.zeros(1)}, 15)
     assert float(state2["w"][0]) == 15
     assert report2.steps_run == 5
+
+
+# ---------------------------------------------------------------------------
+# Per-epoch predictor checkpoints (the fleet restart path)
+# ---------------------------------------------------------------------------
+
+TAG = "arch"
+D_COV, K = 10, 4
+
+
+def _fit(family, rng):
+    X = rng.normal(size=(48, D_COV)).astype(np.float32)
+    lam = np.abs(rng.normal(size=(48, K))).astype(np.float32)
+    if family == "knn":
+        return KNNLambdaPredictor.fit(X, lam, k=5)
+    if family == "linear":
+        return LinearLambdaPredictor.fit(jnp.asarray(X), jnp.asarray(lam))
+    if family == "mean":
+        return MeanLambdaPredictor.fit(X, lam)
+    if family == "mlp":
+        return MLPLambdaPredictor.fit(X, lam, d_hidden=16, num_steps=30)
+    raise ValueError(family)
+
+
+def _stream(n=32, seed=0):
+    return make_drift_stream(DriftSpec(kind="none"), tag=TAG, n_requests=n,
+                             m1=96, m2=8, K=K, d_cov=D_COV, b_frac=0.25,
+                             seed=seed)
+
+
+def _engine(pred):
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=0,
+                        clock=FrozenClock())
+    eng.register_predictor(TAG, pred, d_cov=D_COV)
+    return eng
+
+
+def _assert_same(got, ref):
+    np.testing.assert_array_equal(got.perm, ref.perm)
+    np.testing.assert_array_equal(got.exposure, ref.exposure)
+    assert got.utility == ref.utility and got.epoch == ref.epoch
+
+
+def _host(state):
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+
+@pytest.mark.parametrize("family", ["mean", "knn", "linear", "mlp"])
+def test_epoch_state_roundtrip_bitwise(family, store):
+    """save_predictor_epoch -> load_predictor_epoch returns every leaf
+    bitwise, with and without a `like` template."""
+    state = _host(predictor_state(_fit(family, np.random.default_rng(0))))
+    store.save_predictor_epoch(TAG, 3, state)
+    assert store.predictor_epochs(TAG) == [3]
+    for like in (None, state):
+        loaded, epoch = store.load_predictor_epoch(TAG, like=like)
+        assert epoch == 3
+        got, _ = jax.tree_util.tree_flatten(loaded)
+        ref, _ = jax.tree_util.tree_flatten(state)
+        assert len(got) == len(ref)
+        for g, r in zip(got, ref):
+            assert np.asarray(g).dtype == np.asarray(r).dtype
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+@pytest.mark.parametrize("family", ["mean", "knn", "linear", "mlp"])
+def test_restored_engine_serves_epoch_bitwise(family, store):
+    """The fleet restart contract, per family: a refresh-published
+    epoch checkpointed by the lane, restored into a COLD engine via
+    swap_predictor(epoch=...), serves the post-swap stream bitwise
+    identically to the hot engine that published it — resuming at
+    last-good λ̂, not at epoch 0."""
+    rng = np.random.default_rng(1)
+    pred = _fit(family, rng)
+    reqs = _stream(32, seed=2)
+    first, second = reqs[:16], reqs[16:]
+
+    hot = _engine(pred)
+    lane = RefreshLane(hot, eta=0.5, min_samples=4, mlp_steps=10,
+                       checkpoint=store)
+    hot.warmup(reqs)
+    hot.serve_stream(first, warmup=False)
+    rep = lane.refresh(TAG)[TAG]
+    assert rep["swapped"] and rep["checkpointed"] and rep["epoch"] == 1
+    assert store.predictor_epochs(TAG) == [1]
+    hot_out = hot.serve_stream(second, warmup=False)
+    assert all(r.epoch == 1 for r in hot_out)
+
+    cold = _engine(_fit(family, np.random.default_rng(1)))  # same epoch-0 fit
+    state, epoch = store.load_predictor_epoch(TAG)
+    assert epoch == 1
+    assert cold.swap_predictor(TAG, state, epoch=epoch) == 1
+    cold.warmup(reqs)
+    cold_out = cold.serve_stream(second, warmup=False)
+    assert len(cold_out) == len(hot_out)
+    for g, r in zip(cold_out, hot_out):
+        _assert_same(g, r)
+
+
+def test_corrupted_newest_epoch_falls_back_to_previous(store):
+    state1 = {"lam": np.ones((3, K), np.float32)}
+    state2 = {"lam": np.full((3, K), 2.0, np.float32)}
+    store.save_predictor_epoch(TAG, 1, state1)
+    path2 = store.save_predictor_epoch(TAG, 2, state2)
+    with open(os.path.join(path2, "arrays.npz"), "wb") as f:
+        f.write(b"not an npz")                  # torn write / disk fault
+    loaded, epoch = store.load_predictor_epoch(TAG)
+    assert epoch == 1
+    np.testing.assert_array_equal(loaded["lam"], state1["lam"])
+    # pinning the corrupted epoch explicitly must refuse, not fall back
+    with pytest.raises(FileNotFoundError, match="epoch 2"):
+        store.load_predictor_epoch(TAG, epoch=2)
+
+
+def test_nonfinite_epoch_refused(store):
+    store.save_predictor_epoch(TAG, 1, {"w": np.ones(4, np.float32)})
+    store.save_predictor_epoch(
+        TAG, 2, {"w": np.full(4, np.nan, np.float32)})
+    _, epoch = store.load_predictor_epoch(TAG)
+    assert epoch == 1                           # NaN epoch refused
+
+
+def test_no_loadable_epoch_raises(store):
+    with pytest.raises(FileNotFoundError, match="no predictor checkpoints"):
+        store.load_predictor_epoch("nope")
+    path = store.save_predictor_epoch(TAG, 1, {"w": np.ones(2, np.float32)})
+    os.remove(os.path.join(path, "manifest.json"))
+    with pytest.raises(FileNotFoundError, match="no loadable"):
+        store.load_predictor_epoch(TAG)
+
+
+def test_epoch_checkpoints_respect_keep_last(store):
+    for e in (1, 2, 3, 4):
+        store.save_predictor_epoch(TAG, e, {"w": np.full(2, float(e))})
+    assert store.predictor_epochs(TAG) == [3, 4]   # keep_last=2
+    _, epoch = store.load_predictor_epoch(TAG)
+    assert epoch == 4

@@ -1,0 +1,519 @@
+"""Fault-tolerant replica fleet: health state machine, deterministic
+fault plans, consistent-hash routing, hedged retries with rid dedup,
+crash failover, supervised restart from epoch checkpoints, and the
+full seeded chaos acceptance run.
+
+Everything timing-sensitive runs on FrozenClock (router and engines
+both), so health transitions, backoff schedules, and batch composition
+are pure functions of the stream + the fault plan — the chaos scenario
+replays identically on any box.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import FrozenClock
+
+from repro.checkpoint import CheckpointStore
+from repro.core.predictors import MeanLambdaPredictor
+from repro.data.synthetic import DriftSpec
+from repro.serving import (
+    DEAD,
+    HEALTHY,
+    RECOVERING,
+    SUSPECT,
+    FaultInjector,
+    FaultPlan,
+    FleetRouter,
+    HealthConfig,
+    RankRequest,
+    RefreshLane,
+    ReplicaCrash,
+    ReplicaFaults,
+    ReplicaHealth,
+    Scenario,
+    ServingEngine,
+    Shed,
+    backoff_s,
+    make_drift_stream,
+    make_stream,
+)
+
+TAG = "arch"
+D_COV, K = 10, 4
+
+
+# ---------------------------------------------------------------------------
+# Health state machine (pure, clock-injected)
+# ---------------------------------------------------------------------------
+
+
+def _health(**kw):
+    return ReplicaHealth("r", HealthConfig(**kw))
+
+
+def test_health_config_validation():
+    with pytest.raises(ValueError, match="dead_after_s"):
+        HealthConfig(suspect_after_s=1.0, dead_after_s=0.5)
+    with pytest.raises(ValueError, match="lag_hysteresis"):
+        HealthConfig(lag_hysteresis=0.0)
+
+
+def test_heartbeat_staleness_walks_suspect_then_dead():
+    h = _health(suspect_after_s=1.0, dead_after_s=3.0)
+    h.heartbeat(0.0)
+    assert h.evaluate(0.5) == HEALTHY
+    assert h.evaluate(1.5) == SUSPECT
+    assert h.evaluate(2.9) == SUSPECT
+    assert h.evaluate(3.0) == DEAD
+    # DEAD is absorbing: a straggler heartbeat does not resurrect
+    h.heartbeat(3.1)
+    assert h.evaluate(3.2) == DEAD
+    assert [t[1:3] for t in h.transitions] == [
+        (HEALTHY, SUSPECT), (SUSPECT, DEAD)]
+
+
+def test_lag_ewma_suspects_and_recovers_with_hysteresis():
+    h = _health(lag_suspect_ms=100.0, lag_hysteresis=0.5, lag_alpha=1.0)
+    h.heartbeat(0.0)
+    h.observe_lag(150.0)
+    assert h.evaluate(0.01) == SUSPECT
+    # under the ENTRY threshold but inside the hysteresis band: stays
+    h.observe_lag(80.0)
+    h.heartbeat(0.02)
+    assert h.evaluate(0.02) == SUSPECT
+    # below hysteresis * threshold: recovers
+    h.observe_lag(10.0)
+    h.heartbeat(0.03)
+    assert h.evaluate(0.03) == HEALTHY
+
+
+def test_failures_escalate_and_fatal_goes_straight_to_dead():
+    h = _health(fail_threshold=3)
+    h.heartbeat(0.0)
+    h.on_failure(0.01)
+    assert h.state == SUSPECT
+    h.on_success(0.02)                          # resets the counter
+    assert h.consecutive_failures == 0
+    for i in range(3):
+        h.on_failure(0.03 + i * 0.01)
+    assert h.state == DEAD
+    h2 = _health()
+    h2.heartbeat(0.0)
+    h2.on_failure(0.01, fatal=True)
+    assert h2.state == DEAD
+
+
+def test_recovery_protocol_and_failed_restart():
+    h = _health()
+    with pytest.raises(RuntimeError, match="only DEAD"):
+        h.begin_recovery(0.0)
+    h.on_failure(0.0, fatal=True)
+    h.begin_recovery(1.0)
+    assert h.state == RECOVERING and not h.routable
+    assert h.evaluate(100.0) == RECOVERING      # deadline rules don't touch it
+    h.fail_recovery(2.0)
+    assert h.state == DEAD
+    h.begin_recovery(3.0)
+    h.mark_recovered(4.0)
+    assert h.state == HEALTHY and h.consecutive_failures == 0
+    assert h.last_heartbeat == 4.0
+
+
+def test_backoff_is_deterministic_capped_and_jittered():
+    xs = [backoff_s(a, base_s=0.1, cap_s=1.0, seed=3) for a in range(8)]
+    assert xs == [backoff_s(a, base_s=0.1, cap_s=1.0, seed=3)
+                  for a in range(8)]            # replayable
+    for a, x in enumerate(xs):
+        raw = min(1.0, 0.1 * 2 ** a)
+        assert 0.5 * raw <= x <= raw            # jitter in [0.5, 1.0]
+    assert backoff_s(50, base_s=0.1, cap_s=1.0, seed=3) <= 1.0
+    assert backoff_s(0, seed=1) != backoff_s(0, seed=2)
+    with pytest.raises(ValueError):
+        backoff_s(-1)
+
+
+# ---------------------------------------------------------------------------
+# Fault plans + injector
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_plan_is_seed_deterministic():
+    names = ["a", "b", "c"]
+    p1, p2 = (FaultPlan.chaos(names, seed=5) for _ in range(2))
+    assert p1 == p2
+    assert p1 != FaultPlan.chaos(names, seed=6)
+    assert p1.faults_for("a").crash_at_batch is not None
+    assert p1.faults_for("a").kill_during_drain
+    assert p1.faults_for("b").blackhole_after is not None
+    assert p1.faults_for("c").slow_ms > 0
+    assert not FaultPlan.none(names).faults_for("a").any()
+    with pytest.raises(ValueError, match=">= 3"):
+        FaultPlan.chaos(["a", "b"])
+
+
+def test_injector_crash_at_batch_and_blackhole_window():
+    inj = FaultInjector(ReplicaFaults(crash_at_batch=2, blackhole_after=1,
+                                      blackhole_until=3), "r")
+    inj._before_flush()
+    inj._before_flush()
+    with pytest.raises(ReplicaCrash):
+        inj._before_flush()                     # batch index 2
+    with pytest.raises(ReplicaCrash):
+        inj._before_flush()                     # crashed: stays down
+    assert [inj.heartbeat_delivered() for _ in range(5)] == [False] * 5
+    inj2 = FaultInjector(ReplicaFaults(blackhole_after=1, blackhole_until=3),
+                         "r2")
+    assert [inj2.heartbeat_delivered() for _ in range(5)] == [
+        True, False, False, True, True]
+
+
+def test_injector_restore_clears_one_shot_faults_but_keeps_drain_kill():
+    inj = FaultInjector(ReplicaFaults(crash_at_batch=0,
+                                      kill_during_drain=True), "r")
+    with pytest.raises(ReplicaCrash):
+        inj._before_flush()
+    inj.restore()
+    inj._before_flush()                         # crash cleared
+    inj.draining = True
+    with pytest.raises(ReplicaCrash):
+        inj._before_flush()                     # drain kill still armed
+    inj.restore()
+    inj.draining = True
+    inj._before_flush()                         # but fires only once
+
+
+# ---------------------------------------------------------------------------
+# Router: ring, clean serving, hedging, failover, restart
+# ---------------------------------------------------------------------------
+
+
+def _lam_factory(name):
+    return ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=1,
+                         clock=FrozenClock())
+
+
+def _router(factory=_lam_factory, n=3, **kw):
+    kw.setdefault("clock", FrozenClock(tick=1e-4))
+    kw.setdefault("heartbeat_interval_s", float("inf"))
+    kw.setdefault("backoff_base_s", 1e-4)
+    kw.setdefault("backoff_cap_s", 1e-3)
+    return FleetRouter(factory, n, **kw)
+
+
+def _one_bucket_stream(n, seed=0):
+    """All requests land in ONE bucket (fixed geometry, raw lam)."""
+    mix = (Scenario("s", m1=64, m2=8, K=4, m1_jitter=0.0),)
+    return make_stream(mix, n_requests=n, seed=seed)
+
+
+def test_ring_owners_are_deterministic_and_cover_all_replicas():
+    r1, r2 = _router(), _router()
+    for name in ("lam/64/8/4/b4", "lam/128/16/4/b4", "arch/256/8/8/b4"):
+        o1, o2 = r1._owners(name), r2._owners(name)
+        assert o1 == o2                         # replayable (blake2b, not
+        assert sorted(o1) == [0, 1, 2]          # process-salted hash())
+    # vnodes spread primaries: over many keys no replica owns everything
+    primaries = {r1._owners(f"bucket/{i}")[0] for i in range(64)}
+    assert primaries == {0, 1, 2}
+    r1.close(), r2.close()
+
+
+def test_clean_fleet_serves_every_request_exactly_once():
+    reqs = _one_bucket_stream(32)
+    router = _router()
+    res = router.serve_stream(reqs)
+    assert sorted(r.rid for r in res) == list(range(32))
+    s = router.fleet_summary()
+    assert s["submitted"] == 32 and s["served"] == 32
+    assert s["lost"] == 0 and s["orphaned_futures"] == 0
+    assert s["crashes"] == 0 and s["restarts"] == 0
+    # only primary + backup warmed the bucket group (replication=1)
+    warmed = [rep for rep in router.replicas if rep.warm_buckets]
+    assert len(warmed) == 2
+    assert warmed[0].warm_buckets == warmed[1].warm_buckets
+    router.close()
+
+
+def test_fleet_results_match_single_engine_bitwise():
+    """Routing is transparent: a 3-replica fleet serves bitwise what a
+    single engine serves (same predictor state, same bucket geometry —
+    rows are independent, so batch composition can't matter)."""
+    reqs = _one_bucket_stream(16, seed=3)
+    ref = {r.rid: r for r in
+           ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=0,
+                         clock=FrozenClock()).serve_stream(reqs)}
+    router = _router()
+    got = router.serve_stream(reqs)
+    assert len(got) == len(ref)
+    for g in got:
+        np.testing.assert_array_equal(g.perm, ref[g.rid].perm)
+        np.testing.assert_array_equal(g.exposure, ref[g.rid].exposure)
+        assert g.utility == ref[g.rid].utility
+    router.close()
+
+
+def test_suspect_primary_hedges_and_dedupes_by_rid():
+    reqs = _one_bucket_stream(8, seed=1)
+    router = _router()
+    router.warmup(reqs)
+    bucket = router._bucket_key(reqs[0])
+    primary = router._owners(bucket)[0]
+    router.replicas[primary].health.observe_lag(1e9)  # wedged, not dead
+    router.tick()
+    assert router.replicas[primary].health.state == SUSPECT
+    res = []
+    for r in reqs:
+        res += router.submit(r)
+    res += router.drain()
+    assert sorted(r.rid for r in res) == list(range(8))
+    s = router.fleet_summary()
+    assert s["hedges"] == 8                     # every submit hedged
+    assert s["served"] == 8 and s["lost"] == 0
+    # both copies completed: one settled each future, one deduped
+    assert s["duplicates_deduped"] == 8
+    assert s["hedge_wins"] == 8
+    assert s["orphaned_futures"] == 0
+    router.close()
+
+
+def test_hedging_disabled_never_duplicates():
+    reqs = _one_bucket_stream(8, seed=1)
+    router = _router(hedging=False)
+    router.warmup(reqs)
+    primary = router._owners(router._bucket_key(reqs[0]))[0]
+    router.replicas[primary].health.observe_lag(1e9)
+    router.tick()
+    res = router.serve_stream(reqs, warmup=False)
+    s = router.fleet_summary()
+    assert sorted(r.rid for r in res) == list(range(8))
+    assert s["hedges"] == 0 and s["duplicates_deduped"] == 0
+    router.close()
+
+
+def test_crash_fails_over_and_restarts_with_zero_lost():
+    reqs = _one_bucket_stream(32, seed=2)
+    bucket_probe = _router()
+    primary_name = bucket_probe.replicas[
+        bucket_probe._owners(bucket_probe._bucket_key(reqs[0]))[0]].name
+    bucket_probe.close()
+    plan = FaultPlan(replicas={
+        primary_name: ReplicaFaults(crash_at_batch=2)})
+    router = _router(fault_plan=plan)
+    res = router.serve_stream(reqs)
+    assert sorted(r.rid for r in res) == list(range(32))
+    s = router.fleet_summary()
+    assert s["crashes"] == 1 and s["restarts"] == 1
+    assert s["failovers"] >= 1 and s["retries"] >= 1
+    assert s["lost"] == 0 and s["orphaned_futures"] == 0
+    rep = next(r for r in router.replicas if r.name == primary_name)
+    assert rep.health.state == HEALTHY          # restarted + recovered
+    assert [t[1:3] for t in rep.health.transitions] == [
+        (HEALTHY, DEAD), (DEAD, RECOVERING), (RECOVERING, HEALTHY)]
+    # no recompiles outside warmup, on any incarnation
+    for r in router.replicas:
+        assert r.engine.metrics.compiles_post_warmup == 0
+    router.close()
+
+
+def test_drain_kill_hands_queued_requests_off():
+    reqs = _one_bucket_stream(10, seed=4)       # 2 full + 1 partial batch
+    probe = _router()
+    primary_name = probe.replicas[
+        probe._owners(probe._bucket_key(reqs[0]))[0]].name
+    probe.close()
+    plan = FaultPlan(replicas={
+        primary_name: ReplicaFaults(kill_during_drain=True)})
+    router = _router(fault_plan=plan)
+    res = router.serve_stream(reqs)
+    assert sorted(r.rid for r in res) == list(range(10))
+    s = router.fleet_summary()
+    assert s["crashes"] == 1                    # the drain kill
+    assert s["lost"] == 0 and s["orphaned_futures"] == 0
+    router.close()
+
+
+def test_rid_collision_rejected_while_in_flight():
+    router = _router()
+    reqs = _one_bucket_stream(2, seed=5)
+    reqs[1].rid = reqs[0].rid
+    router.warmup(reqs)
+    router.submit_future(reqs[0])
+    with pytest.raises(ValueError, match="already in flight"):
+        router.submit_future(reqs[1])
+    router.drain()
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/restore through the fleet (last-good λ̂, not cold)
+# ---------------------------------------------------------------------------
+
+
+def _cov_stream(n, seed=0):
+    return make_drift_stream(DriftSpec(kind="none"), tag=TAG, n_requests=n,
+                             m1=96, m2=8, K=K, d_cov=D_COV, b_frac=0.25,
+                             seed=seed)
+
+
+def _lane_factory(tmp_path):
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(48, D_COV)).astype(np.float32)
+    lam = np.abs(rng.normal(size=(48, K))).astype(np.float32)
+
+    def factory(name):
+        eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=1,
+                            clock=FrozenClock())
+        eng.register_predictor(TAG, MeanLambdaPredictor.fit(X, lam),
+                               d_cov=D_COV)
+        store = CheckpointStore(str(tmp_path / f"ckpt-{name}"), keep_last=3)
+        lane = RefreshLane(eng, min_samples=4, checkpoint=store)
+        return eng, lane
+    return factory
+
+
+def test_restart_resumes_at_last_good_epoch(tmp_path):
+    """The tentpole's checkpoint/restore contract end-to-end: refresh
+    publishes epoch 1 (checkpointed by the lane), the primary crashes,
+    and its restarted incarnation serves epoch 1 — resumed from the
+    epoch checkpoint, not cold at 0."""
+    reqs = _cov_stream(32)
+    probe = _router(_lane_factory(tmp_path / "probe"))
+    primary = probe.replicas[
+        probe._owners(probe._bucket_key(reqs[0]))[0]].name
+    probe.close()
+
+    plan = FaultPlan(replicas={primary: ReplicaFaults(crash_at_batch=3)})
+    router = _router(_lane_factory(tmp_path / "fleet"), fault_plan=plan)
+    router.warmup(reqs)
+    res = []
+    for r in reqs[:12]:                         # 3 batches, all pre-crash
+        res += router.submit(r)
+        router.tick()
+    rep_reports = router.refresh()
+    assert rep_reports[primary][TAG]["swapped"]
+    assert rep_reports[primary][TAG]["checkpointed"]
+    for r in reqs[12:]:                         # crash lands in here
+        res += router.submit(r)
+        res += router.poll()
+        router.tick()
+    res += router.drain()
+    assert sorted(r.rid for r in res) == list(range(32))
+
+    rep = next(r for r in router.replicas if r.name == primary)
+    assert rep.restore_history == [{TAG: 1}]    # restored epoch 1 exactly
+    assert rep.engine.predictor_epoch(TAG) == 1
+    assert rep.store.predictor_epochs(TAG) == [1]
+
+    # the restored primary serves epoch 1 now
+    post = router.serve_stream(_cov_stream(8, seed=9), warmup=False)
+    assert any(r.epoch == 1 for r in post)
+    assert router.fleet_summary()["lost"] == 0
+    router.close()
+
+
+def test_poisoned_swap_refused_fleet_keeps_serving(tmp_path):
+    reqs = _cov_stream(16)
+    probe = _router(_lane_factory(tmp_path / "probe"))
+    primary = probe.replicas[
+        probe._owners(probe._bucket_key(reqs[0]))[0]].name
+    probe.close()
+    plan = FaultPlan(replicas={primary: ReplicaFaults(poison_swap_at=0)})
+    router = _router(_lane_factory(tmp_path / "fleet"), fault_plan=plan)
+    router.warmup(reqs)
+    res = []
+    for r in reqs:
+        res += router.submit(r)
+        router.tick()
+    res += router.drain()
+    report = router.refresh()[primary][TAG]
+    assert not report["swapped"] and "refused" in report["reason"]
+    rep = next(r for r in router.replicas if r.name == primary)
+    assert rep.engine.metrics.refresh_failures == 1
+    assert rep.engine.predictor_epoch(TAG) == 0     # still last-good
+    assert rep.store.predictor_epochs(TAG) == []    # poison never persisted
+    post = router.serve_stream(_cov_stream(8, seed=9), warmup=False)
+    assert sorted(r.rid for r in post) == list(range(8))
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# The full seeded chaos acceptance run (the PR's headline assertion)
+# ---------------------------------------------------------------------------
+
+
+def _chaos_name_order(reqs):
+    """Order replica names for FaultPlan.chaos so names[0] (crash) is
+    the primary of the first bucket and names[1] (blackhole) the
+    primary of the second if distinct — the faults land on replicas
+    that actually serve traffic, whatever the ring assigns."""
+    probe = _router()
+    keys = []
+    for r in reqs:
+        k = probe._bucket_key(r)
+        if k not in keys:
+            keys.append(k)
+    prims = [probe.replicas[probe._owners(k)[0]].name for k in keys]
+    probe.close()
+    order = list(dict.fromkeys(prims))
+    order += [r.name for r in probe.replicas if r.name not in order]
+    return order
+
+
+def test_chaos_plan_512_request_stream_loses_nothing():
+    """3-replica fleet, 512-request mixed stream, the full canonical
+    chaos plan (crash + blackhole + slow replica + drain kill): every
+    request is served exactly once (hedged duplicates deduped by rid),
+    zero futures orphaned, zero requests lost, the crashed replica is
+    restarted, and no incarnation ever recompiles outside warmup."""
+    mix = (Scenario("f", m1=64, m2=8, K=4, m1_jitter=0.0, weight=2.0,
+                    surface="feed"),
+           Scenario("s", m1=96, m2=16, K=4, m1_jitter=0.0, weight=1.0,
+                    surface="search"))
+    reqs = make_stream(mix, n_requests=512, seed=11)
+    order = _chaos_name_order(reqs)
+    plan = FaultPlan.chaos(order, seed=11, slow_ms=0.2)
+    router = _router(
+        fault_plan=plan,
+        health=HealthConfig(suspect_after_s=0.002, dead_after_s=10.0,
+                            lag_suspect_ms=1e9))
+    res = router.serve_stream(reqs)
+    served = [r for r in res if not isinstance(r, Shed)]
+    assert sorted(r.rid for r in served) == list(range(512))
+    assert len(set(r.rid for r in served)) == 512   # no duplicates served
+    s = router.fleet_summary()
+    assert s["orphaned_futures"] == 0
+    assert s["lost"] == 0
+    assert s["crashes"] >= 1 and s["restarts"] >= 1
+    assert s["heartbeats_missed"] >= 1              # blackhole was real
+    crashed = next(r for r in router.replicas if r.name == order[0])
+    assert crashed.restore_history                  # supervised restart ran
+    for rep in router.replicas:
+        assert rep.engine.metrics.compiles_post_warmup == 0
+    # accounting closes: every submission is served, shed, or lost
+    assert s["submitted"] == s["served"] + s["sheds"] + s["lost"] == 512
+    router.close()
+
+
+def test_chaos_replay_is_deterministic():
+    """Same seed, same stream -> same fault schedule and the same
+    fleet-level failure accounting (the chaos harness's whole point)."""
+    mix = (Scenario("f", m1=64, m2=8, K=4, m1_jitter=0.0),)
+    reqs = make_stream(mix, n_requests=64, seed=3)
+    order = _chaos_name_order(reqs)
+
+    def run():
+        plan = FaultPlan.chaos(order, seed=3, slow_ms=0.0)
+        router = _router(fault_plan=plan)
+        res = router.serve_stream(reqs)
+        s = router.fleet_summary()
+        router.close()
+        keys = ("submitted", "served", "crashes", "restarts", "lost")
+        transitions = [[t[1:3] for t in rep.health.transitions]
+                       for rep in router.replicas]
+        return {k: s[k] for k in keys}, transitions, sorted(
+            r.rid for r in res)
+
+    assert run() == run()

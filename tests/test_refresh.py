@@ -730,3 +730,81 @@ else:                                            # keep the skip visible
 
     def test_refresh_property_layer_requires_hypothesis():
         pytest.importorskip("hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# stop(final_refresh=True) vs an in-flight background refresh (regression)
+# ---------------------------------------------------------------------------
+
+
+def _observe_window(lane, tag, rng, n=4):
+    """Buffer one telemetry window with guaranteed shortfall pressure."""
+    for _ in range(n):
+        lane.observe(tag, X=rng.normal(size=D_COV).astype(np.float32),
+                     lam=np.abs(rng.normal(size=K)).astype(np.float32),
+                     exposure=np.zeros(K, np.float32),
+                     b=np.ones(K, np.float32))
+
+
+def test_stop_final_refresh_never_races_inflight_pass():
+    """Regression: stop(final_refresh=True) used to bounded-join the
+    lane thread and could run the final refresh CONCURRENTLY with an
+    in-flight background pass — both passes building on the same live
+    state and double-publishing one telemetry window (a lost update:
+    the later swap silently dropped the earlier window).
+
+    The mean family makes the lost update observable exactly: each
+    published window adds its row count to the running-mean weight, so
+    weight_final = weight_0 + n_1 + n_2 iff the two windows were
+    applied SEQUENTIALLY. A racing pair both building on weight_0
+    would end at weight_0 + n_2.
+
+    Deterministic schedule via publish_filter: the background pass
+    blocks inside its publish (gate), the main thread buffers a second
+    window and calls stop(final_refresh=True) from a helper thread —
+    which must WAIT (not abandon the lane thread), and only after the
+    gate opens run the final pass on the fresh window."""
+    import threading
+
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(max_batch=4, pipeline_depth=0, clock=FrozenClock())
+    eng.register_predictor(TAG, _fit("mean", rng), d_cov=D_COV)
+
+    entered = threading.Event()
+    gate = threading.Event()
+    inside, max_inside = [0], [0]
+    ilock = threading.Lock()
+
+    def publish_filter(tag, state):
+        with ilock:
+            inside[0] += 1
+            max_inside[0] = max(max_inside[0], inside[0])
+        entered.set()
+        if not gate.wait(timeout=30.0):         # fail loud, never hang CI
+            raise RuntimeError("gate never opened")
+        with ilock:
+            inside[0] -= 1
+        return state
+
+    lane = RefreshLane(eng, min_samples=4, publish_filter=publish_filter)
+    w0 = lane._default_mean_weight
+    _observe_window(lane, TAG, rng, n=4)        # window 1
+    lane.start(interval_s=1e-3)
+    assert entered.wait(timeout=30.0)           # pass 1 in flight, blocked
+
+    _observe_window(lane, TAG, rng, n=6)        # window 2
+    stopper = threading.Thread(
+        target=lambda: lane.stop(final_refresh=True))
+    stopper.start()
+    stopper.join(timeout=0.3)
+    assert stopper.is_alive()                   # stop WAITS for the pass
+    gate.set()
+    stopper.join(timeout=30.0)
+    assert not stopper.is_alive()
+    assert lane._thread is None                 # lane thread fully drained
+
+    assert max_inside[0] == 1                   # passes never interleaved
+    assert eng.predictor_epoch(TAG) == 2        # both windows published...
+    assert lane._mean_weight[TAG] == w0 + 4 + 6  # ...sequentially: no
+    assert eng.metrics.swaps == 2                # window was lost or doubled
+    assert lane.pending(TAG) == 0
