@@ -46,6 +46,7 @@ from repro.core.predictors import KNNLambdaPredictor
 from repro.kernels.ops import predict_rank_audited
 from repro.serving import (
     DEFAULT_AUTOTUNE_PATH,
+    Lattice,
     ServingEngine,
     Scenario,
     bucket_for,
@@ -136,7 +137,11 @@ def run_autotune(*, geometries=GEOMETRIES, quick: bool = False,
     rows = []
     for geom in geometries:
         bucket = bucket_for(tag="arch", **geom)
-        key = geometry_key(bucket)
+        # key on the ACTUAL tuned geometry — (m1, m2, K, B, d_cov) —
+        # not the bucket's position in whatever lattice is live, so a
+        # lattice swap re-resolves the same entry (exact key, or the
+        # nearest covering geometry via serving.resolve_autotune)
+        key = geometry_key(bucket, d_cov=D_COV)
         pred, prob = _problem(geom)
         best, best_us = None, float("inf")
         n_cand = 0
@@ -187,12 +192,30 @@ def run_autotune(*, geometries=GEOMETRIES, quick: bool = False,
     engine_ok = (eng.autotuned_buckets >= 1
                  and eng.metrics.compiles_post_warmup == 0
                  and len(res) == len(reqs))
+
+    # geometry keys must survive lattice swaps: re-warm onto an
+    # adaptive lattice whose corner IS the tuned geometry (epoch 1 —
+    # the exact key resolves again), then onto a shifted corner the
+    # table does not cover (epoch 2 — degrades to defaults, never to a
+    # dispatch-path compile), serving the same stream after each flip.
+    g = geometries[0]
+    tuned_before = eng.autotuned_buckets
+    eng.rewarm_lattice(Lattice(corners=((g["m1"], g["m2"], g["K"]),)))
+    res1 = eng.serve_stream(reqs, warmup=False)
+    eng.rewarm_lattice(
+        Lattice(corners=((g["m1"] + 64, g["m2"], g["K"]),)))
+    res2 = eng.serve_stream(reqs, warmup=False)
+    swap_ok = (eng.lattice_epoch() == 2
+               and eng.autotuned_buckets >= tuned_before
+               and eng.metrics.compiles_post_warmup == 0
+               and len(res1) == len(reqs) and len(res2) == len(reqs))
     eng.close()
 
     out = {"backend": jax.default_backend(), "tpu": tpu,
            "table_path": path, "table": table, "rows": rows,
            "roundtrip_ok": bool(roundtrip_ok),
-           "engine_ok": bool(engine_ok)}
+           "engine_ok": bool(engine_ok),
+           "swap_ok": bool(swap_ok)}
     if verbose:
         print(f"# table -> {path} (roundtrip {roundtrip_ok}, engine "
               f"warmed with {eng.autotuned_buckets} tuned bucket(s): "
@@ -212,8 +235,12 @@ def check_autotune(*, quick: bool = True, verbose: bool = True) -> dict:
         "autotune gate: engine did not warm from the saved table "
         "(no tuned bucket, a post-warmup recompile, or a dropped "
         "request)")
+    assert res["swap_ok"], (
+        "autotune gate: tuned geometry keys did not survive two "
+        "lattice swaps (lost entry, dispatch-path compile, or a "
+        "dropped request)")
     print("# autotune acceptance (JSON round-trip, engine warms from "
-          "table, 0 recompiles): PASS")
+          "table, keys survive 2 lattice swaps, 0 recompiles): PASS")
     return res
 
 
@@ -238,7 +265,7 @@ def main():
     args = ap.parse_args()
     t0 = time.perf_counter()
     res = run_autotune(quick=args.quick, table_path=args.table)
-    assert res["roundtrip_ok"] and res["engine_ok"], res
+    assert res["roundtrip_ok"] and res["engine_ok"] and res["swap_ok"], res
     if args.json:
         write_bench_json(args.json, "autotune", records(res),
                          meta={"quick": args.quick,

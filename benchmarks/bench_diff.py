@@ -1,0 +1,181 @@
+"""Bench-artifact diff: fresh BENCH_*.json vs committed baselines.
+
+Every gate writes a machine-readable BENCH_<name>.json (see
+benchmarks.common.write_bench_json). This tool closes the loop by
+comparing a fresh artifact directory against the baselines committed
+under benchmarks/baselines/, so a PR that silently regresses a derived
+health number (padding-waste improvement, swap counts, parity flags)
+FAILS CI, while wall-clock drift on shared runners only WARNS by
+default:
+
+  * A bench present in the baselines but absent from the fresh
+    artifacts is a FAIL (a gate stopped running is the worst silent
+    regression there is). Extra fresh benches are fine — they are new
+    gates that simply have no baseline yet.
+  * A record name present in a baseline bench but missing fresh is a
+    FAIL (a renamed record needs its baseline refreshed on purpose).
+  * Boolean derived values (parity_ok, rollback_ok, ...) flipping
+    True -> False is a FAIL; numeric derived values REGRESSING by more
+    than the tolerance band is a FAIL when the baseline marks the
+    direction (see DERIVED_HIGHER_IS_BETTER), ignored otherwise.
+  * us_per_call outside (1 + tol) x baseline is a WARN — timing on CI
+    runners is noisy — unless --strict-timing promotes it to FAIL.
+
+Refreshing a baseline is one command (run the gate with --json
+benchmarks/baselines) and one reviewed diff.
+
+Usage:
+
+  python benchmarks/bench_diff.py --fresh bench-artifacts \\
+      [--baseline benchmarks/baselines] [--tol 0.5] [--strict-timing]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+DEFAULT_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+# Derived metrics with a known good direction: higher is better. A
+# fresh value below baseline * (1 - tol) fails; above never does.
+# Lower-is-better counters that must stay exactly at their baseline
+# (dispatch-path compiles, rollbacks) are compared as "worse if it
+# grew past baseline * (1 + tol)".
+DERIVED_HIGHER_IS_BETTER = {
+    "waste_improvement", "swaps", "shadow_compiles", "improvement",
+}
+DERIVED_LOWER_IS_BETTER = {
+    "compiles_post_warmup", "waste_adaptive", "lost_requests",
+    "orphaned_futures",
+}
+
+
+def _load_benches(dirpath: str) -> dict:
+    benches = {}
+    for path in sorted(glob.glob(os.path.join(dirpath, "BENCH_*.json"))):
+        with open(path) as f:
+            payload = json.load(f)
+        benches[payload.get("bench", os.path.basename(path))] = payload
+    return benches
+
+
+def _records_by_name(payload: dict) -> dict:
+    return {r["name"]: r for r in payload.get("records", ())}
+
+
+def _is_bool(v) -> bool:
+    return isinstance(v, bool)
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def diff_bench(name: str, base: dict, fresh: dict, *, tol: float,
+               strict_timing: bool) -> tuple[list, list]:
+    """(failures, warnings) for one bench's record set."""
+    fails, warns = [], []
+    base_recs = _records_by_name(base)
+    fresh_recs = _records_by_name(fresh)
+    for rname, brec in base_recs.items():
+        frec = fresh_recs.get(rname)
+        if frec is None:
+            fails.append(f"{name}: record '{rname}' present in baseline "
+                         f"but missing from fresh artifacts")
+            continue
+        # timing band (WARN unless --strict-timing)
+        b_us, f_us = brec.get("us_per_call"), frec.get("us_per_call")
+        if (_is_num(b_us) and _is_num(f_us)
+                and not math.isnan(b_us) and not math.isnan(f_us)
+                and b_us > 0 and f_us > b_us * (1.0 + tol)):
+            msg = (f"{name}/{rname}: us_per_call {f_us:.1f} vs baseline "
+                   f"{b_us:.1f} (> +{tol:.0%} band)")
+            (fails if strict_timing else warns).append(msg)
+        # derived values
+        bd, fd = brec.get("derived", {}), frec.get("derived", {})
+        for key, bval in bd.items():
+            if key not in fd:
+                fails.append(f"{name}/{rname}: derived '{key}' vanished")
+                continue
+            fval = fd[key]
+            if _is_bool(bval):
+                if bval and not fval:
+                    fails.append(f"{name}/{rname}: derived '{key}' "
+                                 f"flipped True -> {fval!r}")
+            elif _is_num(bval) and _is_num(fval):
+                if key in DERIVED_HIGHER_IS_BETTER:
+                    if fval < bval * (1.0 - tol):
+                        fails.append(
+                            f"{name}/{rname}: derived '{key}' {fval} "
+                            f"regressed below baseline {bval} "
+                            f"(-{tol:.0%} band)")
+                elif key in DERIVED_LOWER_IS_BETTER:
+                    floor = bval * (1.0 + tol) if bval else 0.0
+                    if fval > floor:
+                        fails.append(
+                            f"{name}/{rname}: derived '{key}' {fval} "
+                            f"grew past baseline {bval} "
+                            f"(+{tol:.0%} band)")
+    return fails, warns
+
+
+def run_diff(*, fresh_dir: str, baseline_dir: str = DEFAULT_BASELINE_DIR,
+             tol: float = 0.5, strict_timing: bool = False,
+             verbose: bool = True) -> dict:
+    baselines = _load_benches(baseline_dir)
+    fresh = _load_benches(fresh_dir)
+    fails, warns, compared = [], [], []
+    if not baselines:
+        fails.append(f"no baselines found under {baseline_dir} — commit "
+                     f"at least one BENCH_*.json there")
+    for name, base in baselines.items():
+        if name not in fresh:
+            fails.append(f"bench '{name}' has a committed baseline but "
+                         f"no fresh BENCH json in {fresh_dir}")
+            continue
+        compared.append(name)
+        f, w = diff_bench(name, base, fresh[name], tol=tol,
+                          strict_timing=strict_timing)
+        fails += f
+        warns += w
+    out = {"compared": compared,
+           "extra_fresh": sorted(set(fresh) - set(baselines)),
+           "failures": fails, "warnings": warns}
+    if verbose:
+        for w in warns:
+            print(f"WARN  {w}")
+        for f in fails:
+            print(f"FAIL  {f}")
+        print(f"# bench-diff: {len(compared)} bench(es) compared "
+              f"({', '.join(compared) or 'none'}), "
+              f"{len(out['extra_fresh'])} new without baselines, "
+              f"{len(warns)} warning(s), {len(fails)} failure(s)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory of freshly produced BENCH_*.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE_DIR,
+                    help="directory of committed baseline BENCH_*.json")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="relative tolerance band (default 0.5 = 50%%)")
+    ap.add_argument("--strict-timing", action="store_true",
+                    help="promote us_per_call band violations to FAIL")
+    args = ap.parse_args()
+    res = run_diff(fresh_dir=args.fresh, baseline_dir=args.baseline,
+                   tol=args.tol, strict_timing=args.strict_timing)
+    if res["failures"]:
+        sys.exit(1)
+    print("# bench-diff acceptance (fresh artifacts within baseline "
+          "tolerance band): PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -88,11 +88,23 @@ Three measurement modes (docs/benchmarks.md walks through them):
     recompiles on every incarnation, and p99 within the latency
     budget x a CI tolerance. Writes BENCH_fleet.json with `--json`.
 
+  * lattice (`--only lattice`): the adaptive-lattice gate
+    (`check_lattice`) — one engine serves a skewed two-phase
+    multi-surface stream while a LatticeLane learns bucket corners
+    from the shape histogram and re-warms them in detected troughs.
+    Asserts >= 2 detector-gated mid-stream swaps with ZERO
+    dispatch-path compiles, measured padding waste (padded/real sweep
+    FLOPs) cut >= 1.5x vs a power-of-two engine on identical chunks,
+    per-epoch results bitwise-equal to a cold engine built on that
+    epoch's lattice, and a poisoned proposal rolling back to
+    last-good without pausing the stream. Writes BENCH_lattice.json
+    with `--json`.
+
 Usage:
 
   python -m benchmarks.latency_serve \\
       [--quick] [--frontier] [--json OUT] \\
-      [--only direct|engine|frontier|deadline|refresh|drift|quant]
+      [--only direct|engine|frontier|deadline|refresh|drift|quant|lattice]
 
 `--json OUT` additionally writes a machine-readable
 BENCH_latency_serve.json (medians, geometry, backend — see
@@ -133,10 +145,13 @@ from repro.serving import (
     FaultPlan,
     FleetRouter,
     HealthConfig,
+    Lattice,
+    LatticeLane,
     RefreshLane,
     Scenario,
     ServingEngine,
     Shed,
+    TroughDetector,
     make_drift_stream,
     make_stream,
     poisson_arrivals,
@@ -1228,6 +1243,271 @@ def records_fleet(res):
                  "compiles_post_warmup": res["compiles_post_warmup"]})]
 
 
+# Skewed multi-surface mixes for the lattice gate: nominal candidate
+# counts sit just past a power-of-two boundary (540 -> 1024,
+# 300 -> 512, 140 -> 256) with jitter tight enough that the WHOLE
+# jitter range stays in that ceiling's bucket, so the static lattice
+# pads 2-3x while the learned corners hug the traffic. Phase 1 shifts
+# the heavy surface (a feed redesign doubling its candidate pool past
+# the NEXT boundary, 1100 -> 2048) so the second swap has something
+# genuinely new to learn.
+LATTICE_MIX_P0 = (
+    Scenario("feed_a", m1=540, m2=10, K=3, weight=4.0, m1_jitter=0.05,
+             surface="feed"),
+    Scenario("strip_a", m1=300, m2=8, K=5, weight=2.0, m1_jitter=0.1,
+             surface="strip"),
+    Scenario("notif_a", m1=140, m2=6, K=3, weight=1.0, m1_jitter=0.05,
+             surface="notif"),
+)
+LATTICE_MIX_P1 = (
+    Scenario("feed_b", m1=1100, m2=12, K=3, weight=4.0, m1_jitter=0.05,
+             surface="feed"),
+    Scenario("strip_a", m1=300, m2=8, K=5, weight=2.0, m1_jitter=0.1,
+             surface="strip"),
+)
+
+
+def _lattice_engine(*, max_batch=8, pipeline_depth=1, lattice=None):
+    """Deterministic lattice-gate engine (same trick as the refresh
+    gate: max_wait_ms=1e9 kills the deadline flush, so batch
+    composition is a pure function of the stream and two engines
+    serving the same chunks are bitwise comparable)."""
+    return ServingEngine(max_batch=max_batch, max_wait_ms=1e9,
+                         pipeline_depth=pipeline_depth, lattice=lattice)
+
+
+def run_lattice(*, chunk=64, max_batch=8, seed=29, pipeline_depth=1,
+                verbose=True):
+    """Adaptive-lattice health probe.
+
+    Serves the skewed two-phase mix in chunks on one engine with a
+    LatticeLane attached: chunk c0 builds the shape histogram on the
+    boot power-of-two lattice, a detector-gated re-warm flips to
+    learned corners (swap 1), c1 is measured adaptive; c2 switches to
+    the phase-1 mix (new shapes fall back to warmed power-of-two
+    buckets — out-of-lattice traffic degrades, never compiles), a
+    second re-warm learns the shifted mix (swap 2), c3 is measured
+    adaptive again. A separate power-of-two engine serves IDENTICAL
+    c1+c3 chunks as the padding-waste baseline. Then a poisoned
+    proposal (an m2 > m1 corner) exercises the rollback path, and a
+    final chunk proves the served stream never paused.
+
+    Checks, per the refined no-recompile contract: zero compiles on
+    the dispatch path across both swaps (jit caches frozen at the
+    warmed executables; cache growth only inside shadow-warm windows),
+    one executable call per flushed batch, every chunk's results
+    bitwise-equal to a COLD engine constructed directly on that
+    chunk's lattice epoch, and adaptive padding waste (padded/real
+    sweep FLOPs) at least 1.5x lower than the power-of-two baseline's
+    on the measured chunks.
+    """
+    s0, s1, s2, s3, s4 = seed, seed + 1, seed + 2, seed + 3, seed + 4
+    c0 = make_stream(LATTICE_MIX_P0, n_requests=chunk, seed=s0)
+    c1 = make_stream(LATTICE_MIX_P0, n_requests=chunk, seed=s1)
+    c2 = make_stream(LATTICE_MIX_P1, n_requests=chunk, seed=s2)
+    c3 = make_stream(LATTICE_MIX_P1, n_requests=chunk, seed=s3)
+    c4 = make_stream(LATTICE_MIX_P1, n_requests=max_batch, seed=s4)
+    for i, r in enumerate(c1 + c2 + c3 + c4):
+        r.rid = 10_000 + i            # distinct rids across chunks
+    full = c0 + c1 + c2 + c3 + c4
+
+    eng = _lattice_engine(max_batch=max_batch,
+                          pipeline_depth=pipeline_depth)
+    lane = LatticeLane(
+        eng, max_executables=8, min_samples=32,
+        detector=TroughDetector(rate_threshold_qps=50.0,
+                                lag_threshold_ms=5.0, patience_s=0.25))
+    # warm on the FULL stream: every power-of-two bucket either phase
+    # reaches is compiled up front, so post-swap out-of-lattice
+    # fallbacks are warm too — the zero-dispatch-compile guarantee
+    # covers the WHOLE run, swaps and phase shift included.
+    eng.warmup(full)
+
+    chunks = []                        # (lattice_epoch, lattice, reqs, got)
+    stamps_ok = True
+
+    def serve_chunk(reqs):
+        nonlocal stamps_ok
+        got = eng.serve_stream(reqs, warmup=False)
+        epoch = eng.lattice_epoch()
+        stamps_ok &= all(r.lattice_epoch == epoch for r in got)
+        chunks.append((epoch, eng.lattice(), reqs, got))
+        return got
+
+    def trough_rewarm():
+        """Detector-gated re-warm, as the background lane would run it:
+        quiet for longer than the patience window -> trough -> propose
+        + shadow-warm + flip."""
+        now = eng.clock()
+        early = lane.maybe_rewarm(now + 0.1)       # patience not yet met
+        later = lane.maybe_rewarm(now + 1.0)       # quiet >= patience
+        return early, later
+
+    def flops():
+        return (eng.metrics.real_flops, eng.metrics.padded_flops)
+
+    serve_chunk(c0)
+    no_trough, swap1 = trough_rewarm()
+    f0 = flops()
+    serve_chunk(c1)                    # measured adaptive (epoch 1)
+    f1 = flops()
+    serve_chunk(c2)                    # phase shift: pow2 fallbacks
+    _, swap2 = trough_rewarm()
+    f2 = flops()
+    serve_chunk(c3)                    # measured adaptive (epoch 2)
+    f3 = flops()
+
+    # rollback: a poisoned proposal (m2 > m1 is not a well-posed
+    # ranking corner) must fail validation BEFORE anything flips
+    epoch_before = eng.lattice_epoch()
+    lane.propose = lambda: Lattice(corners=((64, 128, 4),))
+    rollback_rep = lane.rewarm()
+    del lane.propose
+    rollback_ok = (not rollback_rep["swapped"]
+                   and eng.lattice_epoch() == epoch_before
+                   and eng.metrics.lattice_rollbacks >= 1)
+    got4 = serve_chunk(c4)             # stream uninterrupted after it
+    rollback_ok = rollback_ok and len(got4) == len(c4)
+
+    m = eng.metrics
+    sizes = eng.jit_cache_sizes()
+
+    # measured padding waste on the adaptive chunks ONLY (c1 under
+    # epoch 1, c3 under epoch 2 — c2 deliberately excluded: it is the
+    # phase-shift chunk serving out-of-lattice shapes on the pow2
+    # fallback) vs a power-of-two engine serving the SAME chunks
+    adaptive_waste = (
+        ((f1[1] - f0[1]) + (f3[1] - f2[1]))
+        / ((f1[0] - f0[0]) + (f3[0] - f2[0])))
+    base = _lattice_engine(max_batch=max_batch,
+                           pipeline_depth=pipeline_depth)
+    base.warmup(full)
+    bf0 = (base.metrics.real_flops, base.metrics.padded_flops)
+    base.serve_stream(c1, warmup=False)
+    base.serve_stream(c3, warmup=False)
+    bf1 = (base.metrics.real_flops, base.metrics.padded_flops)
+    pow2_waste = (bf1[1] - bf0[1]) / (bf1[0] - bf0[0])
+    base_cpw = base.metrics.compiles_post_warmup
+    base.close()
+
+    # per-epoch parity: each chunk vs a COLD engine built directly on
+    # that chunk's lattice (the boot pow2 lattice for epoch 0)
+    parity_ok = True
+    for _, lattice, creqs, got in chunks:
+        cold = _lattice_engine(max_batch=max_batch,
+                               pipeline_depth=pipeline_depth,
+                               lattice=lattice)
+        ref = {r.rid: r for r in cold.serve_stream(creqs)}
+        parity_ok &= all(_bitwise_same(r, ref[r.rid]) for r in got)
+        cold.close()
+
+    out = {
+        "n_requests": len(full),
+        "chunk": chunk,
+        "swaps": m.lattice_swaps,
+        "final_epoch": eng.lattice_epoch(),
+        "corners": [list(map(list, c[1].corners or ()))
+                    for c in chunks if c[1].adaptive][-1:],
+        "detector_gated": bool(no_trough["reason"] == "no-trough"
+                               and swap1["swapped"] and swap2["swapped"]),
+        "compiles_post_warmup": m.compiles_post_warmup,
+        "base_compiles_post_warmup": base_cpw,
+        "shadow_compiles": m.shadow_compiles,
+        "shadow_warm_ms_p50": m._pct(m.shadow_warm_ms)["p50"],
+        "executable_calls": m.executable_calls,
+        "batches": m.batches,
+        "jit_cache_sizes": dict(sizes),
+        "lattice_rollbacks": m.lattice_rollbacks,
+        "rollback_ok": bool(rollback_ok),
+        "parity_ok": bool(parity_ok),
+        "stamps_ok": bool(stamps_ok),
+        "padding_waste_pow2": round(pow2_waste, 4),
+        "padding_waste_adaptive": round(adaptive_waste, 4),
+        "waste_improvement": round(pow2_waste / adaptive_waste, 4),
+        "epoch_of_chunk": [c[0] for c in chunks],
+    }
+    eng.close()
+    if verbose:
+        print(f"lattice: swaps {out['swaps']}  epoch {out['final_epoch']}  "
+              f"waste pow2 {out['padding_waste_pow2']} vs adaptive "
+              f"{out['padding_waste_adaptive']} "
+              f"({out['waste_improvement']}x)  "
+              f"compiles_post_warmup {out['compiles_post_warmup']}  "
+              f"shadow {out['shadow_compiles']}  "
+              f"parity {out['parity_ok']}  rollback {out['rollback_ok']}",
+              flush=True)
+    save_json("latency_lattice", out)
+    return out
+
+
+def check_lattice(*, quick=False, verbose=True):
+    """Adaptive-lattice health gate (kernel_bench-style: AssertionError
+    on regression): the traffic-learned lattice must cut measured
+    padding waste >= 1.5x vs power-of-two on the skewed mix, across
+    >= 2 detector-gated mid-stream swaps with ZERO dispatch-path
+    compiles (cache growth only inside shadow-warm windows), one
+    dispatch per batch, per-epoch serving bitwise-equal to a cold
+    engine on that epoch's lattice, and a poisoned proposal rolling
+    back with the served stream uninterrupted."""
+    kw = dict(chunk=48) if quick else {}
+    res = run_lattice(verbose=verbose, **kw)
+    assert res["swaps"] >= 2, (
+        f"lattice gate: only {res['swaps']} lattice swaps — the two-phase "
+        f"mix should force a re-warm per phase")
+    assert res["detector_gated"], (
+        "lattice gate: the trough detector did not gate the re-warms "
+        "(no-trough refusal then patience-window swap)")
+    assert res["waste_improvement"] >= 1.5, (
+        f"lattice gate: adaptive lattice only cut padding waste "
+        f"{res['waste_improvement']}x (pow2 {res['padding_waste_pow2']} "
+        f"vs adaptive {res['padding_waste_adaptive']}) — need >= 1.5x")
+    assert res["compiles_post_warmup"] == 0, (
+        f"lattice gate: {res['compiles_post_warmup']} dispatch-path "
+        f"compiles — the refined contract allows cache growth only in "
+        f"shadow-warm windows")
+    assert res["shadow_compiles"] >= 1, (
+        "lattice gate: no shadow compiles recorded — the swaps served "
+        "stale executables?")
+    assert all(v == 1 for v in res["jit_cache_sizes"].values()), (
+        f"lattice gate: jit cache grew past the warmed executable: "
+        f"{res['jit_cache_sizes']}")
+    assert res["executable_calls"] == res["batches"], (
+        f"lattice gate: {res['executable_calls']} executable calls for "
+        f"{res['batches']} batches — a swap added a dispatch")
+    assert res["parity_ok"], (
+        "lattice gate: post-swap serving diverged bitwise from a cold "
+        "engine warmed directly on that epoch's lattice")
+    assert res["stamps_ok"], (
+        "lattice gate: a served row's lattice_epoch stamp disagreed "
+        "with the lattice generation live at its dispatch")
+    assert res["rollback_ok"], (
+        "lattice gate: poisoned proposal did not roll back to last-good "
+        "with the stream uninterrupted")
+    print("# lattice acceptance (>= 1.5x waste cut, >= 2 detector-gated "
+          "swaps, 0 dispatch-path compiles, hot == cold bitwise per "
+          "epoch, poisoned proposal rolls back): PASS")
+    return res
+
+
+def records_lattice(res):
+    return [Record(
+        name=f"serve_lattice/rewarm/n={res['n_requests']}"
+             f"/chunk={res['chunk']}",
+        us_per_call=res["shadow_warm_ms_p50"] * 1e3,
+        derived={"swaps": res["swaps"],
+                 "final_epoch": res["final_epoch"],
+                 "waste_pow2": res["padding_waste_pow2"],
+                 "waste_adaptive": res["padding_waste_adaptive"],
+                 "waste_improvement": res["waste_improvement"],
+                 "compiles_post_warmup": res["compiles_post_warmup"],
+                 "shadow_compiles": res["shadow_compiles"],
+                 "executable_calls": res["executable_calls"],
+                 "batches": res["batches"],
+                 "parity_ok": res["parity_ok"],
+                 "rollback_ok": res["rollback_ok"],
+                 "detector_gated": res["detector_gated"]})]
+
+
 def records(rows):
     return [Record(
         name=f"serve/m1={r['m1']}/K={r['K']}/m2={r['m2']}/B={r['batch']}",
@@ -1276,7 +1556,7 @@ def main():
     ap.add_argument("--only", default="all",
                     choices=["all", "direct", "engine", "frontier",
                              "deadline", "refresh", "drift", "quant",
-                             "fleet"])
+                             "fleet", "lattice"])
     ap.add_argument("--frontier", action="store_true",
                     help="also sweep p99 vs offered load (paced open-loop "
                          "Poisson arrivals below/around saturation)")
@@ -1355,6 +1635,17 @@ def main():
             print(rec.csv())
         if args.json:
             write_bench_json(args.json, "fleet", recs,
+                             meta={"quick": args.quick})
+        return
+
+    if args.only == "lattice":
+        # the adaptive-lattice gate writes its own BENCH_lattice.json
+        res = check_lattice(quick=args.quick)
+        recs = records_lattice(res)
+        for rec in recs:
+            print(rec.csv())
+        if args.json:
+            write_bench_json(args.json, "lattice", recs,
                              meta={"quick": args.quick})
         return
 

@@ -5,20 +5,27 @@ bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio (LM cells), and a
 one-line lever on the dominant term. Emits markdown to
 experiments/roofline.md and CSV records for benchmarks.run.
 
-When `experiments/dryrun` artifacts are absent (the 512-device dry-run
-is too heavy for the 2-core CI container — see ROADMAP), the report
-does not fail or silently truncate: it emits a clearly-labeled partial
-table naming each mesh with missing artifacts and the command that
-generates them (documented in docs/benchmarks.md).
+The default run reads the CHECKED-IN `experiments/dryrun` artifacts
+and emits the full table. `--refresh-dryrun` regenerates the artifacts
+first (`python -m repro.launch.dryrun`, both meshes — minutes of XLA
+lowering, meant for a machine with headroom) and then reports. When
+artifacts are absent for a mesh the report does not fail or silently
+truncate: it emits a clearly-labeled partial table naming that mesh
+and the command that fills it (documented in docs/benchmarks.md).
+
+    python -m benchmarks.roofline_report [--refresh-dryrun] [--json OUT]
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import subprocess
+import sys
 
-from benchmarks.common import Record
+from benchmarks.common import Record, write_bench_json
 from repro.launch.roofline import PEAK_FLOPS, terms_from_artifact
 
 DRYRUN_DIR = "experiments/dryrun"
@@ -159,7 +166,26 @@ def missing_section(mesh: str) -> str:
     ])
 
 
+def refresh_dryrun() -> None:
+    """Regenerate the dry-run artifacts in a subprocess (same
+    interpreter, PYTHONPATH inherited). Raises on a failed run — a
+    half-refreshed artifact tree is worse than a stale one."""
+    subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                    "--force"], check=True)
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh-dryrun", action="store_true",
+                    help="regenerate experiments/dryrun artifacts first "
+                         "(python -m repro.launch.dryrun --force; "
+                         "minutes of XLA lowering)")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write BENCH_roofline.json to OUT (a directory,"
+                         " or an explicit *.json path)")
+    args = ap.parse_args()
+    if args.refresh_dryrun:
+        refresh_dryrun()
     md = []
     all_records = []
     missing = []
@@ -181,6 +207,9 @@ def main():
               f"{', '.join(missing)} under {DRYRUN_DIR}/ — "
               f"run `python -m repro.launch.dryrun` to fill them "
               f"(see docs/benchmarks.md)")
+    if args.json:
+        write_bench_json(args.json, "roofline", all_records,
+                         meta={"missing_meshes": missing})
     print(f"# wrote {OUT_MD}")
 
 

@@ -19,8 +19,18 @@ from repro.serving.buckets import (
     geometry_key,
     k_tier,
     load_autotune_table,
+    resolve_autotune,
     save_autotune_table,
     unpad_result,
+)
+from repro.serving.lattice import (
+    DEFAULT_HISTOGRAM_PATH,
+    Lattice,
+    LatticeLane,
+    ShapeHistogram,
+    TroughDetector,
+    optimize_lattice,
+    padding_waste,
 )
 from repro.serving.admission import (
     SHED_RUNG,
@@ -78,7 +88,10 @@ from repro.serving.traffic import (
 __all__ = [
     "Bucket", "K_TIERS", "MIN_M1", "MIN_M2", "NEG_FILL",
     "alloc_staging", "assemble_batch", "bucket_for", "ceil_pow2",
-    "fill_staging", "k_tier", "unpad_result",
+    "fill_staging", "k_tier", "resolve_autotune", "unpad_result",
+    "DEFAULT_HISTOGRAM_PATH", "Lattice", "LatticeLane",
+    "ShapeHistogram", "TroughDetector", "optimize_lattice",
+    "padding_waste",
     "SHED_RUNG", "AdmissionController", "AdmissionDecision",
     "DEFAULT_BUDGET_S", "LAM_TAG", "RankRequest", "RankResult",
     "ServingEngine", "Shed",

@@ -104,10 +104,73 @@ DEFAULT_AUTOTUNE_PATH = "experiments/bench/autotune_table.json"
 AUTOTUNE_KEYS = ("tile_b", "tile_m", "tile_n", "quant")
 
 
-def geometry_key(bucket: Bucket) -> str:
+def geometry_key(bucket: Bucket, *, d_cov: int | None = None) -> str:
     """The autotune-table key for a bucket: its padded kernel geometry,
-    without the tag (two tags sharing a geometry share tiles)."""
-    return f"m1={bucket.m1}/m2={bucket.m2}/K={bucket.K}/B={bucket.batch}"
+    without the tag (two tags sharing a geometry share tiles). The key
+    is a pure function of the ACTUAL (m1, m2, K, B[, d_cov]) numbers —
+    never of the bucket's position in any lattice — so tuned tiles
+    survive an adaptive-lattice swap: a corner that moves from slot 3
+    to slot 1 still resolves to the same entry."""
+    key = f"m1={bucket.m1}/m2={bucket.m2}/K={bucket.K}/B={bucket.batch}"
+    if d_cov is not None:
+        key += f"/d={int(d_cov)}"
+    return key
+
+
+def resolve_autotune(table: dict, bucket: Bucket, *,
+                     d_cov: int | None = None) -> dict:
+    """Resolve `bucket`'s tuned knobs from an autotune table, surviving
+    lattice swaps. Lookup chain:
+
+      1. exact geometry key with the covariate width (".../d=16");
+      2. the legacy tag-free key without it (tables tuned before
+         covariate-aware keys existed);
+      3. the nearest tuned geometry that COVERS this bucket (same batch,
+         m1/m2/K all >=), tiles clamped to this bucket's extents — a
+         freshly-learned adaptive corner inherits its power-of-two
+         parent's tiles instead of silently falling back to defaults.
+
+    Returns {} when nothing applies (the engine serves on defaults).
+    """
+    if not table:
+        return {}
+    if d_cov is not None:
+        hit = table.get(geometry_key(bucket, d_cov=d_cov))
+        if hit:
+            return dict(hit)
+    hit = table.get(geometry_key(bucket))
+    if hit:
+        return dict(hit)
+    best, best_cost = None, None
+    for key, entry in table.items():
+        dims = {}
+        for part in key.split("/"):
+            name, _, val = part.partition("=")
+            if val:
+                try:
+                    dims[name] = int(val)
+                except ValueError:
+                    pass
+        if not {"m1", "m2", "K", "B"} <= dims.keys():
+            continue
+        if dims["B"] != bucket.batch:
+            continue
+        if (dims["m1"] < bucket.m1 or dims["m2"] < bucket.m2
+                or dims["K"] < bucket.K):
+            continue
+        cost = dims["m1"] * dims["m2"] + dims["K"] * dims["m1"]
+        if best_cost is None or cost < best_cost:
+            best, best_cost = entry, cost
+    if best is None:
+        return {}
+    out = dict(best)
+    # clamp inherited tiles so they still divide into this (smaller)
+    # corner's extents
+    if "tile_b" in out:
+        out["tile_b"] = min(int(out["tile_b"]), bucket.batch)
+    if "tile_m" in out:
+        out["tile_m"] = min(int(out["tile_m"]), bucket.m1)
+    return out
 
 
 def save_autotune_table(table: dict, path: str = DEFAULT_AUTOTUNE_PATH
@@ -146,26 +209,47 @@ def bucket_for(*, m1: int, m2: int, K: int, tag: str, batch: int) -> Bucket:
 # Batch assembly (host-side, numpy: cheap writes into reusable staging buffers)
 # ---------------------------------------------------------------------------
 
+PAGE = 4096  # host page size the pinned staging buffers align to
+
+
+def _aligned_empty(shape, dtype=np.float32, align: int = PAGE) -> np.ndarray:
+    """A page-aligned uninitialized host array. Page alignment is what
+    pinned-memory registration and zero-copy H2D DMA want; numpy's
+    default allocator gives 16/32-byte alignment, so we over-allocate a
+    byte buffer and slice to the first page boundary. The returned view
+    owns a reference to its base, is C-contiguous and writeable."""
+    dtype = np.dtype(dtype)
+    nbytes = int(np.prod(shape)) * dtype.itemsize
+    raw = np.empty(nbytes + align, np.uint8)
+    offset = (-raw.ctypes.data) % align
+    view = raw[offset:offset + nbytes].view(dtype).reshape(shape)
+    assert view.ctypes.data % align == 0
+    return view
+
+
 def alloc_staging(bucket: Bucket, *, d_cov: int | None = None) -> dict:
     """Allocate one set of host staging buffers for `bucket`.
 
     Returns dict with u (B, m1), a (B, K, m1), b (B, K), gamma (B, m2)
-    and either lam (B, K) (tag '_lam') or X (B, d_cov). These are plain
-    host arrays; `fill_staging` resets and packs them per micro-batch,
-    and `repro.serving.pipeline.StagingRing` recycles a fixed set of
-    them so steady state allocates nothing on the submission path.
+    and either lam (B, K) (tag '_lam') or X (B, d_cov). Buffers are
+    PAGE-aligned (see _aligned_empty) so an accelerator runtime can
+    pin/register them for async H2D; `fill_staging` resets and packs
+    them per micro-batch, and `repro.serving.pipeline.StagingRing`
+    recycles a fixed set of them so steady state allocates nothing on
+    the submission path (the ring asserts this — every buffer released
+    to it must be one it handed out).
     """
     B, m1p, m2p, Kp = bucket.batch, bucket.m1, bucket.m2, bucket.K
     staged = {
-        "u": np.empty((B, m1p), np.float32),
-        "a": np.empty((B, Kp, m1p), np.float32),
-        "b": np.empty((B, Kp), np.float32),
-        "gamma": np.empty((B, m2p), np.float32),
+        "u": _aligned_empty((B, m1p)),
+        "a": _aligned_empty((B, Kp, m1p)),
+        "b": _aligned_empty((B, Kp)),
+        "gamma": _aligned_empty((B, m2p)),
     }
     if d_cov is None:
-        staged["lam"] = np.empty((B, Kp), np.float32)
+        staged["lam"] = _aligned_empty((B, Kp))
     else:
-        staged["X"] = np.empty((B, d_cov), np.float32)
+        staged["X"] = _aligned_empty((B, d_cov))
     return staged
 
 
@@ -222,8 +306,19 @@ def unpad_result(out, i: int, request):
 
 def fill_stats(requests, bucket: Bucket) -> dict:
     """Padding overhead of a micro-batch: real vs padded (batch x m1)
-    cells — the price paid for the bounded-executable-count guarantee."""
-    real = sum(int(r.u.shape[0]) for r in requests)
+    cells AND real vs padded sweep FLOPs (rank m1*m2 + audit K*m1 per
+    request) — the price paid for the bounded-executable-count
+    guarantee, and the raw numbers behind the engine's
+    padding_waste_ratio."""
+    real = 0
+    real_flops = 0
+    for r in requests:
+        m1, K, m2 = int(r.u.shape[0]), int(r.a.shape[0]), int(r.m2)
+        real += m1
+        real_flops += m1 * m2 + K * m1
     padded = bucket.batch * bucket.m1
+    padded_flops = bucket.batch * (bucket.m1 * bucket.m2
+                                   + bucket.K * bucket.m1)
     return {"real_cells": real, "padded_cells": padded,
+            "real_flops": real_flops, "padded_flops": padded_flops,
             "fill": real / padded if padded else 0.0}

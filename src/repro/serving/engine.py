@@ -66,13 +66,13 @@ from repro.serving.buckets import (
     AUTOTUNE_KEYS,
     Bucket,
     assemble_batch,
-    bucket_for,
     fill_staging,
     fill_stats,
-    geometry_key,
     load_autotune_table,
+    resolve_autotune,
     unpad_result,
 )
+from repro.serving.lattice import Lattice, ShapeHistogram
 from repro.serving.metrics import EngineMetrics
 from repro.serving.pipeline import (
     ExecutionPipeline,
@@ -131,6 +131,7 @@ class RankResult:
     deadline_hit: bool | None = None  # materialized before the deadline?
     rung: int = 0                     # degradation rung served (0 = own)
     epoch: int = 0                    # predictor generation that served it
+    lattice_epoch: int = 0            # bucket-lattice generation at dispatch
 
 
 @dataclass
@@ -215,6 +216,7 @@ class ServingEngine:
         default_budget_s: float = DEFAULT_BUDGET_S,
         surface_budgets: dict[str, float] | None = None,
         autotune_table: dict | str | None = None,
+        lattice: Lattice | None = None,
         clock: Callable[[], float] = time.perf_counter,
     ):
         if executor not in ("xla", "fused", "dist"):
@@ -257,6 +259,19 @@ class ServingEngine:
             autotune_table = load_autotune_table(autotune_table)
         self.autotune_table: dict = dict(autotune_table or {})
         self.autotuned_buckets: int = 0
+        # bucket lattice (repro.serving.lattice): None/default = the
+        # static power-of-two lattice. The live lattice routes every
+        # bucket_of; swap_lattice flips it epoch-fenced under the flush
+        # lock, exactly like swap_predictor flips predictor state.
+        # shape_histogram accumulates the exact per-(tag, surface,
+        # m1, m2, K, d_cov) arrival counts at enqueue — what the
+        # LatticeLane's optimizer proposes new corners from.
+        lattice = Lattice() if lattice is None else lattice
+        lattice.validate()
+        self._lattice: Lattice = lattice
+        self._lattice_epoch: int = 0
+        self.shape_histogram = ShapeHistogram()
+        self._lattice_lane = None
         self.clock = clock
         self.metrics = EngineMetrics()
         self._predictors: dict[str, _PredictorEntry] = {}
@@ -474,7 +489,12 @@ class ServingEngine:
 
     # -- bucketing ----------------------------------------------------------
 
-    def bucket_of(self, req: RankRequest) -> Bucket:
+    def bucket_of(self, req: RankRequest,
+                  lattice: Lattice | None = None) -> Bucket:
+        """Route a request to its bucket on the LIVE lattice (or an
+        explicit one — what shadow warm uses to pre-route against a
+        proposal before it flips)."""
+        lattice = self._lattice if lattice is None else lattice
         tag = LAM_TAG if req.lam is not None else req.tag
         K = req.a.shape[0]
         if tag != LAM_TAG:
@@ -490,14 +510,16 @@ class ServingEngine:
             # the bucket tier must hold every predicted entry; extra
             # predicted entries beyond the request's K hit zero a-rows.
             K = K_pred
-        return bucket_for(m1=req.u.shape[0], m2=req.m2, K=K, tag=tag,
-                          batch=self.max_batch)
+        return lattice.bucket_for(m1=req.u.shape[0], m2=req.m2, K=K,
+                                  tag=tag, batch=self.max_batch)
 
-    def _rung_buckets(self, req: RankRequest,
-                      home: Bucket) -> list[tuple[int, Bucket]]:
+    def _rung_buckets(self, req: RankRequest, home: Bucket,
+                      lattice: Lattice | None = None
+                      ) -> list[tuple[int, Bucket]]:
         """The request's degradation ladder as (rung, bucket) pairs,
         rung 0 (its own bucket) first. Raw-lam requests have no ladder
         — the rank itself is already the cheapest program."""
+        lattice = self._lattice if lattice is None else lattice
         rungs = [(0, home)]
         if req.X is None or home.tag == LAM_TAG:
             return rungs
@@ -506,10 +528,148 @@ class ServingEngine:
             entry = self._predictors[fb]
             if entry.K < K_req:      # cannot price this request's system
                 continue
-            rungs.append((i, bucket_for(
+            rungs.append((i, lattice.bucket_for(
                 m1=req.u.shape[0], m2=req.m2, K=entry.K, tag=fb,
                 batch=self.max_batch)))
         return rungs
+
+    # -- adaptive lattice: telemetry, shadow warm, epoch-fenced swap --------
+
+    def attach_lattice_lane(self, lane) -> None:
+        """Attach a LatticeLane: the engine feeds its trough detector
+        arrival times at enqueue and lag samples through
+        observe_submission_lag — the same admission signal."""
+        self._lattice_lane = lane
+
+    def lattice(self) -> Lattice:
+        """The live bucket lattice (what bucket_of routes on)."""
+        return self._lattice
+
+    def lattice_epoch(self) -> int:
+        """The live lattice generation (0 = the boot lattice)."""
+        return self._lattice_epoch
+
+    def _lattice_buckets(self, lattice: Lattice,
+                         sample=None) -> set[Bucket]:
+        """Every bucket the OBSERVED traffic (the shape histogram, plus
+        an optional sample of RankRequests/Buckets) reaches on
+        `lattice`, ladder rungs included — the set a shadow warm must
+        compile so the flipped lattice never forces a dispatch-path
+        compile on traffic shaped like what we've seen."""
+        buckets: set[Bucket] = set()
+        for tag, _, m1, m2, K, _, _ in self.shape_histogram.shapes():
+            if tag != LAM_TAG and tag not in self._predictors:
+                continue                      # tag retired since observed
+            K_route = K
+            if tag != LAM_TAG:
+                K_pred = self._predictors[tag].K
+                if K > K_pred:
+                    continue                  # bucket_of would refuse it
+                K_route = K_pred
+            buckets.add(lattice.bucket_for(m1=m1, m2=m2, K=K_route,
+                                           tag=tag, batch=self.max_batch))
+            # ladder rungs, mirroring _rung_buckets against the
+            # request's REAL constraint count
+            if tag != LAM_TAG:
+                for fb in self._ladders.get(tag, ()):
+                    entry = self._predictors[fb]
+                    if entry.K < K:
+                        continue
+                    buckets.add(lattice.bucket_for(
+                        m1=m1, m2=m2, K=entry.K, tag=fb,
+                        batch=self.max_batch))
+        for r in sample or ():
+            if isinstance(r, Bucket):
+                buckets.add(r)
+                continue
+            home = self.bucket_of(r, lattice)
+            for _, bk in self._rung_buckets(r, home, lattice):
+                buckets.add(bk)
+        return buckets
+
+    def shadow_warm_lattice(self, new_lattice: Lattice,
+                            sample=None) -> dict:
+        """Compile + warm `new_lattice`'s executables OFF the dispatch
+        path: every bucket the observed traffic would reach on the new
+        lattice that is not already warmed gets built and executed on a
+        phantom batch here — on the calling thread (the LatticeLane's
+        background thread in production), never on a flush. Warmed
+        executables are installed into the live cache under the swap
+        lock; until swap_lattice flips, routing still uses the old
+        lattice, so this is pure cache growth (counted as
+        metrics.shadow_compiles — the refined no-recompile contract
+        allows cache growth ONLY here and in warmup()).
+
+        Raises on any compile/validation failure — nothing was flipped,
+        so the engine keeps serving the last-good lattice untouched.
+        """
+        new_lattice.validate()
+        t0 = self.clock()
+        compiled = []
+        buckets = self._lattice_buckets(new_lattice, sample)
+        for bucket in sorted(buckets):
+            if bucket in self._warmed:
+                continue
+            fn = self._build_executor(bucket)
+            staged = assemble_batch([], bucket, d_cov=self._dcov(bucket))
+            jax.block_until_ready(self._call(fn, bucket, staged).perm)
+            if self.admission is not None:
+                t0b = self.clock()
+                jax.block_until_ready(self._call(fn, bucket, staged).perm)
+                self.admission.observe_service(
+                    bucket.name, (self.clock() - t0b) * 1e3)
+            with self._swap_lock:
+                self._exec[bucket] = fn
+                self._warmed.add(bucket)
+            self.metrics.on_shadow_compile()
+            compiled.append(bucket.name)
+        return {"buckets": sorted(b.name for b in buckets),
+                "compiled": compiled,
+                "warm_ms": (self.clock() - t0) * 1e3}
+
+    def swap_lattice(self, new_lattice: Lattice, *,
+                     epoch: int | None = None,
+                     warm_ms: float = 0.0) -> int:
+        """Epoch-fenced flip of the live lattice, exactly like
+        swap_predictor's phase 2: validate that every bucket the
+        observed traffic reaches on `new_lattice` is already warmed
+        (shadow_warm_lattice's job — an unwarmed corner would compile
+        ON the dispatch path, the one thing the contract forbids), then
+        swap (lattice, epoch) under the same lock every flush stamps
+        its batch under. A batch is bucketed-and-dispatched entirely
+        within one lattice generation; old-lattice buckets stay warmed
+        in the cache, so queued/in-flight work routed before the flip
+        drains with zero recompiles. Epochs are monotone; `epoch` pins
+        the generation number for checkpoint-restore paths."""
+        new_lattice.validate()
+        missing = [b.name for b in sorted(self._lattice_buckets(new_lattice))
+                   if b not in self._warmed]
+        if missing:
+            raise ValueError(
+                f"swap_lattice: observed traffic reaches unwarmed buckets "
+                f"{missing} — run shadow_warm_lattice first (a cold corner "
+                f"would compile on the dispatch path)")
+        with self._swap_lock:
+            old_epoch = self._lattice_epoch
+            new_epoch = old_epoch + 1 if epoch is None else int(epoch)
+            if new_epoch <= old_epoch:
+                raise ValueError(
+                    f"swap_lattice: pinned epoch {new_epoch} <= live epoch "
+                    f"{old_epoch} — epochs are monotone")
+            self._lattice = new_lattice
+            self._lattice_epoch = new_epoch
+        self.metrics.on_lattice_swap(new_epoch, warm_ms=warm_ms)
+        return new_epoch
+
+    def rewarm_lattice(self, new_lattice: Lattice, sample=None) -> dict:
+        """shadow_warm_lattice + swap_lattice in one move — what the
+        LatticeLane calls in a trough. Any failure propagates BEFORE
+        the flip, so the caller's rollback is a no-op: the last-good
+        lattice and its warmed executables never stopped serving."""
+        report = self.shadow_warm_lattice(new_lattice, sample)
+        report["epoch"] = self.swap_lattice(new_lattice,
+                                            warm_ms=report["warm_ms"])
+        return report
 
     # -- executables --------------------------------------------------------
 
@@ -594,7 +754,12 @@ class ServingEngine:
         # advisory — the packed predictor's own static quant field (and
         # its pack slab) route the quantized sweep, so the table entry
         # documents the winning mode rather than forcing a repack here.
-        tune = self.autotune_table.get(geometry_key(bucket), {})
+        # resolved against ACTUAL geometry (never lattice position), so
+        # tuned tiles survive a lattice swap; an adaptive corner with no
+        # exact entry inherits its nearest covering tuned geometry's
+        # tiles, clamped to fit (buckets.resolve_autotune).
+        tune = resolve_autotune(self.autotune_table, bucket,
+                                d_cov=self._dcov(bucket))
         tiles = {kk: int(v) for kk, v in tune.items()
                  if kk in AUTOTUNE_KEYS and kk != "quant"}
         if tune:
@@ -701,6 +866,8 @@ class ServingEngine:
         without a controller."""
         if self.admission is not None:
             self.admission.observe_lag(lag_ms)
+        if self._lattice_lane is not None:
+            self._lattice_lane.observe_lag(lag_ms)
 
     def _deadline_of(self, req: RankRequest, now: float) -> float:
         if req.deadline is not None:
@@ -716,6 +883,16 @@ class ServingEngine:
         now = self.clock() if now is None else now
         bucket = self.bucket_of(req)
         self.metrics.on_submit(bucket, known=bucket in self._warmed)
+        # shape telemetry: the request's REAL geometry (pre-padding,
+        # pre-K-widening) — what the lattice optimizer learns corners
+        # from. A dict update per request; no device reads.
+        self.shape_histogram.observe(
+            tag=bucket.tag, m1=req.u.shape[0], m2=req.m2,
+            K=req.a.shape[0],
+            d_cov=None if req.X is None else req.X.shape[-1],
+            surface=req.surface)
+        if self._lattice_lane is not None:
+            self._lattice_lane.observe_arrival(now)
         fut = RankFuture(req.rid, bucket.name)
         deadline = self._deadline_of(req, now)
         rung = 0
@@ -853,6 +1030,11 @@ class ServingEngine:
         # of superseded device buffers past their last in-flight use.
         state, epoch = ((None, 0) if bucket.tag == LAM_TAG
                         else self._current_gen(bucket.tag))
+        # lattice fence, same discipline: the epoch is read under the
+        # swap lock, so a concurrent swap_lattice lands before or after
+        # this batch, never inside it.
+        with self._swap_lock:
+            lattice_epoch = self._lattice_epoch
         t_launch = self.clock()
         try:
             out = self._call(fn, bucket, staged, state)  # async: no block
@@ -882,7 +1064,8 @@ class ServingEngine:
             ring=ring, t_launch=t_launch, trigger=trigger,
             materialize=self._materialize_batch, build=self._build_result,
             assembly_ms=(t_launch - t0) * 1e3,
-            dispatch_ms=(t1 - t_launch) * 1e3, epoch=epoch)
+            dispatch_ms=(t1 - t_launch) * 1e3, epoch=epoch,
+            lattice_epoch=lattice_epoch)
         if self._pipeline is not None:
             self._pipeline.submit(pending)      # may block: backpressure
         else:
@@ -970,7 +1153,7 @@ class ServingEngine:
             latency_ms=(pending.t_done - t_enq) * 1e3,
             wait_ms=(pending.t_launch - t_enq) * 1e3,
             deadline_hit=deadline_hit, rung=entry.rung,
-            epoch=pending.epoch)
+            epoch=pending.epoch, lattice_epoch=pending.lattice_epoch)
 
     # -- convenience driver -------------------------------------------------
 

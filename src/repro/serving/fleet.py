@@ -64,6 +64,7 @@ import numpy as np
 
 from repro.serving.buckets import Bucket
 from repro.serving.engine import RankRequest, Shed
+from repro.serving.lattice import Lattice
 from repro.serving.faults import FaultInjector, FaultPlan, ReplicaCrash
 from repro.serving.health import (
     DEAD,
@@ -233,6 +234,13 @@ class FleetRouter:
         self._done: list = []
         self._last_tick = now
         self._warmed = False
+        # fleet-wide adaptive lattice (rewarm_lattice): replicas always
+        # flip TOGETHER to a common pinned epoch — routing keys off
+        # replica 0's bucket_of, so a replica on a different lattice
+        # would receive requests for corners it never warmed. Restarted
+        # replicas are restored to this lattice after their re-warm.
+        self._lattice: Lattice | None = None
+        self._lattice_epoch = 0
 
     # -- construction / ring -------------------------------------------------
 
@@ -296,6 +304,59 @@ class FleetRouter:
             if rep.injector is not None:
                 rep.injector.wrap_engine(rep.engine)
         self._warmed = True
+        return reports
+
+    def rewarm_lattice(self, new_lattice: Lattice) -> dict:
+        """Fleet-wide adaptive-lattice re-warm: shadow-warm EVERY
+        replica off its dispatch path, then flip them all to a common
+        pinned epoch.
+
+        Bucket→replica assignment is stable across lattice epochs by
+        construction — ring ownership is a pure function of the bucket
+        NAME (`_owners`), so corners shared between the old and new
+        lattice keep their owners and only genuinely new corners get
+        (deterministically) placed. Each replica shadow-warms only its
+        subset: the new corners whose primary-or-backup it is, plus
+        whatever its OWN traffic histogram says it needs (failover
+        routes by the same ring, so `replication` backups suffice
+        exactly as they do for warmup()).
+
+        All shadow warms complete before ANY replica flips; a compile
+        failure on one replica aborts the whole epoch with zero flips —
+        the fleet keeps serving the last-good lattice everywhere.
+        Returns {replica: shadow-warm report} plus the common epoch.
+        """
+        new_lattice.validate()
+        # union of every replica's observed reachable set on the new
+        # lattice, assigned to primaries + backups by stable name hash
+        union: set[Bucket] = set()
+        for rep in self.replicas:
+            union |= rep.engine._lattice_buckets(new_lattice)
+        subsets: dict[str, set[Bucket]] = {r.name: set()
+                                           for r in self.replicas}
+        for bucket in union:
+            owners = self._owners(bucket.name)
+            for i in owners[:1 + self.replication]:
+                subsets[self.replicas[i].name].add(bucket)
+        reports: dict[str, Any] = {}
+        for rep in self.replicas:
+            # phase 1 everywhere first: nothing flips until every
+            # replica holds a warmed copy of its new subset
+            reports[rep.name] = rep.engine.shadow_warm_lattice(
+                new_lattice, sample=sorted(subsets[rep.name]))
+        epoch = max(r.engine.lattice_epoch() for r in self.replicas) + 1
+        for rep in self.replicas:
+            rep.engine.swap_lattice(
+                new_lattice, epoch=epoch,
+                warm_ms=reports[rep.name]["warm_ms"])
+            rep.warm_buckets.update(subsets[rep.name])
+        self._lattice = new_lattice
+        self._lattice_epoch = epoch
+        # per-epoch ring hygiene: drop memoized owner chains so the
+        # epoch starts from a clean (re-derivable, identical for shared
+        # corners) cache — new corners fault in lazily.
+        self._owner_cache.clear()
+        reports["epoch"] = epoch
         return reports
 
     def arm_faults(self) -> None:
@@ -376,6 +437,14 @@ class FleetRouter:
                         restored[tag] = epoch
             if rep.warm_buckets:
                 engine.warmup(sorted(rep.warm_buckets))
+            if self._lattice is not None:
+                # resume the fleet's lattice generation: the subset was
+                # just re-warmed above (warm_buckets accumulated the
+                # adaptive corners at rewarm_lattice time), so the flip
+                # is compile-free; pinning the epoch keeps result
+                # labels consistent with the pre-crash incarnation.
+                engine.swap_lattice(self._lattice,
+                                    epoch=self._lattice_epoch)
             rep.engine, rep.lane = engine, lane
             rep.crashed = False
             if rep.injector is not None:

@@ -56,9 +56,14 @@ class EngineMetrics:
     capacity_flushes: int = 0
     deadline_flushes: int = 0
     drain_flushes: int = 0
-    # padding overhead
+    # padding overhead: cells are batch x m1 rows (host-transfer view),
+    # flops are the rank+audit sweep work (m1*m2 + K*m1 per request vs
+    # the bucket corner's) — padding_waste_ratio in summary() is the
+    # padded/real quotient of each.
     real_cells: int = 0
     padded_cells: int = 0
+    real_flops: int = 0
+    padded_flops: int = 0
     # pipeline stage timelines (per micro-batch, ms)
     assembly_ms: list = field(default_factory=list)   # host packing
     dispatch_ms: list = field(default_factory=list)   # jit call -> futures
@@ -94,6 +99,20 @@ class EngineMetrics:
     refresh_failures: int = 0
     states_retired: int = 0
     swaps_by_tag: dict = field(default_factory=lambda: defaultdict(int))
+    # adaptive-lattice lane accounting: lattice_swaps = lattice
+    # generations flipped live (engine.swap_lattice successes, == the
+    # live lattice epoch); lattice_rollbacks = re-warm attempts that
+    # failed (compile/validation error, crash in the lane) — serving
+    # stayed on the last-good lattice each time; shadow_compiles =
+    # executables built OFF the dispatch path by shadow_warm_lattice
+    # (cache growth is legal only here and in warmup — the refined
+    # no-recompile contract keeps compiles_post_warmup a pure
+    # dispatch-path counter); shadow_warm_ms = wall time of each
+    # shadow-warm window.
+    lattice_swaps: int = 0
+    lattice_rollbacks: int = 0
+    shadow_compiles: int = 0
+    shadow_warm_ms: list = field(default_factory=list)
     rung_stats: dict = field(default_factory=lambda: defaultdict(
         lambda: {"served": 0, "compliant": 0.0, "shortfall": 0.0}))
     # per-surface budget classes (RankRequest.surface): every deadline
@@ -150,6 +169,8 @@ class EngineMetrics:
             self.drain_flushes += 1
         self.real_cells += fill["real_cells"]
         self.padded_cells += fill["padded_cells"]
+        self.real_flops += fill.get("real_flops", 0)
+        self.padded_flops += fill.get("padded_flops", 0)
         if self.t_first_dispatch is None:
             self.t_first_dispatch = t_now
 
@@ -214,6 +235,28 @@ class EngineMetrics:
         with self._result_lock:
             self.states_retired += 1
 
+    def on_shadow_compile(self) -> None:
+        """Lattice lane: one executable was built OFF the dispatch path
+        inside a shadow-warm window (legal cache growth under the
+        refined contract — never counted in compiles_post_warmup)."""
+        with self._result_lock:
+            self.shadow_compiles += 1
+
+    def on_lattice_swap(self, epoch: int, *, warm_ms: float = 0.0) -> None:
+        """Lattice lane: a new bucket lattice was shadow-warmed and
+        flipped live (engine.swap_lattice succeeded)."""
+        with self._result_lock:
+            self.lattice_swaps += 1
+            if warm_ms:
+                self.shadow_warm_ms.append(float(warm_ms))
+
+    def on_lattice_rollback(self) -> None:
+        """Lattice lane: a re-warm attempt failed (compile/validation
+        error or a crash in the lane) — serving kept the last-good
+        lattice and its warmed executables."""
+        with self._result_lock:
+            self.lattice_rollbacks += 1
+
     # -- reporting ----------------------------------------------------------
 
     @staticmethod
@@ -265,6 +308,7 @@ class EngineMetrics:
                         "drain": self.drain_flushes},
             "fill_rate": round(self.real_cells / self.padded_cells, 3)
                          if self.padded_cells else float("nan"),
+            "padding": self.padding_summary(),
             "latency_ms": lat,
             "queue_wait_ms": self._pct(self.queue_wait_ms),
             "pipeline": {
@@ -280,6 +324,31 @@ class EngineMetrics:
                           if self.results else float("nan"),
             "deadline": self.deadline_summary(),
             "refresh": self.refresh_summary(),
+            "lattice": self.lattice_summary(),
+        }
+
+    def padding_summary(self) -> dict:
+        """Padded/real work ratios (>= 1.0; lower is better): rows is
+        the batch x m1 host-transfer view, flops the rank+audit sweep
+        view — the number the adaptive lattice exists to shrink."""
+        return {
+            "waste_rows": round(self.padded_cells / self.real_cells, 4)
+                          if self.real_cells else float("nan"),
+            "waste_flops": round(self.padded_flops / self.real_flops, 4)
+                           if self.real_flops else float("nan"),
+            "real_flops": self.real_flops,
+            "padded_flops": self.padded_flops,
+        }
+
+    def lattice_summary(self) -> dict:
+        """Adaptive-lattice lane view: generations flipped (== live
+        epoch), failed re-warms (serving stayed last-good), off-path
+        shadow compiles, and shadow-warm window wall times."""
+        return {
+            "lattice_swaps": self.lattice_swaps,
+            "lattice_rollbacks": self.lattice_rollbacks,
+            "shadow_compiles": self.shadow_compiles,
+            "shadow_warm_ms": self._pct(self.shadow_warm_ms),
         }
 
     def refresh_summary(self) -> dict:

@@ -159,19 +159,51 @@ class StagingRing:
     memory to `depth` buffer sets per bucket regardless of offered
     load. `release` (called by the completion side once a batch's
     outputs have materialized) returns the set for reuse.
+
+    The buffers are PINNED: allocated exactly once here, page-aligned
+    (buckets._aligned_empty), and recycled for the ring's whole
+    lifetime. `release` asserts the returned set is one the ring handed
+    out — a foreign dict means some path re-allocated staging on the
+    submission side, which is precisely the per-batch host allocation
+    the ring exists to eliminate. `reuses` counts acquires beyond the
+    first per buffer, so tests can assert steady state allocates
+    nothing.
     """
 
     def __init__(self, bucket: Bucket, *, d_cov: int | None, depth: int):
         self.bucket = bucket
         self.depth = int(depth)
         self._free: queue.Queue = queue.Queue()
+        self._owned: frozenset[int] = frozenset()
+        self._handed_out = 0
+        owned = []
         for _ in range(self.depth):
-            self._free.put(alloc_staging(bucket, d_cov=d_cov))
+            staged = alloc_staging(bucket, d_cov=d_cov)
+            owned.append(id(staged))
+            self._free.put(staged)
+        self._owned = frozenset(owned)
+
+    @property
+    def allocated(self) -> int:
+        """Buffer sets this ring ever allocated — depth, by construction,
+        for the ring's whole lifetime."""
+        return len(self._owned)
+
+    @property
+    def reuses(self) -> int:
+        """Acquires beyond the first use of each buffer set."""
+        return max(0, self._handed_out - self.depth)
 
     def acquire(self) -> dict:
+        self._handed_out += 1
         return self._free.get()
 
     def release(self, staged: dict) -> None:
+        if id(staged) not in self._owned:
+            raise AssertionError(
+                f"StagingRing[{self.bucket.name}]: released a buffer set "
+                f"it never allocated — a submission path allocated fresh "
+                f"staging instead of reusing the pinned ring")
         self._free.put(staged)
 
 
@@ -207,6 +239,10 @@ class PendingBatch:
     # epoch fence): every row of the batch shares it — a swap lands
     # between batches, never inside one. 0 for raw-lam buckets.
     epoch: int = 0
+    # lattice generation at dispatch (same fence discipline): a lattice
+    # swap lands between batches, so every row of a batch was bucketed
+    # and served under one lattice. 0 = the boot power-of-two lattice.
+    lattice_epoch: int = 0
 
     def finish(self) -> None:
         """Materialize outputs and mark every future done. Called by

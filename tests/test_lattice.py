@@ -1,0 +1,554 @@
+"""Adaptive bucket lattice: histogram telemetry, optimizer invariants,
+trough-gated shadow re-warm, and the epoch-fenced swap.
+
+The deterministic layer proves the swap discipline end to end: at
+pipeline depths 0-2 a hot engine that learns corners mid-stream serves
+every epoch bitwise-equal to a COLD engine constructed directly on that
+epoch's lattice, a poisoned proposal rolls back without pausing the
+stream, and no compile ever lands on the dispatch path. The property
+layer (hypothesis, import-guarded like test_refresh.py) proves the
+optimizer invariants — coverage, budget, monotone-vs-pow2 — with
+deterministic twins so the invariants hold even where hypothesis is not
+installed.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    LAM_TAG,
+    FleetRouter,
+    Lattice,
+    LatticeLane,
+    Scenario,
+    ServingEngine,
+    ShapeHistogram,
+    StagingRing,
+    TroughDetector,
+    bucket_for,
+    geometry_key,
+    make_stream,
+    optimize_lattice,
+    padding_waste,
+    resolve_autotune,
+)
+from repro.serving.buckets import PAGE
+from repro.serving.lattice import expected_padded_work, padded_work
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # pragma: no cover
+    given = None
+
+
+# ---------------------------------------------------------------------------
+# Lattice routing
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_default_matches_bucket_for():
+    lat = Lattice()
+    assert not lat.adaptive
+    for m1, m2, K in ((100, 10, 3), (500, 50, 5), (1100, 12, 17)):
+        got = lat.bucket_for(m1=m1, m2=m2, K=K, tag=LAM_TAG, batch=8)
+        assert got == bucket_for(m1=m1, m2=m2, K=K, tag=LAM_TAG, batch=8)
+
+
+def test_validate_rejects_malformed_corners():
+    with pytest.raises(ValueError, match="zero corners"):
+        Lattice(corners=()).validate()
+    with pytest.raises(ValueError, match="need"):
+        Lattice(corners=((128, 8),)).validate()
+    with pytest.raises(ValueError, match="non-positive"):
+        Lattice(corners=((128, 0, 4),)).validate()
+    with pytest.raises(ValueError, match="m2 > m1"):
+        Lattice(corners=((64, 128, 4),)).validate()
+    Lattice(corners=((128, 8, 4),)).validate()   # well-posed: no raise
+
+
+def test_covering_corner_picks_cheapest_cover():
+    lat = Lattice(corners=((1024, 16, 4), (192, 8, 4), (320, 8, 8)))
+    assert lat.covering_corner(150, 8, 3) == (192, 8, 4)
+    assert lat.covering_corner(300, 8, 7) == (320, 8, 8)
+    assert lat.covering_corner(300, 12, 3) == (1024, 16, 4)
+    assert lat.covering_corner(2000, 8, 3) is None
+
+
+def test_out_of_lattice_falls_back_to_pow2():
+    lat = Lattice(corners=((192, 8, 4),))
+    inside = lat.bucket_for(m1=150, m2=8, K=3, tag=LAM_TAG, batch=4)
+    assert (inside.m1, inside.m2, inside.K) == (192, 8, 4)
+    outside = lat.bucket_for(m1=700, m2=8, K=3, tag=LAM_TAG, batch=4)
+    assert outside == bucket_for(m1=700, m2=8, K=3, tag=LAM_TAG, batch=4)
+    with pytest.raises(ValueError, match="m2 <= m1"):
+        lat.bucket_for(m1=8, m2=9, K=3, tag=LAM_TAG, batch=4)
+
+
+# ---------------------------------------------------------------------------
+# Shape histogram
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_counts_and_geometry_aggregation():
+    h = ShapeHistogram()
+    h.observe(tag=LAM_TAG, m1=150, m2=8, K=3, surface="feed")
+    h.observe(tag=LAM_TAG, m1=150, m2=8, K=3, surface="feed")
+    h.observe(tag="arch", m1=150, m2=8, K=3, d_cov=16, surface="strip")
+    h.observe(tag=LAM_TAG, m1=300, m2=8, K=5)
+    assert h.total == 4 and len(h) == 3
+    w = h.geometry_weights()
+    # same (m1, m2, K) aggregates across tags and surfaces
+    assert set(w) == {(150, 8, 3), (300, 8, 5)}
+    assert w[(150, 8, 3)] > w[(300, 8, 5)]
+
+
+def test_histogram_is_deterministic_and_decays():
+    def feed(h):
+        for i in range(50):
+            h.observe(tag=LAM_TAG, m1=100 + i % 3, m2=8, K=3)
+    a, b = ShapeHistogram(decay=0.9), ShapeHistogram(decay=0.9)
+    feed(a)
+    feed(b)
+    assert a.snapshot() == b.snapshot()          # replayable bit-for-bit
+    # an old cell's weight decays relative to a fresh equal-count cell
+    h = ShapeHistogram(decay=0.5)
+    h.observe(tag=LAM_TAG, m1=100, m2=8, K=3)
+    for _ in range(10):
+        h.observe(tag=LAM_TAG, m1=200, m2=8, K=3)
+    w = h.geometry_weights()
+    assert w[(100, 8, 3)] < 0.01 < w[(200, 8, 3)]
+
+
+def test_histogram_save_load_roundtrip(tmp_path):
+    h = ShapeHistogram(decay=0.99)
+    h.observe(tag=LAM_TAG, m1=150, m2=8, K=3, surface="feed")
+    h.observe(tag="arch", m1=300, m2=16, K=5, d_cov=12)
+    path = str(tmp_path / "hist.json")
+    h.save(path)
+    h2 = ShapeHistogram.load(path)
+    assert h2.snapshot() == h.snapshot()
+    assert h2.shapes() == h.shapes()
+    assert ShapeHistogram.load(str(tmp_path / "missing.json")).total == 0
+
+
+# ---------------------------------------------------------------------------
+# Optimizer invariants (deterministic twins of the property layer)
+# ---------------------------------------------------------------------------
+
+
+def _random_weights(rng, n):
+    return {(int(rng.integers(8, 2000)),
+             int(rng.integers(1, 65)),
+             int(rng.integers(1, 33))): float(rng.uniform(0.1, 10.0))
+            for _ in range(n)}
+
+
+def _well_posed(weights):
+    return {(m1, min(m2, m1), K): w for (m1, m2, K), w in weights.items()}
+
+
+def _check_invariants(weights, lat, max_executables):
+    lat.validate()
+    assert len(lat.corners) <= max_executables
+    for m1, m2, K in weights:                    # coverage: no fallback
+        assert lat.covering_corner(m1, m2, K) is not None, (m1, m2, K)
+    pow2_groups = {bucket_for(m1=m1, m2=m2, K=K, tag="_", batch=1)
+                   for m1, m2, K in weights}
+    if len(pow2_groups) <= max_executables:      # monotone vs pow2
+        assert (expected_padded_work(lat, weights)
+                <= expected_padded_work(Lattice(), weights) + 1e-6)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("budget", (1, 4, 16))
+def test_optimizer_invariants(seed, budget):
+    rng = np.random.default_rng(seed)
+    weights = _well_posed(_random_weights(rng, 12))
+    lat = optimize_lattice(weights, max_executables=budget)
+    _check_invariants(weights, lat, budget)
+
+
+def test_optimizer_empty_histogram_is_pow2():
+    assert optimize_lattice(ShapeHistogram()).corners is None
+    assert optimize_lattice({}).corners is None
+    with pytest.raises(ValueError, match=">= 1"):
+        optimize_lattice({(128, 8, 4): 1.0}, max_executables=0)
+
+
+def test_optimizer_batch_cost_suppresses_fragmentation():
+    # one tight traffic cluster: with batch-aware costing a split must
+    # buy more routing work than the half-batch of padding it adds, so
+    # the cluster stays ONE corner; the batch-blind objective may
+    # shatter it across the budget
+    weights = {(600 + 8 * i, 10, 3): 1.0 for i in range(8)}
+    lat_b8 = optimize_lattice(weights, max_executables=8, batch=8)
+    lat_b1 = optimize_lattice(weights, max_executables=8, batch=1)
+    assert len(lat_b8.corners) <= len(lat_b1.corners)
+    assert len(lat_b8.corners) == 1
+    _check_invariants(weights, lat_b8, 8)
+
+
+def test_padding_waste_accounting():
+    weights = {(540, 10, 3): 4.0, (300, 8, 5): 2.0}
+    pow2_waste = padding_waste(Lattice(), weights)
+    adaptive = optimize_lattice(weights, max_executables=4)
+    assert padding_waste(adaptive, weights) < pow2_waste
+    assert padding_waste(adaptive, weights) >= 1.0
+    assert np.isnan(padding_waste(Lattice(), {}))
+    # the analytic model itself: rank + audit cells, db bytes amortized
+    assert padded_work(100, 10, 3) == 100 * 10 + 3 * 100
+    assert (padded_work(100, 10, 3, d_cov=16, n_db=1000, batch=8)
+            == 100 * 10 + 3 * 100 + 1000 * 16 * 4 / 8)
+
+
+# ---------------------------------------------------------------------------
+# Trough detector
+# ---------------------------------------------------------------------------
+
+
+def test_trough_requires_quiet_for_patience_window():
+    det = TroughDetector(rate_threshold_qps=10.0, patience_s=1.0)
+    t = 0.0
+    for _ in range(50):                          # busy: 1000 qps
+        det.observe_arrival(t)
+        t += 0.001
+    assert not det.in_trough(t)
+    assert not det.in_trough(t + 0.5)            # quiet, patience not met
+    assert det.in_trough(t + 2.0)                # quiet past patience
+    t += 2.1                                     # traffic resumes: the
+    for _ in range(30):                          # rate EWMA recovers and
+        det.observe_arrival(t)                   # the trough closes
+        t += 0.001
+    assert not det.in_trough(t)
+
+
+def test_backlogged_engine_is_never_in_trough():
+    det = TroughDetector(rate_threshold_qps=10.0, lag_threshold_ms=5.0,
+                         patience_s=0.1)
+    det.observe_arrival(0.0)
+    for _ in range(20):
+        det.observe_lag(50.0)                    # admission lag: backed up
+    assert not det.in_trough(10.0)               # arrivals quiet, lag is not
+
+
+# ---------------------------------------------------------------------------
+# Epoch-fenced swap: hot engine == cold engine, per epoch, bitwise
+# ---------------------------------------------------------------------------
+
+MIX = (
+    Scenario("feed", m1=150, m2=8, K=3, weight=2.0, m1_jitter=0.1,
+             surface="feed"),
+    Scenario("strip", m1=300, m2=8, K=5, weight=1.0, m1_jitter=0.1,
+             surface="strip"),
+)
+
+
+def _engine(depth, lattice=None):
+    # max_wait_ms=1e9 kills the deadline flush: batch composition is a
+    # pure function of the stream, so hot and cold runs are comparable
+    return ServingEngine(max_batch=4, max_wait_ms=1e9,
+                         pipeline_depth=depth, lattice=lattice)
+
+
+def _bitwise(a, b):
+    return (np.array_equal(a.perm, b.perm)
+            and a.utility == b.utility
+            and np.array_equal(a.exposure, b.exposure)
+            and a.compliant == b.compliant)
+
+
+@pytest.mark.parametrize("depth", (0, 1, 2))
+def test_swap_serves_bitwise_equal_to_cold_engine(depth):
+    c0 = make_stream(MIX, n_requests=16, seed=1)
+    c1 = make_stream(MIX, n_requests=16, seed=2)
+    for i, r in enumerate(c1):
+        r.rid = 1000 + i
+    eng = _engine(depth)
+    lane = LatticeLane(eng, max_executables=4)
+    eng.warmup(c0 + c1)
+    got0 = eng.serve_stream(c0, warmup=False)
+    rep = lane.rewarm()
+    assert rep["swapped"] and rep["epoch"] == 1
+    assert eng.lattice().adaptive
+    got1 = eng.serve_stream(c1, warmup=False)
+    assert {r.lattice_epoch for r in got0} == {0}
+    assert {r.lattice_epoch for r in got1} == {1}
+    assert eng.metrics.compiles_post_warmup == 0
+    assert eng.metrics.shadow_compiles >= 1
+    assert all(v == 1 for v in eng.jit_cache_sizes().values())
+    # each epoch bitwise vs a cold engine built on that epoch's lattice
+    for lattice, reqs, got in ((Lattice(), c0, got0),
+                               (eng.lattice(), c1, got1)):
+        cold = _engine(depth, lattice=lattice)
+        ref = {r.rid: r for r in cold.serve_stream(reqs)}
+        assert all(_bitwise(r, ref[r.rid]) for r in got)
+        cold.close()
+    eng.close()
+
+
+def test_swap_without_shadow_warm_refuses():
+    reqs = make_stream(MIX, n_requests=8, seed=3)
+    eng = _engine(0)
+    eng.serve_stream(reqs)
+    with pytest.raises(ValueError, match="shadow_warm_lattice first"):
+        eng.swap_lattice(Lattice(corners=((192, 8, 4), (320, 8, 8))))
+    assert eng.lattice_epoch() == 0              # nothing flipped
+    eng.close()
+
+
+def test_swap_epochs_are_monotone():
+    reqs = make_stream(MIX, n_requests=8, seed=4)
+    eng = _engine(0)
+    lane = LatticeLane(eng)
+    eng.serve_stream(reqs)
+    assert lane.rewarm()["swapped"]
+    with pytest.raises(ValueError, match="monotone"):
+        eng.swap_lattice(eng.lattice(), epoch=0)
+    eng.close()
+
+
+def test_failed_proposal_rolls_back_and_stream_continues():
+    c0 = make_stream(MIX, n_requests=12, seed=5)
+    c1 = make_stream(MIX, n_requests=12, seed=6)
+    for i, r in enumerate(c1):
+        r.rid = 2000 + i
+    eng = _engine(1)
+    lane = LatticeLane(eng)
+    eng.warmup(c0 + c1)
+    eng.serve_stream(c0, warmup=False)
+    lane.propose = lambda: Lattice(corners=((64, 128, 4),))  # m2 > m1
+    rep = lane.rewarm()
+    del lane.propose
+    assert not rep["swapped"] and "rewarm-failed" in rep["reason"]
+    assert eng.lattice_epoch() == 0              # last-good kept
+    assert eng.metrics.lattice_rollbacks == 1
+    got = eng.serve_stream(c1, warmup=False)     # stream uninterrupted
+    assert len(got) == len(c1)
+    assert eng.metrics.compiles_post_warmup == 0
+    eng.close()
+
+
+def test_lane_skips_without_new_samples_or_changes():
+    eng = _engine(0)
+    lane = LatticeLane(eng, min_samples=4)
+    assert lane.maybe_rewarm(0.0)["reason"] == "too-few-samples"
+    assert lane.rewarm()["reason"] == "no-change"  # empty hist -> pow2
+    eng.close()
+
+
+def test_lane_saves_histogram_beside_autotune_table(tmp_path):
+    path = str(tmp_path / "hist.json")
+    reqs = make_stream(MIX, n_requests=8, seed=7)
+    eng = _engine(0)
+    lane = LatticeLane(eng, histogram_path=path)
+    eng.serve_stream(reqs)
+    assert lane.rewarm()["swapped"]
+    assert os.path.exists(path)
+    assert ShapeHistogram.load(path).total == len(reqs)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Pinned staging ring
+# ---------------------------------------------------------------------------
+
+
+def test_staging_ring_pins_page_aligned_buffers():
+    bucket = bucket_for(m1=150, m2=8, K=3, tag=LAM_TAG, batch=4)
+    ring = StagingRing(bucket, d_cov=None, depth=2)
+    assert ring.allocated == 2
+    seen = []
+    for _ in range(6):                           # 3 full cycles
+        staged = ring.acquire()
+        for name in ("u", "a", "b", "gamma", "lam"):
+            assert staged[name].ctypes.data % PAGE == 0, name
+        seen.append(id(staged))
+        ring.release(staged)
+    assert ring.allocated == 2                   # nothing new allocated
+    assert ring.reuses == 4                      # 6 acquires - 2 firsts
+    assert set(seen) <= ring._owned
+    with pytest.raises(AssertionError, match="never allocated"):
+        ring.release({"u": np.zeros(1, np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# Autotune geometry keys survive lattice swaps
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_autotune_fallback_chain():
+    b = bucket_for(m1=150, m2=8, K=3, tag=LAM_TAG, batch=4)
+    exact = {geometry_key(b, d_cov=16): {"tile_b": 4, "tile_m": 128}}
+    assert resolve_autotune(exact, b, d_cov=16)["tile_m"] == 128
+    legacy = {geometry_key(b): {"tile_b": 4, "tile_m": 64}}
+    assert resolve_autotune(legacy, b, d_cov=16)["tile_m"] == 64
+    assert resolve_autotune({}, b) == {}
+
+
+def test_resolve_autotune_nearest_cover_clamps_tiles():
+    # tuned at the POW2 geometry; after a swap the adaptive corner is
+    # smaller, so the tuned tiles must clamp to the new extents
+    tuned = bucket_for(m1=150, m2=8, K=3, tag=LAM_TAG, batch=8)  # m1=256
+    table = {geometry_key(tuned): {"tile_b": 8, "tile_m": 256,
+                                   "tile_n": 512, "quant": "off"}}
+    small = type(tuned)(tag=LAM_TAG, m1=192, m2=8, K=4, batch=8)
+    got = resolve_autotune(table, small)
+    assert got["tile_m"] == 192                  # clamped to the corner
+    assert got["tile_n"] == 512 and got["quant"] == "off"
+    # a cover must match the batch exactly and dominate every extent
+    other_batch = type(tuned)(tag=LAM_TAG, m1=192, m2=8, K=4, batch=4)
+    assert resolve_autotune(table, other_batch) == {}
+    big = type(tuned)(tag=LAM_TAG, m1=512, m2=8, K=4, batch=8)
+    assert resolve_autotune(table, big) == {}
+
+
+def test_autotuned_tiles_survive_two_swaps():
+    # tuned tiles apply to predictor-tagged buckets; LAM_TAG requests
+    # carry λ inline and never resolve the table
+    from repro.core.predictors import KNNLambdaPredictor
+
+    d_cov = 16
+    rng = np.random.default_rng(8)
+    pred = KNNLambdaPredictor.fit(
+        rng.normal(size=(64, d_cov)).astype(np.float32),
+        np.abs(rng.normal(size=(64, 3))).astype(np.float32), k=5)
+    reqs = make_stream((Scenario("s", m1=150, m2=8, K=3, tag="arch",
+                                 d_cov=d_cov, m1_jitter=0.0),),
+                       n_requests=8, seed=8)
+    home = bucket_for(m1=150, m2=8, K=3, tag="arch", batch=4)
+    table = {geometry_key(home, d_cov=d_cov):
+             {"tile_b": 4, "tile_m": 128, "tile_n": 512, "quant": "off"}}
+    eng = ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=0,
+                        autotune_table=table)
+    eng.register_predictor("arch", pred, d_cov=d_cov)
+    eng.serve_stream(reqs)
+    tuned0 = eng.autotuned_buckets
+    assert tuned0 >= 1
+    # epoch 1: a smaller adaptive corner — nearest-cover keeps the
+    # tiles (clamped). epoch 2: back to the tuned geometry — the bucket
+    # is ALREADY warmed from epoch 0, so it is reused, not rebuilt.
+    eng.rewarm_lattice(Lattice(corners=((192, 8, 4),)))
+    eng.rewarm_lattice(Lattice(corners=((256, 8, 4),)))
+    assert eng.lattice_epoch() == 2
+    assert eng.autotuned_buckets == tuned0 + 1
+    got = eng.serve_stream(reqs, warmup=False)
+    assert len(got) == len(reqs)
+    assert eng.metrics.compiles_post_warmup == 0
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Metrics: padding-waste accounting and the lattice summary
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_padding_and_lattice_summaries():
+    reqs = make_stream(MIX, n_requests=12, seed=9)
+    eng = _engine(0)
+    lane = LatticeLane(eng)
+    eng.serve_stream(reqs)
+    s = eng.metrics.summary()
+    assert s["padding"]["real_flops"] > 0
+    assert s["padding"]["waste_flops"] >= 1.0
+    assert s["lattice"]["lattice_swaps"] == 0
+    assert lane.rewarm()["swapped"]
+    s = eng.metrics.summary()["lattice"]
+    assert s["lattice_swaps"] == 1 and s["lattice_rollbacks"] == 0
+    assert s["shadow_compiles"] >= 1
+    assert s["shadow_warm_ms"]["p50"] > 0
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Fleet: one lattice generation fleet-wide, stable ownership
+# ---------------------------------------------------------------------------
+
+
+def _fleet_factory(name):
+    return ServingEngine(max_batch=4, max_wait_ms=1e9, pipeline_depth=1)
+
+
+def test_fleet_rewarm_flips_all_replicas_to_common_epoch():
+    router = FleetRouter(_fleet_factory, 3,
+                         heartbeat_interval_s=float("inf"))
+    reqs = make_stream(MIX, n_requests=48, seed=10)
+    got = router.serve_stream(reqs)
+    assert len(got) == len(reqs)
+    # aggregate the fleet's observed geometry and learn one lattice
+    weights = {}
+    for rep in router.replicas:
+        for geom, w in rep.engine.shape_histogram.geometry_weights().items():
+            weights[geom] = weights.get(geom, 0.0) + w
+    new = optimize_lattice(weights, max_executables=4, batch=4)
+    assert new.adaptive
+    rep = router.rewarm_lattice(new)
+    epochs = {r.engine.lattice_epoch() for r in router.replicas}
+    assert epochs == {rep["epoch"]}              # ONE generation fleet-wide
+    c1 = make_stream(MIX, n_requests=24, seed=11)
+    for i, r in enumerate(c1):
+        r.rid = 3000 + i
+    got1 = router.serve_stream(c1, warmup=False)
+    assert len(got1) == len(c1)
+    for r in router.replicas:
+        assert r.engine.metrics.compiles_post_warmup == 0
+    router.close()
+
+
+def test_fleet_restart_restores_fleet_lattice():
+    router = FleetRouter(_fleet_factory, 3, auto_restart=False,
+                         heartbeat_interval_s=float("inf"))
+    reqs = make_stream(MIX, n_requests=48, seed=12)
+    router.serve_stream(reqs)
+    weights = {}
+    for rep in router.replicas:
+        for geom, w in rep.engine.shape_histogram.geometry_weights().items():
+            weights[geom] = weights.get(geom, 0.0) + w
+    new = optimize_lattice(weights, max_executables=4, batch=4)
+    epoch = router.rewarm_lattice(new)["epoch"]
+    rep = router.replicas[0]
+    rep.health.on_failure(0.0, fatal=True)       # crash -> DEAD
+    router.restart(rep.name)
+    eng = router.replicas[0].engine
+    assert eng.lattice_epoch() == epoch          # not a cold pow2 engine
+    assert eng.lattice().corners == new.corners
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# Property layer (hypothesis; skipped visibly when unavailable)
+# ---------------------------------------------------------------------------
+
+
+if given is not None:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+
+    shapes = st.tuples(st.integers(8, 2000), st.integers(1, 64),
+                       st.integers(1, 32))
+
+    @given(st.dictionaries(shapes, st.floats(0.1, 10.0),
+                           min_size=1, max_size=16),
+           st.integers(1, 16), st.sampled_from((1, 4, 8)))
+    def test_optimizer_invariants_property(weights, budget, batch):
+        """Coverage, budget, and monotone-vs-pow2 hold for ANY observed
+        traffic, any executable budget, and any micro-batch costing."""
+        weights = _well_posed(weights)
+        lat = optimize_lattice(weights, max_executables=budget,
+                               batch=batch)
+        _check_invariants(weights, lat, budget)
+
+    @given(st.dictionaries(shapes, st.floats(0.1, 10.0),
+                           min_size=1, max_size=8))
+    def test_adaptive_never_beats_real_work(weights):
+        """padding_waste is >= 1 on every lattice: padded work can
+        approach, never undercut, the real work."""
+        weights = _well_posed(weights)
+        lat = optimize_lattice(weights, max_executables=8)
+        assert padding_waste(lat, weights) >= 1.0 - 1e-9
+        assert padding_waste(Lattice(), weights) >= 1.0 - 1e-9
+else:                                            # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_optimizer_invariants_property():
+        ...
